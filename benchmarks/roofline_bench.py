@@ -1,0 +1,92 @@
+"""Aggregate the dry-run roofline records (results/dryrun/*.json) into
+the EXPERIMENTS.md §Roofline table and pick the three hillclimb cells.
+
+Selection rule (per assignment): worst roofline fraction, most
+collective-bound, and the cell most representative of the paper's
+technique (the multi-tenant serving shape — decode, since reuse-serving
+multiplexes tenants over shared decode backbones).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dry_dir: str = "results/dryrun") -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        recs.append(json.load(open(p)))
+    return recs
+
+
+def table(recs: List[Dict], mesh: str = "16x16") -> str:
+    rows = [
+        "| arch | shape | status | compute s | memory s | collective s | dominant | "
+        "useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if not r["status"].startswith("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['status']} | | | | | | |")
+            continue
+        rf = r["roofline"]
+        rows.append(
+            "| {arch} | {shape} | ok | {c:.3g} | {m:.3g} | {x:.3g} | {dom} | "
+            "{u:.2f} | {f:.3f} |".format(
+                arch=r["arch"], shape=r["shape"],
+                c=rf["compute_term_s"], m=rf["memory_term_s"],
+                x=rf["collective_term_s"], dom=rf["dominant"],
+                u=rf["useful_flops_ratio"], f=rf["roofline_fraction"],
+            )
+        )
+    return "\n".join(rows)
+
+
+def pick_hillclimb(recs: List[Dict]) -> Dict[str, Dict]:
+    ok = [r for r in recs if r["status"].startswith("ok") and r["mesh"] == "16x16"]
+    worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(ok, key=lambda r: r["roofline"]["collective_term_s"]
+               / max(max(r["roofline"]["compute_term_s"], r["roofline"]["memory_term_s"]), 1e-12))
+    # paper-representative: largest decode cell (multi-tenant serving shape)
+    decodes = [r for r in ok if r["shape"].startswith("decode")]
+    rep = max(decodes, key=lambda r: r["roofline"]["model_flops"])
+    return {"worst_fraction": worst, "most_collective_bound": coll, "paper_representative": rep}
+
+
+def main(out_dir: str = "results/benchmarks") -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    recs = load()
+    if not recs:
+        print("no dry-run records — run: python -m repro.launch.dryrun --all")
+        return {}
+    ok = sum(1 for r in recs if r["status"].startswith("ok"))
+    skip = sum(1 for r in recs if r["status"].startswith("SKIP"))
+    print(f"dry-run records: {len(recs)} total, {ok} ok, {skip} documented skips")
+    md = ["## Roofline — single-pod 16×16 (256 chips)\n", table(recs, "16x16"),
+          "\n\n## Roofline — multi-pod 2×16×16 (512 chips)\n", table(recs, "2x16x16")]
+    picks = pick_hillclimb(recs)
+    md.append("\n\n## Hillclimb cells\n")
+    for k, r in picks.items():
+        md.append(
+            f"- **{k}**: {r['arch']} × {r['shape']} "
+            f"(dominant={r['roofline']['dominant']}, "
+            f"fraction={r['roofline']['roofline_fraction']:.4f})"
+        )
+        print(f"hillclimb {k}: {r['arch']} × {r['shape']}")
+    with open(os.path.join(out_dir, "roofline_table.md"), "w") as f:
+        f.write("\n".join(md) + "\n")
+    summary = {
+        "records": len(recs), "ok": ok, "skips": skip,
+        "picks": {k: f"{v['arch']}×{v['shape']}" for k, v in picks.items()},
+    }
+    with open(os.path.join(out_dir, "roofline_summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

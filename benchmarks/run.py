@@ -1,0 +1,42 @@
+"""Run every benchmark; one section per paper table/figure + the
+beyond-paper benches. Results land in results/benchmarks/*.json and the
+console summary below is the EXPERIMENTS.md source of truth.
+
+  fig2/3/4   workload_traces   paper Figs. 2, 3, 4 (6 traces, Default vs Reuse)
+  latency    merge_latency     faithful vs signature submit latency
+  defrag     defrag_benefit    paper future-work, implemented (real data plane)
+  serving    serving_reuse     paper technique over multi-tenant LM pipelines
+  roofline   roofline_bench    40-cell dry-run aggregation + hillclimb picks
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> int:
+    from benchmarks import (
+        defrag_benefit,
+        merge_latency,
+        roofline_bench,
+        serving_reuse,
+        workload_traces,
+    )
+
+    t0 = time.time()
+    print("=== fig 2/3/4: running tasks / cores / reuse histogram ===")
+    workload_traces.main()
+    print("\n=== merge latency (faithful vs signature) ===")
+    merge_latency.main()
+    print("\n=== defragmentation benefit (real data plane) ===")
+    defrag_benefit.main()
+    print("\n=== multi-tenant LM reuse-serving ===")
+    serving_reuse.main()
+    print("\n=== roofline aggregation (dry-run records) ===")
+    roofline_bench.main()
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,46 @@
+"""Multi-tenant LM serving with collaborative reuse — the paper's merge
+algorithms as a first-class serving feature.
+
+Six tenants serve adapters of the same base model over three request
+streams. With reuse, each shared backbone prefix runs ONCE per stream;
+tenants keep their own fine-tuned stages/adapters. Removal unmerges
+without touching the surviving tenants.
+
+    PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+from repro.serve import ReuseServing, TenantPipeline
+
+
+def main():
+    for strategy in ("none", "signature"):
+        rs = ReuseServing(strategy=strategy, base_batch=4)
+        for i in range(6):
+            rs.add_tenant(
+                TenantPipeline(
+                    tenant=f"tenant{i}",
+                    stream=("urban", "meter", "taxi")[i % 3],
+                    model="base-7b@v1",
+                    shared_stages=3,     # lower 3 stage groups from the base ckpt
+                    n_stages=4,          # top stage is tenant-fine-tuned
+                    d=64,
+                    layers_per_stage=4,
+                    adapter=f"adapter-{i}",
+                )
+            )
+        rs.run(5)
+        s = rs.stats()
+        label = "Default (no reuse)" if strategy == "none" else "Reuse    "
+        print(f"{label}: running_tasks={s['running_tasks']:3d} "
+              f"deployed_cost={s['deployed_cost']:.1f}")
+        if strategy == "signature":
+            print("\nper-tenant outputs (identical to the Default run):")
+            for t in rs.tenants:
+                print(" ", t, rs.tenant_output(t))
+            rs.remove_tenant("tenant3")
+            rs.run(2)
+            print(f"\nafter removing tenant3: running_tasks="
+                  f"{rs.stats()['running_tasks']}, others keep streaming")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+results/{benchmarks,dryrun,perf}/*.json. Narrative sections live in
+docs/experiments_narrative/*.md and are stitched in order."""
+import glob
+import json
+import os
+import sys
+
+
+def fmt_seconds(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.3g} µs"
+    if x < 1:
+        return f"{x*1e3:.3g} ms"
+    return f"{x:.3g} s"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = [
+        "| arch | shape | compile s | HBM/dev (args+temp) | compute | memory "
+        "| memory (kernel) | collective | dominant | useful | frac | frac (kernel) |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for p in sorted(glob.glob("results/dryrun/*.json")):
+        r = json.load(open(p))
+        if r["mesh"] != mesh:
+            continue
+        if not r["status"].startswith("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | {r['status']} | — | — | — |")
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]
+        hbm = (mem["argument_bytes"] + mem["temp_bytes"]) / 1e9
+        rows.append(
+            "| {a} | {s} | {c:.0f} | {h:.1f} GB | {ct} | {mt} | {mk} | {xt} | {dom} | "
+            "{u:.2f} | {f:.4f} | {fk:.4f} |".format(
+                a=r["arch"], s=r["shape"], c=r["compile_s"], h=hbm,
+                ct=fmt_seconds(rf["compute_term_s"]),
+                mt=fmt_seconds(rf["memory_term_s"]),
+                mk=fmt_seconds(rf.get("memory_term_kernel_s", 0)),
+                xt=fmt_seconds(rf["collective_term_s"]),
+                dom=rf["dominant"], u=rf["useful_flops_ratio"],
+                f=rf["roofline_fraction"],
+                fk=rf.get("roofline_fraction_kernel", 0),
+            )
+        )
+    return "\n".join(rows)
+
+
+def figs_table() -> str:
+    rows = [
+        "| trace | peak tasks (D→R) | peak task red. | peak cores red. | walk cores red. "
+        "| cum cores red. | +defrag | crossover steps | tasks shared >1 |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for p in sorted(glob.glob("results/benchmarks/fig2_3_4_*.json")):
+        name = os.path.basename(p)[len("fig2_3_4_"):-len(".json")]
+        s = json.load(open(p))["summary"]
+        rows.append(
+            "| {n} | {pd}→{pr} | {t:.0%} | {pc:.0%} | {w:.0%} | {c:.0%} | {d:.0%} | {x} | {sh:.0%} |".format(
+                n=name, pd=s["peak_default_tasks"], pr=s["peak_reuse_tasks"],
+                t=s["peak_task_reduction"], pc=s["peak_core_reduction"],
+                w=s["cum_core_reduction_walk"], c=s["cum_core_reduction"],
+                d=s["cum_core_reduction_defrag"], x=s["crossover_steps"],
+                sh=s["frac_tasks_shared"],
+            )
+        )
+    return "\n".join(rows)
+
+
+def perf_table() -> str:
+    rows = [
+        "| cell | variant | compute | memory | memory (kernel) | collective | dominant | frac | frac (kernel) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = [
+        ("deepseek-v2-236b × train_4k", [
+            ("GSPMD scatter dispatch (pre-EP baseline)", "results/perf/deepseek__train__moe_gspmd.json", 1),
+            ("EP shard_map, accum16 (new default)", "results/dryrun/deepseek_v2_236b__train_4k__16x16.json", 1),
+            ("EP shard_map + accum8", "results/perf/deepseek__train__moe_ep_accum8.json", 1),
+            ("EP shard_map + accum2", "results/perf/deepseek__train__moe_ep_accum2.json", 1),
+        ]),
+        ("nemotron-4-340b × decode_32k", [
+            ("baseline (scan cache, repeat-free attn)", "results/dryrun/nemotron_4_340b__decode_32k__16x16.json", 1),
+            ("carry-layout cache [REFUTED]", "results/perf/nemotron__decode__carry_cache.json", 1),
+            ("pipeline-parallel (×16 → per-token)", "results/perf/nemotron__decode__pp.json", 16),
+        ]),
+        ("mixtral-8x22b × long_500k", [
+            ("baseline (dense-capacity MoE)", "results/dryrun/mixtral_8x22b__long_500k__16x16.json", 1),
+            ("sparse top-k expert gather", "results/perf/mixtral__long__sparse.json", 1),
+            ("sparse + carry cache", "results/perf/mixtral__long__sparse_carry.json", 1),
+        ]),
+    ]
+    PEAK, CHIPS = 197e12, 256
+    for cell, variants in order:
+        for label, path, scale in variants:
+            if not os.path.exists(path):
+                continue
+            r = json.load(open(path))
+            if not r.get("status", "").startswith("ok"):
+                continue
+            rf = r["roofline"]
+            ct = rf["compute_term_s"] * scale
+            mt = rf["memory_term_s"] * scale
+            mk = rf.get("memory_term_kernel_s", 0) * scale
+            xt = rf["collective_term_s"] * scale
+            terms = {"compute": ct, "memory": mt, "collective": xt}
+            dom = max(terms, key=terms.get)
+            mf = rf["model_flops"]
+            frac = mf / (CHIPS * PEAK * max(terms.values()))
+            frac_k = mf / (CHIPS * PEAK * max(ct, mk, xt))
+            rows.append(
+                "| {c} | {l} | {ct} | {mt} | {mk} | {xt} | {dom} | {f:.5f} | {fk:.5f} |".format(
+                    c=cell, l=label,
+                    ct=fmt_seconds(ct), mt=fmt_seconds(mt),
+                    mk=fmt_seconds(mk), xt=fmt_seconds(xt),
+                    dom=dom, f=frac, fk=frac_k,
+                )
+            )
+        rows.append("| | | | | | | | | |")
+    return "\n".join(rows)
+
+
+def bench_sections() -> str:
+    out = []
+    p = "results/benchmarks/merge_latency.json"
+    if os.path.exists(p):
+        d = json.load(open(p))
+        out.append("### Merge latency (faithful vs signature)\n")
+        out.append("| running DAGs | faithful ms/submit | signature ms/submit | speedup |")
+        out.append("|---|---|---|---|")
+        for n, row in sorted(d.items(), key=lambda kv: int(kv[0])):
+            out.append(
+                f"| {n} | {row['faithful']['last10_mean_ms']} | "
+                f"{row['signature']['last10_mean_ms']} | ×{row['speedup_at_n']} |"
+            )
+        out.append("")
+    p = "results/benchmarks/defrag_benefit.json"
+    if os.path.exists(p):
+        d = json.load(open(p))
+        out.append("### Defragmentation (paper future work, implemented)\n")
+        out.append(
+            f"segments {d['before']['segments']}→{d['after']['segments']}, "
+            f"deployed tasks {d['before']['deployed_tasks']}→{d['after']['deployed_tasks']}, "
+            f"median step {d['before']['step_ms']}→{d['after']['step_ms']} ms "
+            f"(×{d['step_speedup']}); sink streams continue uninterrupted "
+            f"(state-preserving relaunch).\n"
+        )
+    p = "results/benchmarks/serving_reuse.json"
+    if os.path.exists(p):
+        d = json.load(open(p))
+        out.append("### Multi-tenant LM reuse-serving (beyond paper)\n")
+        out.append(
+            f"9 tenants: running tasks {d['none']['running_tasks']}→"
+            f"{d['signature']['running_tasks']} (−{d['task_reduction']:.0%}), "
+            f"deployed cost −{d['cost_reduction']:.0%}, measured step "
+            f"×{d['step_speedup']} faster ({d['none']['step_ms']}→"
+            f"{d['signature']['step_ms']} ms); tenant outputs bit-identical "
+            f"to the no-reuse deployment.\n"
+        )
+    return "\n".join(out)
+
+
+def main():
+    narrative = {}
+    for p in glob.glob("docs/experiments_narrative/*.md"):
+        narrative[os.path.basename(p)] = open(p).read()
+
+    doc = []
+    doc.append(narrative.get("00_header.md", "# EXPERIMENTS\n"))
+    doc.append("\n## §Reproduction — paper Figs. 2/3/4 (6 traces)\n")
+    doc.append(figs_table())
+    doc.append(narrative.get("10_repro_notes.md", ""))
+    doc.append("\n" + bench_sections())
+    doc.append("\n## §Dry-run + §Roofline — single-pod 16×16 (256 chips)\n")
+    doc.append(narrative.get("20_roofline_notes.md", ""))
+    doc.append(dryrun_table("16x16"))
+    doc.append("\n## §Dry-run — multi-pod 2×16×16 (512 chips)\n")
+    doc.append(dryrun_table("2x16x16"))
+    doc.append("\n## §Perf — hillclimb log\n")
+    doc.append(narrative.get("30_perf_narrative.md", ""))
+    doc.append(perf_table())
+    doc.append(narrative.get("40_perf_conclusions.md", ""))
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(doc) + "\n")
+    print("EXPERIMENTS.md written", len("\n".join(doc)), "chars")
+
+
+if __name__ == "__main__":
+    main()

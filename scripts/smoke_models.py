@@ -1,0 +1,51 @@
+"""Quick dev smoke: forward + prefill + decode on every reduced config."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import decode_step, forward, init_cache, init_params, prefill
+
+
+def run(arch: str) -> None:
+    cfg = configs.get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    memory = None
+    if cfg.family == "vlm":
+        memory = jax.random.normal(jax.random.PRNGKey(2), (B, cfg.num_image_tokens, cfg.d_model))
+    elif cfg.family == "audio":
+        memory = jax.random.normal(jax.random.PRNGKey(2), (B, cfg.encoder_seq, cfg.d_model))
+
+    logits = forward(params, cfg, tokens, memory=memory)
+    assert logits.shape == (B, S, cfg.padded_vocab), (arch, logits.shape)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN in forward"
+
+    mem_len = memory.shape[1] if memory is not None else 0
+    cache = init_cache(cfg, B, S + 4, memory_len=mem_len)
+    plogits, cache = prefill(params, cfg, tokens, cache, memory=memory)
+    assert plogits.shape == (B, cfg.padded_vocab)
+    assert not bool(jnp.isnan(plogits).any()), f"{arch}: NaN in prefill"
+    # prefill last-token logits must match teacher-forcing forward last step
+    np.testing.assert_allclose(
+        np.asarray(plogits), np.asarray(logits[:, -1]), rtol=2e-2, atol=2e-2
+    )
+
+    tok = jnp.argmax(plogits, -1)[:, None].astype(jnp.int32)
+    for _ in range(3):
+        dlogits, cache = decode_step(params, cfg, tok, cache)
+        assert dlogits.shape == (B, cfg.padded_vocab)
+        assert not bool(jnp.isnan(dlogits).any()), f"{arch}: NaN in decode"
+        tok = jnp.argmax(dlogits, -1)[:, None].astype(jnp.int32)
+    print(f"  OK {arch:24s} |logits| last={float(jnp.abs(dlogits).mean()):.4f}")
+
+
+if __name__ == "__main__":
+    archs = sys.argv[1:] or list(configs.ARCHS)
+    for a in archs:
+        run(a)
+    print("all good")

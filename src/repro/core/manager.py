@@ -1,0 +1,269 @@
+"""Reusable Dataflow Manager — paper §4.3, control plane.
+
+Maintains the submitted set 𝔻, the running set 𝔻̄, the decomposition map
+Δ : 𝔻̄ → P(𝔻) and inverse Φ : 𝔻 → 𝔻̄, the per-submission task maps
+(submitted id → running id), and a durable journal of operations for
+crash-recovery (replay reconstructs the state byte-identically — the
+fault-tolerance story for the control plane).
+
+``strategy`` picks the equivalence engine: ``"signature"`` (Merkle index,
+beyond-paper fast path, default), ``"faithful"`` (the paper's bijection
+check) or ``"none"`` (the Default baseline — no reuse, every submission
+runs independently; used for the paper's Default-vs-Reuse comparisons).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from . import invariants
+from .equivalence import ancestor_graph, is_dedup
+from .graph import Dataflow, DataflowError, Task
+from .merge import MergePlan, apply_merge, plan_merge
+from .signatures import SignatureIndex, compute_signatures, is_dedup_fast
+from .unmerge import UnmergePlan, apply_unmerge, plan_unmerge
+
+
+@dataclass
+class SubmissionReceipt:
+    """Returned to the user on submit — where their outputs land (§4.1)."""
+
+    name: str
+    running_dag: str
+    sink_map: Dict[str, str]  # submitted sink id → running task id
+    num_reused: int
+    num_created: int
+    plan: MergePlan
+
+
+@dataclass
+class RemovalReceipt:
+    name: str
+    terminated_tasks: Set[str]
+    surviving_dags: List[str]
+    plan: UnmergePlan
+
+
+class ReuseManager:
+    def __init__(
+        self,
+        strategy: str = "signature",
+        check_invariants: bool = False,
+        journal_path: Optional[str] = None,
+    ):
+        if strategy not in ("signature", "faithful", "none"):
+            raise ValueError(f"unknown strategy {strategy!r}")
+        self.strategy = strategy
+        self.check_invariants = check_invariants
+        self.journal_path = journal_path
+
+        self.submitted: Dict[str, Dataflow] = {}
+        self.running: Dict[str, Dataflow] = {}
+        self.task_maps: Dict[str, Dict[str, str]] = {}  # sub name → (sub id → run id)
+        self.phi: Dict[str, str] = {}  # Φ : submitted → running
+        self.delta: Dict[str, Set[str]] = {}  # Δ : running → submitted set
+        self.index = SignatureIndex()
+        self._task_counter = 0
+        self._dag_counter = 0
+        self.journal: List[Dict[str, Any]] = []
+
+    # -- id minting ----------------------------------------------------------
+    def _mint_task_id(self, type_hint: str = "t") -> str:
+        self._task_counter += 1
+        return f"r{self._task_counter}.{type_hint[:16]}"
+
+    def _mint_dag_name(self) -> str:
+        self._dag_counter += 1
+        return f"run{self._dag_counter}"
+
+    # -- operations ------------------------------------------------------------
+    def submit(self, df: Dataflow, validate: bool = True) -> SubmissionReceipt:
+        """Merge a submitted de-dup DAG into the running set (paper §4.1)."""
+        if df.name in self.submitted:
+            raise DataflowError(f"dataflow {df.name!r} already submitted")
+        if validate:
+            df.validate()
+            for tid in df.tasks:
+                t = df.tasks[tid]
+                if not t.is_sink and not df.children(tid):
+                    raise DataflowError(
+                        f"task {tid!r} is a non-sink leaf; submitted DAGs must "
+                        f"terminate in sink tasks (paper §3.3 C2)"
+                    )
+            if not is_dedup_fast(df):
+                raise DataflowError(f"submitted dataflow {df.name!r} is not de-dup (§3.2)")
+
+        df = df.copy()
+        merged_name = self._mint_dag_name()
+        if self.strategy == "none":
+            plan = self._plan_no_reuse(df, merged_name)
+        else:
+            plan = plan_merge(
+                self.running,
+                df,
+                mint_id=self._mint_task_id,
+                merged_name=merged_name,
+                strategy=self.strategy,
+                index=self.index if self.strategy == "signature" else None,
+            )
+        # Update Δ/Φ: all submissions supported by the absorbed DAGs now map
+        # to the merged DAG.
+        absorbed: Set[str] = set()
+        for run_name in plan.overlapping:
+            absorbed |= self.delta.pop(run_name, set())
+        apply_merge(self.running, df, plan)
+        for sub_name in absorbed:
+            self.phi[sub_name] = merged_name
+        self.submitted[df.name] = df
+        self.task_maps[df.name] = plan.task_map
+        self.phi[df.name] = merged_name
+        self.delta[merged_name] = absorbed | {df.name}
+        # Index maintenance: a created running task is equivalent to its
+        # submitted counterpart, so it inherits that signature.
+        if self.strategy == "signature":
+            sigs = compute_signatures(df)
+            for sub_id, run_id in plan.created.items():
+                self.index.add(run_id, sigs[sub_id])
+
+        self._journal({"op": "submit", "dataflow": df.to_json()})
+        receipt = SubmissionReceipt(
+            name=df.name,
+            running_dag=merged_name,
+            sink_map={s: plan.task_map[s] for s in df.sink_ids},
+            num_reused=plan.num_reused,
+            num_created=plan.num_created,
+            plan=plan,
+        )
+        if self.check_invariants:
+            self.verify()
+        return receipt
+
+    def _plan_no_reuse(self, df: Dataflow, merged_name: str) -> MergePlan:
+        """Default baseline: instantiate everything afresh, merge nothing."""
+        plan = MergePlan(submitted_name=df.name, merged_name=merged_name, overlapping=[])
+        for tid in df.topological_order():
+            plan.created[tid] = self._mint_task_id(df.tasks[tid].type)
+        for s_up, s_down in df.streams:
+            plan.new_streams_internal.append((plan.created[s_up], plan.created[s_down]))
+        return plan
+
+    def remove(self, name: str) -> RemovalReceipt:
+        """Remove a submitted DAG and unmerge the running set (paper §4.2)."""
+        if name not in self.submitted:
+            raise DataflowError(f"dataflow {name!r} was not submitted")
+        run_name = self.phi[name]
+        run_df = self.running[run_name]
+        remaining = sorted(self.delta[run_name] - {name})
+        plan = plan_unmerge(
+            run_df,
+            remaining_task_maps={n: self.task_maps[n] for n in remaining},
+            remaining_sinks={n: self.submitted[n].sink_ids for n in remaining},
+            removed_name=name,
+            mint_name=self._mint_dag_name,
+        )
+        apply_unmerge(self.running, plan)
+        # Re-point Δ/Φ for the survivors: a submitted DAG belongs to the
+        # component that contains its mapped tasks (exactly one, verified).
+        del self.delta[run_name]
+        for comp_name in plan.components:
+            self.delta[comp_name] = set()
+        for sub_name in remaining:
+            mapped = set(self.task_maps[sub_name].values())
+            homes = [cn for cn, comp in plan.components.items() if mapped & comp]
+            if len(homes) != 1 or not mapped <= plan.components[homes[0]]:
+                raise AssertionError(
+                    f"unmerge split submitted DAG {sub_name!r} across components"
+                )
+            self.phi[sub_name] = homes[0]
+            self.delta[homes[0]].add(sub_name)
+        # Drop empty components (cannot happen if remaining non-empty; if no
+        # remaining submissions, everything was terminated).
+        for comp_name in [c for c, subs in self.delta.items() if not subs and c in plan.components]:
+            if not self.running[comp_name].tasks:
+                del self.running[comp_name]
+                del self.delta[comp_name]
+
+        del self.submitted[name]
+        del self.task_maps[name]
+        del self.phi[name]
+        if self.strategy == "signature":
+            self.index.remove_tasks(plan.terminated_tasks)
+
+        self._journal({"op": "remove", "name": name})
+        receipt = RemovalReceipt(
+            name=name,
+            terminated_tasks=set(plan.terminated_tasks),
+            surviving_dags=list(plan.components),
+            plan=plan,
+        )
+        if self.check_invariants:
+            self.verify()
+        return receipt
+
+    # -- introspection / stats -------------------------------------------------
+    def verify(self) -> None:
+        invariants.check_all(self.submitted, self.running, self.task_maps, self.phi)
+
+    @property
+    def running_task_count(self) -> int:
+        """The paper's primary metric (Fig. 2)."""
+        return sum(len(df.tasks) for df in self.running.values())
+
+    @property
+    def submitted_task_count(self) -> int:
+        return sum(len(df.tasks) for df in self.submitted.values())
+
+    def reuse_counts(self) -> Dict[str, int]:
+        """For each running task, how many submitted DAGs use it (Fig. 4)."""
+        counts: Dict[str, int] = {
+            tid: 0 for df in self.running.values() for tid in df.tasks
+        }
+        for sub_name, sub_df in self.submitted.items():
+            run_df = self.running[self.phi[sub_name]]
+            used: Set[str] = set()
+            for sink_id in sub_df.sink_ids:
+                used |= ancestor_graph(run_df, self.task_maps[sub_name][sink_id]).task_ids
+            for tid in used:
+                counts[tid] += 1
+        return counts
+
+    # -- durability (control-plane fault tolerance) -----------------------------
+    def _journal(self, entry: Dict[str, Any]) -> None:
+        entry = dict(entry, ts=time.time())
+        self.journal.append(entry)
+        if self.journal_path:
+            with open(self.journal_path, "a") as f:
+                f.write(json.dumps(entry) + "\n")
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "strategy": self.strategy,
+            "journal": self.journal,
+        }
+
+    @classmethod
+    def replay(
+        cls, journal: List[Dict[str, Any]], strategy: Optional[str] = None, **kwargs: Any
+    ) -> "ReuseManager":
+        """Rebuild manager state by re-running the operation journal."""
+        mgr = cls(strategy=strategy or "signature", **kwargs)
+        for entry in journal:
+            if entry["op"] == "submit":
+                mgr.submit(Dataflow.from_json(entry["dataflow"]))
+            elif entry["op"] == "remove":
+                mgr.remove(entry["name"])
+            else:
+                raise ValueError(f"unknown journal op {entry['op']!r}")
+        return mgr
+
+    @classmethod
+    def restore(cls, journal_path: str, **kwargs: Any) -> "ReuseManager":
+        journal: List[Dict[str, Any]] = []
+        with open(journal_path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    journal.append(json.loads(line))
+        return cls.replay(journal, **kwargs)

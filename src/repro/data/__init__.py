@@ -1,0 +1,6 @@
+"""Data pipeline: deterministic token streams for LM training and the
+synthetic IoT sensor sources the paper's dataflows consume."""
+from .tokens import TokenStream, make_lm_batch_iter
+from .sensors import SensorStream, SENSOR_TYPES
+
+__all__ = ["TokenStream", "make_lm_batch_iter", "SensorStream", "SENSOR_TYPES"]

@@ -1,0 +1,31 @@
+"""Pallas TPU kernels for the compute hot spots, each with a pure-jnp
+oracle in ref.py and a backend-dispatching wrapper in ops.py.
+
+  flash_attention   causal/SWA prefill+train attention (online softmax)
+  decode_attention  single-token cache attention, kv-head-major GQA
+  rmsnorm           fused (residual+)RMSNorm
+  ssd               Mamba2 chunked SSD scan with VMEM-resident state
+
+The paper's own contribution is control-plane (dataflow merge/unmerge),
+so these kernels serve the *model zoo* data plane, not the paper §4
+algorithms — see DESIGN.md §3.
+"""
+from .ops import (
+    backend,
+    decode_attention,
+    flash_attention,
+    rmsnorm,
+    rmsnorm_residual,
+    set_backend,
+    ssd_scan,
+)
+
+__all__ = [
+    "backend",
+    "decode_attention",
+    "flash_attention",
+    "rmsnorm",
+    "rmsnorm_residual",
+    "set_backend",
+    "ssd_scan",
+]

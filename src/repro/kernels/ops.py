@@ -1,0 +1,89 @@
+"""Backend-dispatching wrappers: Pallas kernels on TPU, interpret mode or
+jnp reference elsewhere. Model code calls these entry points.
+
+``set_backend("pallas"|"ref"|"interpret")`` overrides detection (tests
+pin "interpret" to execute the real kernel bodies on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention as _decode_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .rmsnorm import rmsnorm as _rmsnorm_pallas
+from .rmsnorm import rmsnorm_residual as _rmsnorm_res_pallas
+from .ssd import ssd_scan as _ssd_pallas
+
+_BACKEND: Optional[str] = None
+
+
+def set_backend(name: Optional[str]) -> None:
+    global _BACKEND
+    assert name in (None, "pallas", "ref", "interpret")
+    _BACKEND = name
+
+
+def backend() -> str:
+    if _BACKEND:
+        return _BACKEND
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _gqa_repeat(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    if groups == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, hd)).reshape(
+        b, s, kv * groups, hd
+    )
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None):
+    """q (B,Sq,H,hd); k/v (B,Sk,KV,hd) — GQA repeat handled here."""
+    be = backend()
+    if be == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    groups = q.shape[2] // k.shape[2]
+    k = _gqa_repeat(k, groups)
+    v = _gqa_repeat(v, groups)
+    return _flash_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        interpret=(be == "interpret"),
+    )
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0, scale=None):
+    be = backend()
+    if be == "ref":
+        return ref.decode_attention_ref(
+            q, k_cache, v_cache, cache_len, window=window, scale=scale
+        )
+    return _decode_pallas(
+        q, k_cache, v_cache, cache_len, window=window, scale=scale,
+        interpret=(be == "interpret"),
+    )
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    be = backend()
+    if be == "ref":
+        return ref.rmsnorm_ref(x, scale, eps)
+    return _rmsnorm_pallas(x, scale, eps=eps, interpret=(be == "interpret"))
+
+
+def rmsnorm_residual(x, residual, scale, eps: float = 1e-6):
+    be = backend()
+    if be == "ref":
+        return ref.rmsnorm_residual_ref(x, residual, scale, eps)
+    return _rmsnorm_res_pallas(x, residual, scale, eps=eps, interpret=(be == "interpret"))
+
+
+def ssd_scan(xh, dt, a, B_ssm, C_ssm, *, chunk: int = 128):
+    be = backend()
+    if be == "ref":
+        return ref.ssd_scan_ref(xh, dt, a, B_ssm, C_ssm, chunk=chunk)
+    return _ssd_pallas(xh, dt, a, B_ssm, C_ssm, chunk=chunk, interpret=(be == "interpret"))

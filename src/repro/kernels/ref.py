@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These delegate to the model-layer reference implementations so the
+kernels are validated against exactly the math the models use.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import chunked_attention, decode_attention as _decode_ref
+from repro.models.common import rms_norm
+from repro.models.ssm import ssd_chunked
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    return chunked_attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    *,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    return _decode_ref(q, k_cache, v_cache, cache_len, window=window, scale=scale)
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    return rms_norm(x, scale, eps=eps)
+
+
+def rmsnorm_residual_ref(x, residual, scale, eps: float = 1e-6):
+    added = x + residual
+    return rms_norm(added, scale, eps=eps), added
+
+
+def ssd_scan_ref(
+    xh: jnp.ndarray,
+    dt: jnp.ndarray,
+    a: jnp.ndarray,
+    B_ssm: jnp.ndarray,
+    C_ssm: jnp.ndarray,
+    *,
+    chunk: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return ssd_chunked(xh, dt, a, B_ssm, C_ssm, chunk=chunk)

@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, per-cell input specs, dry-run driver,
+and the train/serve entrypoints."""

@@ -1,0 +1,191 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: ``lower() + compile()`` every (architecture ×
+input-shape × mesh) cell on placeholder devices, and extract the roofline
+terms from the compiled artifact.
+
+The two lines above MUST stay first — jax locks the device count on first
+init. Run one cell per process (the CLI default) so device state and
+compile memory stay isolated:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-20b \
+        --shape train_4k [--multi-pod] [--json out.json]
+
+or sweep everything (spawns one subprocess per cell):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out-dir results/dryrun
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from typing import Any, Dict, Optional
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    multi_pod: bool,
+    overrides: Optional[dict] = None,
+    top_sites: int = 0,
+) -> Dict[str, Any]:
+    import jax
+
+    from repro import configs
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+    from repro.roofline.analysis import analyze_compiled
+
+    cfg = configs.get_config(arch)
+    cell = configs.shape_cell(shape)
+    skip = configs.cell_supported(cfg, cell)
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "multi_pod": multi_pod,
+    }
+    if skip:
+        rec["status"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if overrides and overrides.get("decode_pp"):
+        from repro.launch.specs import build_pp_decode_cell
+
+        built = build_pp_decode_cell(arch, shape, mesh)
+    else:
+        built = build_cell(arch, shape, mesh, overrides=overrides)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(
+            built.step_fn,
+            in_shardings=built.in_shardings,
+            out_shardings=built.out_shardings,
+            donate_argnums=built.donate,
+        ).lower(*built.abstract_inputs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    print(f"memory_analysis: {mem}")
+    print(
+        "cost_analysis: flops=%.4g bytes=%.4g"
+        % (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0))
+    )
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        accum=built.accum,
+        memory={
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        roofline=analyze_compiled(compiled, cfg, cell, mesh),
+    )
+    if top_sites:
+        from repro.roofline import hlo_parse
+
+        parsed = hlo_parse.analyze(compiled.as_text(), top_k=top_sites)
+        rec["hbm_top_sites"] = parsed["hbm_top_sites"]
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--experiment", help="named §Perf override set (launch/experiments.py)")
+    ap.add_argument("--top-sites", type=int, default=0, help="report top-N HBM sites")
+    ap.add_argument("--json", help="write the cell record to this path")
+    ap.add_argument("--all", action="store_true", help="sweep all cells (subprocesses)")
+    ap.add_argument("--meshes", default="single,multi", help="for --all")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--timeout", type=int, default=7200)
+    args = ap.parse_args(argv)
+
+    if args.all:
+        return sweep(args)
+
+    assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    overrides = None
+    if args.experiment:
+        from repro.launch import experiments
+
+        overrides = experiments.get(args.experiment)
+    rec = run_cell(
+        args.arch, args.shape, args.multi_pod, overrides=overrides,
+        top_sites=args.top_sites,
+    )
+    if args.experiment:
+        rec["experiment"] = args.experiment
+    out = json.dumps(rec, indent=2)
+    print(out)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            f.write(out)
+    return 0 if rec.get("status", "").startswith(("ok", "SKIP")) else 1
+
+
+def sweep(args) -> int:
+    from repro import configs  # control-plane import only (no jax device init)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    meshes = []
+    if "single" in args.meshes:
+        meshes.append(False)
+    if "multi" in args.meshes:
+        meshes.append(True)
+    failures = []
+    for arch in configs.ARCHS:
+        public = {v: k for k, v in configs.ALIASES.items()}[arch]
+        for cell in configs.SHAPES:
+            for mp in meshes:
+                tag = f"{arch}__{cell.name}__{'2x16x16' if mp else '16x16'}"
+                path = os.path.join(args.out_dir, tag + ".json")
+                if os.path.exists(path):
+                    rec = json.load(open(path))
+                    if rec.get("status", "").startswith(("ok", "SKIP")):
+                        print(f"cached  {tag}: {rec['status']}")
+                        continue
+                cmd = [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", public, "--shape", cell.name, "--json", path,
+                ]
+                if mp:
+                    cmd.append("--multi-pod")
+                print(f"run     {tag} ...", flush=True)
+                t0 = time.time()
+                proc = subprocess.run(
+                    cmd, capture_output=True, text=True, timeout=args.timeout
+                )
+                dt = time.time() - t0
+                if proc.returncode != 0:
+                    failures.append(tag)
+                    with open(os.path.join(args.out_dir, tag + ".err"), "w") as f:
+                        f.write(proc.stdout[-5000:] + "\n" + proc.stderr[-20000:])
+                    print(f"FAIL    {tag} ({dt:.0f}s) — see {tag}.err")
+                else:
+                    rec = json.load(open(path))
+                    print(f"ok      {tag} ({dt:.0f}s): {rec['status']}")
+    print(f"\nsweep done; {len(failures)} failures: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

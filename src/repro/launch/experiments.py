@@ -1,0 +1,92 @@
+"""Named §Perf experiments: override sets applied on top of the baseline
+sharding/accum policy by ``dryrun --experiment NAME``.
+
+Each entry documents its hypothesis; results land in EXPERIMENTS.md §Perf
+as hypothesis → change → before → after → confirmed/refuted.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from jax.sharding import PartitionSpec as P
+
+# Axis-kind tokens understood by models.sharding role tables
+MODEL, FSDP, DATA = "model", "fsdp", "data"
+
+
+def get(name: str) -> Dict[str, Any]:
+    return dict(_EXPERIMENTS[name])
+
+
+def names():
+    return sorted(_EXPERIMENTS)
+
+
+def _moe_ep(accum: int) -> Dict[str, Any]:
+    """Expert parallelism via shard_map (see the hypothesis below)."""
+    return {
+        "accum": accum,
+        "moe_impl": "ep",
+        "role_overrides": {
+            # stacked experts (L, E, D, F): E over data, F over model
+            "w_up#4": {-3: [DATA], -2: [None], -1: [MODEL]},
+            "w_gate#4": {-3: [DATA], -2: [None], -1: [MODEL]},
+            "w_down#4": {-3: [DATA], -2: [MODEL], -1: [None]},
+            # shared-expert / first-dense mlp (L, D, F): F over model only
+            "w_up#3": {-2: [None], -1: [MODEL]},
+            "w_gate#3": {-2: [None], -1: [MODEL]},
+            "w_down#3": {-2: [MODEL], -1: [None]},
+            "router": {},  # replicated (small)
+        },
+    }
+
+
+_EXPERIMENTS: Dict[str, Dict[str, Any]] = {
+    # ---- deepseek-v2 train_4k (most collective-bound) -----------------------
+    # H1: with accum=16, the (data-axis) FSDP weight all-gather repeats 16×
+    # per step; 236B × 2B / 16 (model) × 15/16 × 16 microbatches × fwd+bwd
+    # ≈ 27 TB/device — the dominant collective term. Fewer microbatches
+    # divide it directly; activations stay sequence-parallel so the memory
+    # cost of bigger microbatches is bounded.
+    "accum2": {"accum": 2},
+    "accum4": {"accum": 4},
+    "accum8": {"accum": 8},
+    # H2: expert parallelism via shard_map — shard the expert dim over the
+    # data axis instead of FSDP-sharding every expert's matrices. Expert
+    # weights become *stationary* (each data shard owns E/16 experts whole,
+    # F still over model); the dispatch becomes shard-local scatters + one
+    # all_to_all each way (T·K·cf·D), killing the GSPMD scatter's
+    # cross-shard all-reduces (~38 TB/device at 236B).
+    "moe_ep_accum2": _moe_ep(2),
+    "moe_ep_accum4": _moe_ep(4),
+    "moe_ep_accum8": _moe_ep(8),
+    # the pre-EP GSPMD scatter dispatch (the original baseline) for A/B
+    "moe_gspmd": {
+        "moe_impl": "dense",
+        "role_overrides": {
+            "w_up#4": {-3: [None], -2: [FSDP], -1: [MODEL]},
+            "w_gate#4": {-3: [None], -2: [FSDP], -1: [MODEL]},
+            "w_down#4": {-3: [None], -2: [MODEL], -1: [FSDP]},
+            "w_up#3": {-2: [FSDP], -1: [MODEL]},
+            "w_gate#3": {-2: [FSDP], -1: [MODEL]},
+            "w_down#3": {-2: [MODEL], -1: [FSDP]},
+            "router": {-2: [FSDP], -1: [None]},
+        },
+    },
+    # ---- nemotron decode_32k (paper-representative serving cell) ------------
+    # H: the per-layer KV cache slices scanned as xs/ys are copied every
+    # step; carrying the stacked cache through the loop and updating it
+    # in place (donation-friendly DUS on the carry) removes the copy.
+    "carry_cache": {"decode_cache_layout": "carry"},
+    # H2: pipeline-parallel decode — layers shard over the data axis
+    # (each stage owns L/16 layers whole, model-TP'd), so weights are
+    # STATIONARY; one collective_permute of (B/16, 1, D) per round replaces
+    # re-gathering 42 GB/device of weights per token. One call = one
+    # steady-state GPipe round.
+    "decode_pp": {"decode_pp": True},
+    # ---- mixtral long_500k (worst roofline fraction) -------------------------
+    # H: at B=1 decode, the dense-capacity MoE path computes all 8 experts;
+    # top-2 gather of expert weights cuts weight traffic ~4×.
+    "moe_decode_sparse": {"moe_decode": "sparse"},
+    "sparse_carry": {"moe_decode": "sparse", "decode_cache_layout": "carry"},
+}

@@ -1,0 +1,362 @@
+"""Per-cell stand-in inputs (ShapeDtypeStruct — zero allocation) and the
+sharding assembly for every (architecture × input-shape × mesh) cell.
+
+``build_cell`` returns everything the dry-run needs:
+  * the step function (train / prefill / decode) closed over the config,
+  * abstract inputs,
+  * in/out shardings (NamedSharding trees),
+  * the AxisRules whose activation constraints the step body reads.
+
+Memory policy (v5e, 16 GB HBM/chip):
+  * params + AdamW state shard over (fsdp=data × model); moments bf16/f32
+    per config size (see ``_opt_for``).
+  * training microbatches: accum = global_batch / data-size ⇒ one sequence
+    per data shard per microstep; remat everywhere ⇒ live set is one layer.
+  * the residual stream is sequence-parallel: ``hidden`` rule shards S over
+    the model axis, so the per-layer saved activations are 1/16th.
+  * KV caches shard batch over data and head_dim (or kv-heads / latent
+    positions) over model — see models/sharding.cache_specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.configs import ShapeCell
+from repro.models import (
+    abstract_cache,
+    abstract_params,
+    decode_step,
+    prefill,
+)
+from repro.models import sharding as shd
+from repro.models.config import ModelConfig
+from repro.train import AdamWConfig, abstract_train_state, make_train_step
+
+from .mesh import mesh_sizes
+
+PyTree = Any
+
+
+@dataclass
+class Cell:
+    arch: str
+    cfg: ModelConfig
+    cell: ShapeCell
+    step_fn: Callable
+    abstract_inputs: Tuple[PyTree, ...]
+    in_shardings: Tuple[PyTree, ...]
+    out_shardings: PyTree
+    rules: shd.AxisRules
+    accum: int = 1
+    # donated arg positions: train donates the state, serve donates the cache
+    donate: Tuple[int, ...] = ()
+
+
+def _opt_for(cfg: ModelConfig) -> Tuple[AdamWConfig, str]:
+    """(optimizer config, grad-accum dtype) sized to 16 GB/chip HBM."""
+    total, _ = cfg.param_count()
+    # ≥100B params: bf16 moments to stay inside 16 GB/chip (DESIGN.md §7)
+    if total > 100e9:
+        return AdamWConfig(mu_dtype="bfloat16", nu_dtype="bfloat16"), "bfloat16"
+    return AdamWConfig(mu_dtype="float32", nu_dtype="float32"), "float32"
+
+
+def _data_axes_for(batch: int, rules: shd.AxisRules) -> Tuple[str, ...]:
+    """Largest prefix of the data axes whose product divides the batch."""
+    axes: Tuple[str, ...] = ()
+    prod = 1
+    for a in rules.data:
+        if batch % (prod * rules.mesh_sizes[a]) == 0:
+            axes += (a,)
+            prod *= rules.mesh_sizes[a]
+    return axes
+
+
+def make_rules(mesh, *, seq_parallel: bool = True) -> shd.AxisRules:
+    sizes = mesh_sizes(mesh)
+    rules = shd.AxisRules(sizes)
+    rules.mesh = mesh
+    if seq_parallel:
+        # sequence-parallel residual stream: saved per-layer activations
+        # are 1/|model| per chip (Korthikanti et al., adapted to GSPMD)
+        rules.activation_rules["hidden"] = P(rules.data, "model", None)
+    rules.activation_rules["moe_experts"] = P(None, rules.data, None)
+    # Expert-parallel MoE is the default under a mesh (§Perf H1): experts
+    # stationary over the data axis, F over model; shard-local dispatch.
+    # GSPMD's scatter dispatch replicates the (T·K, D) gather per device
+    # (data-dependent indices defeat propagation) — available for
+    # comparison via --experiment moe_gspmd.
+    rules.role_overrides.update(
+        {
+            "w_up#4": {-3: ["data"], -2: [None], -1: ["model"]},
+            "w_gate#4": {-3: ["data"], -2: [None], -1: ["model"]},
+            "w_down#4": {-3: ["data"], -2: ["model"], -1: [None]},
+            "w_up#3": {-2: [None], -1: ["model"]},
+            "w_gate#3": {-2: [None], -1: ["model"]},
+            "w_down#3": {-2: ["model"], -1: [None]},
+            "router": {},
+        }
+    )
+    return rules
+
+
+def _batched_spec(batch: int, rules: shd.AxisRules, trailing: int) -> P:
+    axes = _data_axes_for(batch, rules)
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return P(lead, *([None] * trailing))
+
+
+def _memory_struct(cfg: ModelConfig, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        return jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = configs.get_config(arch)
+    cell = configs.shape_cell(shape)
+    B, S = cell.global_batch, cell.seq_len
+    tok = jax.ShapeDtypeStruct
+    if cell.kind == "train":
+        out = {
+            "tokens": tok((B, S), jnp.int32),
+            "labels": tok((B, S), jnp.int32),
+        }
+        mem = _memory_struct(cfg, B)
+        if mem is not None:
+            out["memory"] = mem
+        return out
+    if cell.kind == "prefill":
+        out = {"tokens": tok((B, S), jnp.int32)}
+        mem = _memory_struct(cfg, B)
+        if mem is not None:
+            out["memory"] = mem
+        return out
+    # decode: one new token against a cache of S absolute positions
+    return {"tokens": tok((B, 1), jnp.int32)}
+
+
+def build_cell(arch: str, shape: str, mesh, *, overrides: Optional[dict] = None) -> Cell:
+    cfg = configs.get_config(arch)
+    cell = configs.shape_cell(shape)
+    skip = configs.cell_supported(cfg, cell)
+    if skip:
+        raise ValueError(f"{arch}×{shape}: {skip}")
+    rules = make_rules(mesh)
+    if cfg.family == "moe":
+        from repro.models import mlp as _mlp
+
+        ep_axis_size = rules.mesh_sizes[rules.data[-1]]
+        if cfg.moe.num_experts % ep_axis_size == 0:
+            _mlp.MOE_IMPL = "ep"  # default under a mesh; see make_rules
+        else:
+            # E < |data| (mixtral: 8 experts, 16-way axis) — keep the GSPMD
+            # dispatch; grouped-EP (expert padding / hierarchical
+            # all_to_all) is the documented extension (§Perf H1 notes)
+            _mlp.MOE_IMPL = "dense"
+            for k in list(rules.role_overrides):
+                if k.endswith("#4"):
+                    del rules.role_overrides[k]
+    # batch-aware activation rules: a batch dim only takes the data axes
+    # whose product divides it (long_500k decodes with global_batch=1)
+    lead_axes = _data_axes_for(cell.global_batch, rules)
+    lead = lead_axes if len(lead_axes) > 1 else (lead_axes[0] if lead_axes else None)
+    rules.activation_rules["hidden"] = P(lead, "model", None)
+    rules.activation_rules["decode_hidden"] = P(lead, None, None)
+    rules.activation_rules["logits"] = P(lead, None, "model")
+    rules.activation_rules["logits_last"] = P(lead, "model")
+    if overrides:
+        for k, v in (overrides.get("activation_rules") or {}).items():
+            rules.activation_rules[k] = v
+        rules.role_overrides.update(overrides.get("role_overrides") or {})
+        if overrides.get("decode_cache_layout"):
+            from repro.models import decode as _dec
+
+            _dec.CACHE_LAYOUT = overrides["decode_cache_layout"]
+        if overrides.get("moe_decode"):
+            from repro.models import mlp as _mlp
+
+            _mlp.MOE_DECODE = overrides["moe_decode"]
+        if overrides.get("moe_impl"):
+            from repro.models import mlp as _mlp
+
+            _mlp.MOE_IMPL = overrides["moe_impl"]
+
+    params_abs = abstract_params(cfg)
+    param_specs = shd.infer_param_specs(params_abs, rules)
+    B, S = cell.global_batch, cell.seq_len
+    mem_len = {"vlm": cfg.num_image_tokens, "audio": cfg.encoder_seq}.get(cfg.family, 0)
+
+    if cell.kind == "train":
+        opt, accum_dtype = _opt_for(cfg)
+        dsize = 1
+        for a in rules.data:
+            dsize *= rules.mesh_sizes[a]
+        accum = (overrides or {}).get("accum", max(1, B // dsize))
+        while B % accum or (B // accum) % dsize:
+            accum -= 1  # fall back to a divisor
+        state_abs = abstract_train_state(cfg, opt)
+        state_specs = {
+            "step": P(),
+            "params": param_specs,
+            "mu": param_specs,
+            "nu": param_specs,
+        }
+        batch_abs = input_specs(arch, shape)
+        batch_specs = {
+            "tokens": _batched_spec(B, rules, 1),
+            "labels": _batched_spec(B, rules, 1),
+        }
+        if "memory" in batch_abs:
+            batch_specs["memory"] = _batched_spec(B, rules, 2)
+        step = make_train_step(cfg, opt, accum=accum, accum_dtype=accum_dtype)
+
+        def train_fn(state, batch):
+            with shd.use_rules(rules):
+                return step(state, batch)
+
+        metrics_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+        return Cell(
+            arch, cfg, cell, train_fn,
+            (state_abs, batch_abs),
+            (_ns(mesh, state_specs, state_abs), _ns(mesh, batch_specs, batch_abs)),
+            _ns(mesh, (state_specs, metrics_specs), None),
+            rules, accum, donate=(0,),
+        )
+
+    if cell.kind == "prefill":
+        cache_abs = abstract_cache(cfg, B, S, memory_len=mem_len)
+        cache_spec = shd.cache_specs(cache_abs, rules)
+        batch_abs = input_specs(arch, shape)
+        ins_abs = (params_abs, batch_abs["tokens"], cache_abs)
+        ins_specs = (param_specs, _batched_spec(B, rules, 1), cache_spec)
+        if "memory" in batch_abs:
+            def prefill_fn(params, tokens, cache, memory):
+                with shd.use_rules(rules):
+                    return prefill(params, cfg, tokens, cache, memory=memory)
+
+            ins_abs += (batch_abs["memory"],)
+            ins_specs += (_batched_spec(B, rules, 2),)
+        else:
+            def prefill_fn(params, tokens, cache):
+                with shd.use_rules(rules):
+                    return prefill(params, cfg, tokens, cache)
+
+        out_specs = (rules.activation_rules["logits_last"], cache_spec)
+        return Cell(
+            arch, cfg, cell, prefill_fn,
+            ins_abs, _ns(mesh, ins_specs, ins_abs),
+            _ns(mesh, out_specs, None), rules, donate=(2,),
+        )
+
+    # decode: cache holds S absolute positions (ring-bounded under SWA)
+    cache_abs = abstract_cache(cfg, B, S + 8, memory_len=mem_len)
+    cache_spec = shd.cache_specs(cache_abs, rules)
+    batch_abs = input_specs(arch, shape)
+
+    def decode_fn(params, tokens, cache):
+        with shd.use_rules(rules):
+            return decode_step(params, cfg, tokens, cache)
+
+    ins_abs = (params_abs, batch_abs["tokens"], cache_abs)
+    ins_specs = (param_specs, _batched_spec(B, rules, 1), cache_spec)
+    out_specs = (rules.activation_rules["logits_last"], cache_spec)
+    return Cell(
+        arch, cfg, cell, decode_fn,
+        ins_abs, _ns(mesh, ins_specs, ins_abs),
+        _ns(mesh, out_specs, None), rules, donate=(2,),
+    )
+
+
+def _ns(mesh, spec_tree: PyTree, abs_tree: Optional[PyTree]) -> PyTree:
+    """PartitionSpec tree → NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def build_pp_decode_cell(arch: str, shape: str, mesh) -> Cell:
+    """§Perf experiment: pipeline-parallel decode (dense family).
+
+    Layers shard over the data axis (weights stationary per stage);
+    microbatches flow between stages via collective_permute. One call =
+    one steady-state GPipe round (per-token throughput cost).
+    """
+    cfg = configs.get_config(arch)
+    cell = configs.shape_cell(shape)
+    assert cell.kind == "decode" and cfg.family == "dense"
+    rules = make_rules(mesh)
+    B, S = cell.global_batch, cell.seq_len
+
+    params_abs = abstract_params(cfg)
+    base_specs = shd.infer_param_specs(params_abs, rules)
+
+    def strip_data(spec):
+        clean = []
+        for p in tuple(spec):
+            if p is None:
+                clean.append(None)
+            elif isinstance(p, tuple):
+                kept = tuple(a for a in p if a != "data")
+                clean.append(kept if kept else None)
+            else:
+                clean.append(None if p == "data" else p)
+        return clean
+
+    def pp_spec(path, spec):
+        keys = [str(getattr(p, "key", p)) for p in path]
+        if keys and keys[0] == "blocks":
+            rest = strip_data(spec)[1:]
+            return P("data", *rest)
+        return P(*strip_data(spec))
+
+    param_specs = jax.tree_util.tree_map_with_path(
+        pp_spec, base_specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+    from repro.models import decode as dec
+
+    cache_abs = dict(abstract_cache(cfg, B, S + 8))
+    cache_abs["pp_h"] = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+
+    def cache_pp_spec(path, leaf):
+        keys = [str(getattr(p, "key", p)) for p in path]
+        if keys and keys[0] == "layers":
+            # (L, B, S, KV, hd): L over stages, head_dim over model
+            # (S-over-model was tried and regressed — see §Perf H2 log)
+            out = ["data"] + [None] * (len(leaf.shape) - 1)
+            if leaf.shape[-1] % rules.mesh_sizes.get("model", 1) == 0:
+                out[-1] = "model"
+            return P(*out)
+        if keys and keys[0] == "pp_h":
+            return P("data", None, None)
+        return P()
+
+    cache_spec = jax.tree_util.tree_map_with_path(cache_pp_spec, cache_abs)
+    batch_abs = input_specs(arch, shape)
+
+    def pp_fn(params, tokens, cache):
+        with shd.use_rules(rules):
+            return dec.decode_step_pp(params, cfg, tokens, cache, rules)
+
+    ins_abs = (params_abs, batch_abs["tokens"], cache_abs)
+    ins_specs = (param_specs, P("data", None), cache_spec)
+    out_specs = (P("data", None), cache_spec)
+    return Cell(
+        arch, cfg, cell, pp_fn,
+        ins_abs, _ns(mesh, ins_specs, ins_abs),
+        _ns(mesh, out_specs, None), rules, donate=(2,),
+    )

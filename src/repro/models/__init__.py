@@ -1,0 +1,20 @@
+"""Model zoo covering the 10 assigned architectures (6 families)."""
+from .config import MLAConfig, MoEConfig, ModelConfig, SSMConfig, XLSTMConfig
+from .transformer import abstract_params, forward, init_params
+from .decode import abstract_cache, decode_step, encode, init_cache, prefill
+
+__all__ = [
+    "MLAConfig",
+    "MoEConfig",
+    "ModelConfig",
+    "SSMConfig",
+    "XLSTMConfig",
+    "abstract_cache",
+    "abstract_params",
+    "decode_step",
+    "encode",
+    "forward",
+    "init_cache",
+    "init_params",
+    "prefill",
+]

@@ -1,0 +1,372 @@
+"""Attention: chunked online-softmax (flash-style) core, GQA projections with
+qk-norm / bias / sliding-window / cross-attention, MLA (DeepSeek) with the
+compressed-cache *absorbed* decode path, and single-token decode attention.
+
+The chunked core is the pure-jnp reference the Pallas flash kernel is
+validated against (kernels/ref.py imports it); it is also the default
+compute path on CPU and for the dry-run — it never materializes an S×S
+score matrix, so 32k prefill lowers with bounded memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def _gqa_repeat(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, KV, hd) -> (B, S, KV*groups, hd) by repeating each kv head."""
+    if groups == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, hd)).reshape(
+        b, s, kv * groups, hd
+    )
+
+
+def chunked_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Sk, KV, hd)
+    v: jnp.ndarray,  # (B, Sk, KV, hd_v)
+    *,
+    causal: bool = True,
+    window: int = 0,  # sliding window (0 = full)
+    q_offset: int = 0,  # absolute position of q[0] (prefill continuation)
+    chunk: int = 512,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Online-softmax attention, scanning over KV chunks. O(S·chunk) memory.
+
+    Wrapped in a named_scope so the roofline analyzer can attribute this
+    region's HBM traffic to the Pallas flash kernel (kernels/flash_attention)
+    which keeps the score tiles in VMEM on TPU."""
+    with jax.named_scope("kernel_flash_attn"):
+        sq = q.shape[1]
+        if sq <= chunk:
+            return _chunked_attention_impl(
+                q, k, v, causal=causal, window=window, q_offset=q_offset,
+                chunk=chunk, scale=scale,
+            )
+        # q-tiling: the live score block is (B, H, chunk, chunk) instead of
+        # (B, H, Sq, chunk) — bounds prefill/train attention memory in both
+        # dims (the Pallas kernel tiles identically in VMEM)
+        nq = -(-sq // chunk)
+        pad_q = nq * chunk - sq
+        qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+        qb = qp.reshape(q.shape[0], nq, chunk, *q.shape[2:])
+
+        def one_block(args):
+            q_blk, qi = args
+            return _chunked_attention_impl(
+                q_blk, k, v, causal=causal, window=window,
+                q_offset=q_offset + qi * chunk, chunk=chunk, scale=scale,
+            )
+
+        out = jax.lax.map(one_block, (qb.transpose(1, 0, 2, 3, 4), jnp.arange(nq)))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(
+            q.shape[0], nq * chunk, q.shape[2], out.shape[-1]
+        )
+        return out[:, :sq] if pad_q else out
+
+
+def _chunked_attention_impl(q, k, v, *, causal, window, q_offset, chunk, scale):
+    b, sq, h, hd = q.shape
+    _, sk, kv_heads, _ = k.shape
+    hd_v = v.shape[-1]
+    groups = h // kv_heads
+    k = _gqa_repeat(k, groups)
+    v = _gqa_repeat(v, groups)
+    scale = scale if scale is not None else hd ** -0.5
+
+    nchunks = -(-sk // chunk)
+    pad = nchunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, h, hd_v).transpose(1, 0, 2, 3, 4)
+
+    qs = q * scale
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kci, vci, ci = xs
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bqhd,bkhd->bhqk", qs, kci, preferred_element_type=jnp.float32
+        )
+        mask = k_pos[None, :] <= q_pos[:, None] if causal else jnp.ones(
+            (sq, chunk), jnp.bool_
+        )
+        mask = mask & (k_pos[None, :] < sk)  # chunk padding
+        if window:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vci.dtype), vci,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(nchunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Sq, H, hd_v)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, S_max, KV, hd)
+    v_cache: jnp.ndarray,  # (B, S_max, KV, hd_v)
+    cache_len: jnp.ndarray,  # () or (B,) — number of valid cache entries
+    *,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """One-token attention over a KV cache — O(S) compute, no S×S.
+
+    named_scope ⇒ roofline-attributable to kernels/decode_attention."""
+    with jax.named_scope("kernel_decode_attn"):
+        return _decode_attention_impl(
+            q, k_cache, v_cache, cache_len, window=window, scale=scale
+        )
+
+
+def _decode_attention_impl(q, k_cache, v_cache, cache_len, *, window, scale):
+    """GQA-aware: q is regrouped (B, KV, G, hd) and contracted directly
+    against the kv-headed cache — the (B, S, H, hd) repeat of the cache is
+    never materialized (the decode kernel uses the same kv-major layout)."""
+    b, _, h, hd = q.shape
+    s_max, kv_heads = k_cache.shape[1], k_cache.shape[2]
+    groups = h // kv_heads
+    scale = scale if scale is not None else hd ** -0.5
+    qg = (q[:, 0] * scale).reshape(b, kv_heads, groups, hd)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    pos = jnp.arange(s_max)
+    cl = jnp.asarray(cache_len)
+    valid = pos[None, :] < (cl[:, None] if cl.ndim else cl[None, None])
+    if window:
+        lo = (cl if cl.ndim else cl[None]) - window
+        valid = valid & (pos[None, :] >= lo[:, None])
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, h, hd).astype(q.dtype)  # (B, 1, H, hd_v)
+
+
+# -- GQA attention block ----------------------------------------------------------
+
+def gqa_params(key_gen, cfg, dtype) -> Dict[str, Any]:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    p: Dict[str, Any] = {
+        "wq": dense_init(key_gen(), (D, H, hd), dtype),
+        "wk": dense_init(key_gen(), (D, KV, hd), dtype),
+        "wv": dense_init(key_gen(), (D, KV, hd), dtype),
+        "wo": dense_init(key_gen(), (H, hd, D), dtype, fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def gqa_project_qkv(
+    p: Dict[str, Any], x: jnp.ndarray, positions: jnp.ndarray, cfg, *, rope: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(
+    p: Dict[str, Any],
+    x: jnp.ndarray,  # (B, S, D)
+    positions: jnp.ndarray,  # (B, S) or (S,)
+    cfg,
+    *,
+    causal: bool = True,
+) -> jnp.ndarray:
+    q, k, v = gqa_project_qkv(p, x, positions, cfg)
+    out = chunked_attention(q, k, v, causal=causal, window=cfg.swa_window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def gqa_decode(
+    p: Dict[str, Any],
+    x: jnp.ndarray,  # (B, 1, D)
+    cache: Dict[str, jnp.ndarray],  # {k: (B, S_max, KV, hd), v: ..., len: ()}
+    cfg,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    pos = cache["len"]  # scalar current length
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = gqa_project_qkv(p, x, positions, cfg)
+    # append to cache (ring-buffer for SWA: wrap position)
+    s_max = cache["k"].shape[1]
+    slot = (pos % s_max) if cfg.swa_window else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    new_len = pos + 1
+    if cfg.swa_window:
+        # ring buffer: all s_max entries valid once len ≥ s_max; positions
+        # beyond the window are masked by effective length min(len, s_max).
+        eff = jnp.minimum(new_len, s_max)
+        out = decode_attention(q, k_cache, v_cache, eff)
+    else:
+        out = decode_attention(q, k_cache, v_cache, new_len)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k_cache, "v": v_cache, "len": new_len}
+
+
+# -- Cross-attention (VLM / enc-dec) -----------------------------------------------
+
+def cross_attn_params(key_gen, cfg, dtype, gated: bool = False) -> Dict[str, Any]:
+    p = gqa_params(key_gen, cfg, dtype)
+    p["k_input_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if gated:
+        p["gate"] = jnp.zeros((), dtype)
+    return p
+
+
+def cross_attention(
+    p: Dict[str, Any],
+    x: jnp.ndarray,  # (B, Sq, D) queries
+    memory: jnp.ndarray,  # (B, Sm, D) encoder / vision states
+    cfg,
+) -> jnp.ndarray:
+    mem = rms_norm(memory, p["k_input_norm"])
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", mem, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", mem, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    out = chunked_attention(q, k, v, causal=False)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if "gate" in p:
+        y = jnp.tanh(p["gate"]).astype(y.dtype) * y
+    return y
+
+
+# -- MLA (DeepSeek-V2) ---------------------------------------------------------------
+
+def mla_params(key_gen, cfg, dtype) -> Dict[str, Any]:
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": dense_init(key_gen(), (D, m.q_lora_rank), dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "w_uq": dense_init(key_gen(), (m.q_lora_rank, H, qk_hd), dtype),
+        "w_dkv": dense_init(key_gen(), (D, m.kv_lora_rank), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_krope": dense_init(key_gen(), (D, m.qk_rope_head_dim), dtype),
+        "w_uk": dense_init(key_gen(), (m.kv_lora_rank, H, m.qk_nope_head_dim), dtype),
+        "w_uv": dense_init(key_gen(), (m.kv_lora_rank, H, m.v_head_dim), dtype),
+        "wo": dense_init(
+            key_gen(), (H, m.v_head_dim, D), dtype, fan_in=H * m.v_head_dim
+        ),
+    }
+
+
+def _mla_q(p, x, positions, cfg):
+    m = cfg.mla
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(
+    p: Dict[str, Any], x: jnp.ndarray, positions: jnp.ndarray, cfg
+) -> jnp.ndarray:
+    """Prefill/training path: expand K/V per head from the compressed cache.
+
+    Heads are sharded over the model axis, so the expanded K/V is bounded:
+    (B, S, H/shards, hd) per device.
+    """
+    m = cfg.mla
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)
+    c_kv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"])
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, p["w_krope"])[:, :, None, :], positions, cfg.rope_theta
+    )  # (B, S, 1, rope_hd) — shared across heads
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    h = cfg.n_heads
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:3], m.qk_rope_head_dim))], axis=-1
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = chunked_attention(q, k, v, causal=True, scale=scale)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_decode(
+    p: Dict[str, Any],
+    x: jnp.ndarray,  # (B, 1, D)
+    cache: Dict[str, jnp.ndarray],  # {c_kv: (B, S_max, r), k_rope: (B, S_max, rope_hd), len}
+    cfg,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Absorbed decode: attention runs in the compressed latent space —
+    the cache stores only (c_kv, k_rope); W_uk is absorbed into the query
+    and W_uv applied after, so per-token work is O(S·r) not O(S·H·hd)."""
+    m = cfg.mla
+    pos = cache["len"]
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)  # (B,1,H,·)
+    c_new = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"])
+    kr_new = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, p["w_krope"])[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new, pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new, pos, axis=1)
+    new_len = pos + 1
+
+    # scores: q_nope absorbed through W_uk → latent space
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["w_uk"])  # (B,H,r)
+    s_lat = jnp.einsum("bhr,bmr->bhm", q_lat, c_kv)
+    s_rope = jnp.einsum("bhk,bmk->bhm", q_rope[:, 0], k_rope)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (s_lat + s_rope) * scale
+    s_max_len = c_kv.shape[1]
+    valid = jnp.arange(s_max_len)[None, :] < new_len
+    s = jnp.where(valid[:, None, :], s.astype(jnp.float32), NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhk,bkr->bhr", prob, c_kv.astype(jnp.float32))  # (B,H,r)
+    o = jnp.einsum("bhr,rhk->bhk", o_lat.astype(x.dtype), p["w_uv"])  # (B,H,v_hd)
+    y = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None]
+    return y, {"c_kv": c_kv, "k_rope": k_rope, "len": new_len}

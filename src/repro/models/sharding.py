@@ -1,0 +1,284 @@
+"""Logical-axis sharding: MaxText-style rule tables + divisibility-aware
+parameter-spec inference.
+
+Two halves:
+
+* **Activation constraints** — model code calls ``constrain(x, "hidden")``
+  with a *logical* name; a rule table active in context maps it to a
+  ``PartitionSpec``. With no rules active (CPU unit tests) it is identity,
+  so the same model code runs everywhere.
+
+* **Parameter specs** — ``infer_param_specs`` walks a params pytree and
+  assigns a spec per leaf from its *role* (trailing path key: ``wq``,
+  ``embed``…) and its shape. Every mesh-axis assignment is divisibility-
+  checked; a dim that does not divide is replicated instead of erroring,
+  so one rule table covers all 10 architectures (e.g. granite's kv=1 head
+  cannot take the 16-way model axis — its head_dim can).
+
+Stacked layers (``lax.scan`` pytrees with a leading ``L`` dim) are handled
+by indexing roles from the *end* of the shape.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+# Axis *kinds* used by role tables; resolved to concrete mesh axes by rules.
+MODEL = "model"    # tensor-parallel axis
+FSDP = "fsdp"      # fully-sharded-data-parallel axis (weights over data)
+DATA = "data"      # batch axis (activations)
+NONE = None
+
+
+class AxisRules:
+    """Maps axis kinds → concrete mesh axis names (+ sizes for checks)."""
+
+    def __init__(
+        self,
+        mesh_sizes: Dict[str, int],
+        *,
+        model: Optional[str] = "model",
+        fsdp: Optional[str] = "data",
+        data: Sequence[str] = ("data",),
+        extra_activation_rules: Optional[Dict[str, P]] = None,
+    ):
+        self.mesh_sizes = dict(mesh_sizes)
+        self.model = model
+        self.fsdp = fsdp
+        self.data = tuple(a for a in data if a in mesh_sizes)
+        # batch axes: pod (if present) + data
+        if "pod" in mesh_sizes and "pod" not in self.data:
+            self.data = ("pod",) + self.data
+        self.activation_rules: Dict[str, P] = {
+            "hidden": P(self.data, None, None),          # (B, S, D)
+            "logits": P(self.data, None, self.model),    # (B, S, V)
+            "logits_last": P(self.data, self.model),     # (B, V)
+            "decode_hidden": P(self.data, None, None),   # (B, 1, D)
+        }
+        if extra_activation_rules:
+            self.activation_rules.update(extra_activation_rules)
+        # per-role table overrides for §Perf experiments; keys may be
+        # "role" or "role#ndim" (ndim-specific, e.g. stacked MoE experts)
+        self.role_overrides: Dict[str, RoleTable] = {}
+        # the live mesh (set by launch.specs.make_rules) — needed by
+        # shard_map-based layers (expert-parallel MoE)
+        self.mesh = None
+
+    def size(self, kind: Optional[str]) -> int:
+        if kind is None:
+            return 1
+        axis = {"model": self.model, "fsdp": self.fsdp}.get(kind, kind)
+        if axis is None:
+            return 1
+        return self.mesh_sizes.get(axis, 1)
+
+    def axis(self, kind: Optional[str]) -> Optional[str]:
+        if kind is None:
+            return None
+        return {"model": self.model, "fsdp": self.fsdp}.get(kind, kind)
+
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: jnp.ndarray, logical: str) -> jnp.ndarray:
+    """Apply a sharding constraint if a rule table is active; else identity."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.activation_rules.get(logical)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ======================================================================
+# Parameter-spec inference
+# ======================================================================
+#
+# Role tables: per trailing-dim position (negative index), an ordered list
+# of candidate axis kinds. The first candidate whose size divides the dim
+# and whose mesh axis is not already used in this spec wins; otherwise the
+# dim is replicated.
+RoleTable = Dict[int, List[Optional[str]]]
+
+_ROLES: Dict[str, RoleTable] = {
+    # embeddings / head
+    "embed":   {-2: [MODEL], -1: [FSDP]},           # (V, D) vocab-parallel
+    "head":    {-2: [FSDP], -1: [MODEL]},           # (D, V)
+    # GQA attention
+    "wq":      {-3: [FSDP], -2: [MODEL], -1: [NONE]},       # (D, H, hd)
+    "wk":      {-3: [FSDP], -2: [MODEL], -1: [MODEL]},      # (D, KV, hd); hd fallback
+    "wv":      {-3: [FSDP], -2: [MODEL], -1: [MODEL]},
+    "wo":      {-3: [MODEL], -2: [NONE], -1: [FSDP]},       # (H, hd, D)
+    "bq":      {-2: [MODEL], -1: [NONE]},
+    "bk":      {-2: [MODEL], -1: [MODEL]},
+    "bv":      {-2: [MODEL], -1: [MODEL]},
+    # dense FFN
+    "w_gate":  {-2: [FSDP], -1: [MODEL]},           # (D, F)
+    "w_in":    {-2: [FSDP], -1: [MODEL]},
+    "w_out":   {-2: [MODEL], -1: [FSDP]},           # (F, D)
+    # MoE experts (E, D, F) / (E, F, D); router (D, E)
+    "we_gate": {-3: [NONE], -2: [FSDP], -1: [MODEL]},
+    "we_in":   {-3: [NONE], -2: [FSDP], -1: [MODEL]},
+    "we_out":  {-3: [NONE], -2: [MODEL], -1: [FSDP]},
+    "router":  {-2: [FSDP], -1: [NONE]},
+    # MLA (DeepSeek-V2)
+    "w_dq":    {-2: [FSDP], -1: [MODEL]},           # (D, r_q)
+    "w_uq":    {-3: [FSDP], -2: [MODEL], -1: [NONE]},  # (r_q, H, hd)
+    "w_dkv":   {-2: [FSDP], -1: [NONE]},            # (D, r_kv) — latent replicated
+    "w_krope": {-2: [FSDP], -1: [NONE]},
+    "w_uk":    {-3: [NONE], -2: [MODEL], -1: [NONE]},  # (r_kv, H, hd)
+    "w_uv":    {-3: [NONE], -2: [MODEL], -1: [NONE]},
+    # Mamba2
+    "conv_w":   {-1: [MODEL]},                      # (d_conv, channels)
+    # xLSTM
+    "w_qkv":    {-2: [FSDP], -1: [MODEL]},
+    "w_up":     {-2: [FSDP], -1: [MODEL]},
+    "w_down":   {-2: [MODEL], -1: [FSDP]},
+    "w_gates":  {-2: [FSDP], -1: [MODEL]},
+    "r_gates":  {-2: [NONE], -1: [NONE]},
+}
+
+# path keys whose subtree is always replicated (tiny tensors)
+_REPLICATED = re.compile(
+    r"(norm|scale|bias|^gate$|^b_|_b$|alpha|a_log|d_skip|^gn$|^len$)"
+)
+
+
+def _leaf_role(path: Tuple[Any, ...]) -> str:
+    keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    return str(keys[-1]) if keys else ""
+
+
+def _spec_for(role: str, shape: Tuple[int, ...], rules: AxisRules) -> P:
+    ndim = len(shape)
+    table = rules.role_overrides.get(f"{role}#{ndim}") or rules.role_overrides.get(role)
+    if table is None:
+        table = _ROLES.get(role)
+    out: List[Optional[str]] = [None] * ndim
+    used: set = set()
+    if table is None:
+        # generic fallback: last dim model, second-to-last fsdp (≥2D only)
+        table = {-1: [MODEL], -2: [FSDP]} if ndim >= 2 else {}
+    for rel, candidates in sorted(table.items()):
+        idx = ndim + rel
+        if idx < 0:
+            continue
+        for kind in candidates:
+            if kind is None:
+                break
+            axis = rules.axis(kind)
+            size = rules.size(kind)
+            if axis is None or axis in used or size <= 1:
+                continue
+            if shape[idx] % size == 0:
+                out[idx] = axis
+                used.add(axis)
+                break
+    return P(*out)
+
+
+def infer_param_specs(params: PyTree, rules: AxisRules) -> PyTree:
+    """PartitionSpec tree matching ``params`` (works on ShapeDtypeStructs)."""
+
+    def leaf_spec(path, leaf):
+        role = _leaf_role(path)
+        shape = tuple(leaf.shape)
+        if len(shape) == 0 or _REPLICATED.search(role):
+            return P()
+        return _spec_for(role, shape, rules)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def cache_specs(cache: PyTree, rules: AxisRules) -> PyTree:
+    """Specs for serve-time KV/state caches.
+
+    Caches carry a batch dim at position -4/-3/-2 depending on family; we
+    shard the *batch* dim over the data axes and the kv-head/head dim over
+    model when divisible. Identified by shape heuristics: the first dim
+    whose size equals a multiple of the data-axis product is batch-like.
+    Conservative rule: shard dim 1 (batch for stacked (L,B,...) caches, or
+    dim 0 for unstacked) over data; the kv-head dim (ndim-2) over model
+    when divisible, else the trailing head_dim.
+    """
+    data_axes = rules.data
+    dsize = 1
+    for a in data_axes:
+        dsize *= rules.mesh_sizes.get(a, 1)
+    msize = rules.size(MODEL)
+    maxis = rules.axis(MODEL)
+
+    def leaf_spec(path, leaf):
+        shape = tuple(leaf.shape)
+        role = _leaf_role(path)
+        if len(shape) == 0:
+            return P()
+        out: List[Any] = [None] * len(shape)
+        # batch dim: first dim (unstacked) or second (stacked (L,B,...))
+        bdim = 1 if len(shape) >= 3 else 0
+        if shape[bdim] % dsize == 0 and dsize > 1:
+            out[bdim] = data_axes if len(data_axes) > 1 else data_axes[0]
+        if maxis and msize > 1 and len(shape) >= 3 and role not in ("len",):
+            for cand in (len(shape) - 2, len(shape) - 1):
+                if cand > bdim and shape[cand] % msize == 0:
+                    out[cand] = maxis
+                    break
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def named_shardings(mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def bytes_per_device(tree: PyTree, spec_tree: PyTree, rules: AxisRules) -> int:
+    """Napkin-math per-device bytes for a sharded pytree (planning aid)."""
+
+    def leaf_bytes(leaf, spec):
+        n = 1
+        for i, d in enumerate(leaf.shape):
+            axes = spec[i] if i < len(spec) else None
+            if axes is None:
+                sz = 1
+            elif isinstance(axes, tuple):
+                sz = 1
+                for a in axes:
+                    sz *= rules.mesh_sizes.get(a, 1)
+            else:
+                sz = rules.mesh_sizes.get(axes, 1)
+            n *= -(-d // sz)
+        return n * jnp.dtype(leaf.dtype).itemsize
+
+    leaves = jax.tree.leaves(
+        jax.tree.map(leaf_bytes, tree, spec_tree, is_leaf=lambda x: hasattr(x, "shape"))
+    )
+    return int(sum(leaves))

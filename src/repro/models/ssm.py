@@ -1,0 +1,179 @@
+"""Mamba2 — chunked SSD (state-space dual) formulation, TPU-adapted.
+
+The GPU reference implements SSD with fused Triton kernels over sequence
+chunks. The TPU mapping keeps the same chunk decomposition — intra-chunk
+quadratic (MXU-friendly masked matmuls) + inter-chunk recurrent state pass
+(lax.scan over chunks) — with chunk length tuned for VMEM (see
+kernels/mamba_scan.py for the Pallas version; this module is the pure-jnp
+reference and the CPU/dry-run path).
+
+Selective-state dynamics per head h with state N, head dim P:
+  α_t = exp(a_h · Δ_t)          (decay; a_h = −exp(A_log_h) < 0)
+  H_t = α_t · H_{t−1} + Δ_t · B_t ⊗ x_t     (H: N×P)
+  y_t = C_t · H_t + D_h · x_t
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm
+
+
+def mamba_params(key_gen, cfg, dtype) -> Dict[str, Any]:
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    nh = s.n_heads(D)
+    N = s.d_state
+    return {
+        # in_proj → [z (di), x (di), B (N), C (N), dt (nh)]
+        "w_in": dense_init(key_gen(), (D, 2 * di + 2 * N + nh), dtype),
+        "conv_w": dense_init(key_gen(), (s.d_conv, di + 2 * N), dtype, fan_in=s.d_conv),
+        "conv_b": jnp.zeros((di + 2 * N,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_norm": jnp.ones((di,), dtype),
+        "w_out": dense_init(key_gen(), (di, D), dtype),
+    }
+
+
+def _split_in(proj: jnp.ndarray, di: int, N: int, nh: int):
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * N]
+    dt = proj[..., di + di + 2 * N :]
+    return z, xbc, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel causal conv along S. x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K=4: unrolled adds, no gather
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def ssd_chunked(
+    xh: jnp.ndarray,  # (B, S, nh, P) inputs per head
+    dt: jnp.ndarray,  # (B, S, nh) softplus'd step sizes
+    a: jnp.ndarray,  # (nh,) negative decay rates
+    B_ssm: jnp.ndarray,  # (B, S, N)
+    C_ssm: jnp.ndarray,  # (B, S, N)
+    chunk: int,
+    h0: jnp.ndarray = None,  # (B, nh, N, P) initial state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked scan; returns (y (B,S,nh,P), final state (B,nh,N,P)).
+
+    named_scope ⇒ roofline-attributable to kernels/ssd."""
+    with jax.named_scope("kernel_ssd_scan"):
+        return _ssd_chunked_impl(xh, dt, a, B_ssm, C_ssm, chunk, h0)
+
+
+def _ssd_chunked_impl(xh, dt, a, B_ssm, C_ssm, chunk, h0=None):
+    Bb, S, nh, P = xh.shape
+    N = B_ssm.shape[-1]
+    if S % chunk:  # serving prompts: largest divisor ≤ chunk keeps exactness
+        chunk = next(c for c in range(min(chunk, S), 0, -1) if S % c == 0)
+    nc = S // chunk
+
+    xc = xh.reshape(Bb, nc, chunk, nh, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(Bb, nc, chunk, nh).transpose(1, 0, 2, 3)
+    Bc = B_ssm.reshape(Bb, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cc = C_ssm.reshape(Bb, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, nh, N, P), jnp.float32)
+
+    def body(h, xs):
+        xi, dti, Bi, Ci = xs  # (B,L,nh,P), (B,L,nh), (B,L,N), (B,L,N)
+        la = dti * a  # (B,L,nh) log-decay per step (≤0)
+        cum = jnp.cumsum(la, axis=1)  # (B,L,nh)
+        # intra-chunk: T_ij = exp(cum_i − cum_j) for j ≤ i
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,L,L,nh)
+        ii = jnp.arange(xi.shape[1])
+        causal = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        T = jnp.where(causal, jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bin,bjn->bij", Ci, Bi)  # (B,L,L)
+        W = T * CB[..., None] * dti[:, None, :, :]  # (B,L_i,L_j,nh)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W, xi.astype(jnp.float32))
+        # inter-chunk: y_i += C_i · (exp(cum_i) · h_prev)
+        y_inter = jnp.einsum(
+            "bin,bhnp,bih->bihp", Ci, h, jnp.exp(cum)
+        )
+        # state update: h ← exp(cum_L)·h + Σ_j exp(cum_L − cum_j)·Δ_j·(B_j ⊗ x_j)
+        last = cum[:, -1:, :]  # (B,1,nh)
+        to_end = jnp.exp(last - cum) * dti  # (B,L,nh)
+        h_add = jnp.einsum("bjh,bjn,bjhp->bhnp", to_end, Bi, xi.astype(jnp.float32))
+        h_new = jnp.exp(last[:, 0, :])[:, :, None, None] * h + h_add
+        return h_new, (y_intra + y_inter)
+
+    h_final, yc = jax.lax.scan(body, h0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bb, S, nh, P)
+    return y, h_final
+
+
+def mamba_block(
+    p: Dict[str, Any], x: jnp.ndarray, cfg
+) -> jnp.ndarray:
+    """Full Mamba2 mixer: (B,S,D) -> (B,S,D)."""
+    s = cfg.ssm
+    D = cfg.d_model
+    di, nh, N = s.d_inner(D), s.n_heads(D), s.d_state
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dt = _split_in(proj, di, N, nh)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xin, B_ssm, C_ssm = xbc[..., :di], xbc[..., di : di + N], xbc[..., di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xin.reshape(*xin.shape[:2], nh, s.head_dim)
+    y, _ = ssd_chunked(xh, dt, a, B_ssm, C_ssm, chunk=s.chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"])
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"])
+
+
+# -- decode (single token) ----------------------------------------------------------
+
+def mamba_init_cache(cfg, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    s = cfg.ssm
+    D = cfg.d_model
+    di, nh, N = s.d_inner(D), s.n_heads(D), s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di + 2 * N), dtype),
+        "h": jnp.zeros((batch, nh, N, s.head_dim), jnp.float32),
+    }
+
+
+def mamba_decode(
+    p: Dict[str, Any], x: jnp.ndarray, cache: Dict[str, jnp.ndarray], cfg
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, 1, D) one token; O(1) state update."""
+    s = cfg.ssm
+    D = cfg.d_model
+    di, nh, N = s.d_inner(D), s.n_heads(D), s.d_state
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dt = _split_in(proj, di, N, nh)
+    # conv over [cached K−1 inputs, current]
+    win = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    xin, B_ssm, C_ssm = xbc1[..., :di], xbc1[..., di : di + N], xbc1[..., di + N :]
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,nh)
+    a = -jnp.exp(p["a_log"])
+    alpha = jnp.exp(dt1 * a)  # (B,nh)
+    xh = xin[:, 0].reshape(-1, nh, s.head_dim)  # (B,nh,P)
+    h = cache["h"] * alpha[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt1, B_ssm[:, 0], xh.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhnp->bhp", C_ssm[:, 0], h)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"conv": win[:, 1:], "h": h}

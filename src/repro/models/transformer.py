@@ -1,0 +1,337 @@
+"""Model assembly for all six families: parameter init (eval_shape-able for
+the allocation-free dry-run), training forward, prefill, and single-token
+decode — every per-layer loop is a ``lax.scan`` over stacked parameters so
+the lowered HLO stays compact at 96+ layers.
+
+Families → block plans:
+  dense   [attn + mlp] × L                           (granite/nemotron/qwen*)
+  moe     [attn|MLA + moe] × L (first-k dense)        (mixtral/deepseek)
+  vlm     [(self ×(k−1)) + cross] × L/k               (llama-3.2-vision)
+  ssm     [(mLSTM ×(k−1)) + sLSTM] × L/k              (xlstm)
+  hybrid  [mamba2 (+ shared attn every k)] × L        (zamba2)
+  audio   encoder [attn+mlp] × Le; decoder [self + cross + mlp] × Ld
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding
+from .attention import (
+    cross_attention,
+    cross_attn_params,
+    gqa_attention,
+    gqa_decode,
+    gqa_params,
+    gqa_project_qkv,
+    mla_attention,
+    mla_decode,
+    mla_params,
+)
+from .common import KeyGen, apply_norm, dense_init, embed_init, norm_params
+from .config import ModelConfig
+from .mlp import mlp, mlp_params, moe_layer, moe_params
+from .ssm import mamba_block, mamba_decode, mamba_init_cache, mamba_params
+from .xlstm import (
+    mlstm_block,
+    mlstm_decode,
+    mlstm_init_cache,
+    mlstm_params,
+    slstm_block,
+    slstm_decode,
+    slstm_init_cache,
+    slstm_params,
+)
+
+PyTree = Any
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ======================================================================== init
+
+def _dense_layer_init(key, cfg: ModelConfig, d_ff: int, use_mla: bool) -> PyTree:
+    kg = KeyGen(key)
+    dtype = _dt(cfg)
+    attn = mla_params(kg, cfg, dtype) if use_mla else gqa_params(kg, cfg, dtype)
+    return {
+        "attn_norm": norm_params(cfg.norm, cfg.d_model, dtype),
+        "attn": attn,
+        "mlp_norm": norm_params(cfg.norm, cfg.d_model, dtype),
+        "mlp": mlp_params(kg, cfg.d_model, d_ff, cfg.activation, dtype),
+    }
+
+
+def _moe_layer_init(key, cfg: ModelConfig) -> PyTree:
+    kg = KeyGen(key)
+    dtype = _dt(cfg)
+    attn = mla_params(kg, cfg, dtype) if cfg.mla else gqa_params(kg, cfg, dtype)
+    return {
+        "attn_norm": norm_params(cfg.norm, cfg.d_model, dtype),
+        "attn": attn,
+        "mlp_norm": norm_params(cfg.norm, cfg.d_model, dtype),
+        "moe": moe_params(kg, cfg, dtype),
+    }
+
+
+def _cross_layer_init(key, cfg: ModelConfig, gated: bool) -> PyTree:
+    kg = KeyGen(key)
+    dtype = _dt(cfg)
+    return {
+        "attn_norm": norm_params(cfg.norm, cfg.d_model, dtype),
+        "attn": cross_attn_params(kg, cfg, dtype, gated=gated),
+        "mlp_norm": norm_params(cfg.norm, cfg.d_model, dtype),
+        "mlp": mlp_params(kg, cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+    }
+
+
+def _stack(init_fn, key, n: int) -> PyTree:
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    kg = KeyGen(key)
+    dtype = _dt(cfg)
+    V, D = cfg.padded_vocab, cfg.d_model
+    params: Dict[str, PyTree] = {
+        "embed": embed_init(kg(), (V, D), dtype),
+        "final_norm": norm_params(cfg.norm, D, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(kg(), (D, V), dtype)
+
+    fam = cfg.family
+    if fam == "dense":
+        params["blocks"] = _stack(
+            lambda k: _dense_layer_init(k, cfg, cfg.d_ff, use_mla=False), kg(), cfg.n_layers
+        )
+    elif fam == "moe":
+        m = cfg.moe
+        if m.first_k_dense:
+            params["dense_blocks"] = _stack(
+                lambda k: _dense_layer_init(k, cfg, m.dense_ff, use_mla=cfg.mla is not None),
+                kg(),
+                m.first_k_dense,
+            )
+        params["blocks"] = _stack(
+            lambda k: _moe_layer_init(k, cfg), kg(), cfg.n_layers - m.first_k_dense
+        )
+    elif fam == "vlm":
+        k_every = cfg.cross_attn_every
+        n_cross = cfg.n_layers // k_every
+        n_self = cfg.n_layers - n_cross
+        assert n_self % n_cross == 0
+        params["blocks"] = _stack(
+            lambda k: _dense_layer_init(k, cfg, cfg.d_ff, use_mla=False), kg(), n_self
+        )
+        params["cross_blocks"] = _stack(
+            lambda k: _cross_layer_init(k, cfg, gated=True), kg(), n_cross
+        )
+    elif fam == "ssm":
+        x = cfg.xlstm
+        n_s = cfg.n_layers // x.slstm_every if x.slstm_every else 0
+        n_m = cfg.n_layers - n_s
+        kgm, kgs = kg(), kg()
+        params["mlstm_blocks"] = _stack(
+            lambda k: {
+                "norm": norm_params(cfg.norm, D, dtype),
+                "cell": mlstm_params(KeyGen(k), cfg, dtype),
+            },
+            kgm,
+            n_m,
+        )
+        if n_s:
+            params["slstm_blocks"] = _stack(
+                lambda k: {
+                    "norm": norm_params(cfg.norm, D, dtype),
+                    "cell": slstm_params(KeyGen(k), cfg, dtype),
+                },
+                kgs,
+                n_s,
+            )
+    elif fam == "hybrid":
+        params["mamba_blocks"] = _stack(
+            lambda k: {
+                "norm": norm_params(cfg.norm, D, dtype),
+                "mixer": mamba_params(KeyGen(k), cfg, dtype),
+            },
+            kg(),
+            cfg.n_layers,
+        )
+        # ONE shared transformer block (weights reused at every application)
+        params["shared_attn"] = _dense_layer_init(kg(), cfg, cfg.d_ff, use_mla=False)
+    elif fam == "audio":
+        params["enc_embed_norm"] = norm_params(cfg.norm, D, dtype)
+        params["encoder"] = _stack(
+            lambda k: _dense_layer_init(k, cfg, cfg.d_ff, use_mla=False),
+            kg(),
+            cfg.n_encoder_layers,
+        )
+        params["enc_final_norm"] = norm_params(cfg.norm, D, dtype)
+        params["blocks"] = _stack(
+            lambda k: _dense_layer_init(k, cfg, cfg.d_ff, use_mla=False), kg(), cfg.n_layers
+        )
+        params["cross_blocks"] = _stack(
+            lambda k: _cross_layer_init(k, cfg, gated=False), kg(), cfg.n_layers
+        )
+    else:
+        raise ValueError(fam)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    """ShapeDtypeStruct tree — no allocation (dry-run path)."""
+    return jax.eval_shape(functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+# ======================================================================== blocks
+
+def _dense_block(bp: PyTree, h: jnp.ndarray, positions, cfg: ModelConfig, *, causal=True):
+    use_mla = cfg.mla is not None and "w_dq" in bp["attn"]
+    a_in = apply_norm(h, bp["attn_norm"], cfg.norm)
+    if use_mla:
+        h = h + mla_attention(bp["attn"], a_in, positions, cfg)
+    else:
+        h = h + gqa_attention(bp["attn"], a_in, positions, cfg, causal=causal)
+    h = sharding.constrain(h, "hidden")
+    m_in = apply_norm(h, bp["mlp_norm"], cfg.norm)
+    if "moe" in bp:
+        h = h + moe_layer(bp["moe"], m_in, cfg)
+    else:
+        h = h + mlp(bp["mlp"], m_in, cfg.activation)
+    return sharding.constrain(h, "hidden")
+
+
+def _cross_block(bp: PyTree, h: jnp.ndarray, memory: jnp.ndarray, cfg: ModelConfig):
+    a_in = apply_norm(h, bp["attn_norm"], cfg.norm)
+    h = h + cross_attention(bp["attn"], a_in, memory, cfg)
+    m_in = apply_norm(h, bp["mlp_norm"], cfg.norm)
+    h = h + mlp(bp["mlp"], m_in, cfg.activation)
+    return sharding.constrain(h, "hidden")
+
+
+def _remat(fn):
+    """Gradient checkpointing on the block body (full recompute in bwd)."""
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+# ======================================================================== forward
+
+def forward(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, S) int32
+    *,
+    memory: Optional[jnp.ndarray] = None,  # vlm vision / audio frames (B, Sm, D)
+) -> jnp.ndarray:
+    """Teacher-forcing forward → logits (B, S, V)."""
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(_dt(cfg))
+    h = sharding.constrain(h, "hidden")
+    positions = jnp.arange(S)[None, :]
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        block = _remat(lambda bp, h: _dense_block(bp, h, positions, cfg))
+        if fam == "moe" and cfg.moe.first_k_dense:
+            h, _ = jax.lax.scan(lambda h, bp: (block(bp, h), None), h, params["dense_blocks"])
+        h, _ = jax.lax.scan(lambda h, bp: (block(bp, h), None), h, params["blocks"])
+
+    elif fam == "vlm":
+        k_every = cfg.cross_attn_every
+        n_cross = cfg.n_layers // k_every
+        n_self_per = k_every - 1
+        self_grouped = jax.tree.map(
+            lambda x: x.reshape(n_cross, n_self_per, *x.shape[1:]), params["blocks"]
+        )
+        mem = memory.astype(_dt(cfg))
+        self_block = _remat(lambda bp, h: _dense_block(bp, h, positions, cfg))
+        cross_block = _remat(lambda bp, h, mem: _cross_block(bp, h, mem, cfg))
+
+        def super_body(h, bps):
+            selfs, cross = bps
+            h, _ = jax.lax.scan(lambda h, bp: (self_block(bp, h), None), h, selfs)
+            h = cross_block(cross, h, mem)
+            return h, None
+
+        h, _ = jax.lax.scan(super_body, h, (self_grouped, params["cross_blocks"]))
+
+    elif fam == "ssm":
+        x = cfg.xlstm
+        m_block = _remat(
+            lambda bp, h: h + mlstm_block(bp["cell"], apply_norm(h, bp["norm"], cfg.norm), cfg)
+        )
+        if x.slstm_every:
+            groups = cfg.n_layers // x.slstm_every
+            per = x.slstm_every - 1
+            m_grouped = jax.tree.map(
+                lambda a: a.reshape(groups, per, *a.shape[1:]), params["mlstm_blocks"]
+            )
+            s_block = _remat(
+                lambda bp, h: h
+                + slstm_block(bp["cell"], apply_norm(h, bp["norm"], cfg.norm), cfg)
+            )
+
+            def super_body(h, bps):
+                ms, sl = bps
+                h, _ = jax.lax.scan(lambda h, bp: (m_block(bp, h), None), h, ms)
+                h = s_block(sl, h)
+                return sharding.constrain(h, "hidden"), None
+
+            h, _ = jax.lax.scan(super_body, h, (m_grouped, params["slstm_blocks"]))
+        else:
+            h, _ = jax.lax.scan(
+                lambda h, bp: (m_block(bp, h), None), h, params["mlstm_blocks"]
+            )
+
+    elif fam == "hybrid":
+        every = cfg.shared_attn_every
+        shared = params["shared_attn"]
+        mamba = _remat(
+            lambda bp, h: h + mamba_block(bp["mixer"], apply_norm(h, bp["norm"], cfg.norm), cfg)
+        )
+        shared_block = _remat(lambda h: _dense_block(shared, h, positions, cfg))
+
+        def body(h, xs):
+            bp, idx = xs
+            h = mamba(bp, h)
+            if every:
+                h = jax.lax.cond(
+                    (idx % every) == (every - 1), shared_block, lambda h: h, h
+                )
+            return sharding.constrain(h, "hidden"), None
+
+        idxs = jnp.arange(cfg.n_layers)
+        h, _ = jax.lax.scan(body, h, (params["mamba_blocks"], idxs))
+
+    elif fam == "audio":
+        # encoder over frame embeddings (bidirectional)
+        mem = apply_norm(memory.astype(_dt(cfg)), params["enc_embed_norm"], cfg.norm)
+        enc_pos = jnp.arange(mem.shape[1])[None, :]
+        enc_block = _remat(lambda bp, m: _dense_block(bp, m, enc_pos, cfg, causal=False))
+        mem, _ = jax.lax.scan(lambda m, bp: (enc_block(bp, m), None), mem, params["encoder"])
+        mem = apply_norm(mem, params["enc_final_norm"], cfg.norm)
+
+        self_block = _remat(lambda bp, h: _dense_block(bp, h, positions, cfg))
+        cross_block = _remat(lambda bp, h, mem: _cross_block(bp, h, mem, cfg))
+
+        def dec_body(h, bps):
+            bp_self, bp_cross = bps
+            h = self_block(bp_self, h)
+            h = cross_block(bp_cross, h, mem)
+            return h, None
+
+        h, _ = jax.lax.scan(dec_body, h, (params["blocks"], params["cross_blocks"]))
+    else:
+        raise ValueError(fam)
+
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    return sharding.constrain(logits, "logits")

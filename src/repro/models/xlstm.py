@@ -1,0 +1,307 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, sequential recurrence with block-diagonal recurrent weights).
+
+mLSTM cell (stabilized exponential gating), per head with key/value dim P:
+  m_t = max(f̃_t + m_{t−1}, ĩ_t)                     (stabilizer)
+  i'_t = exp(ĩ_t − m_t),  f'_t = exp(f̃_t + m_{t−1} − m_t)
+  C_t = f'_t C_{t−1} + i'_t v_t k_tᵀ                 (P×P matrix state)
+  n_t = f'_t n_{t−1} + i'_t k_t
+  h_t = (C_t q_t) / max(|n_tᵀ q_t|, 1)
+
+The chunkwise form mirrors the Mamba2 SSD decomposition: intra-chunk masked
+quadratic + inter-chunk carried (C, n, m) — the same TPU mapping (MXU
+matmuls per chunk, lax.scan across chunks).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm
+
+
+# ---------------------------------------------------------------- mLSTM ----
+
+def mlstm_params(key_gen, cfg, dtype) -> Dict[str, Any]:
+    x = cfg.xlstm
+    D = cfg.d_model
+    inner = int(x.mlstm_proj_factor * D)
+    nh = cfg.n_heads
+    return {
+        "w_up": dense_init(key_gen(), (D, 2 * inner), dtype),
+        "conv_w": dense_init(key_gen(), (4, inner), dtype, fan_in=4),
+        "conv_b": jnp.zeros((inner,), dtype),
+        "wq": dense_init(key_gen(), (inner, inner), dtype),
+        "wk": dense_init(key_gen(), (inner, inner), dtype),
+        "wv": dense_init(key_gen(), (inner, inner), dtype),
+        "w_if": dense_init(key_gen(), (inner, 2 * nh), dtype),  # input/forget gates
+        "out_norm": jnp.ones((inner,), dtype),
+        "w_down": dense_init(key_gen(), (inner, D), dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def mlstm_chunked(
+    q: jnp.ndarray,  # (B, S, nh, P)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    i_gate: jnp.ndarray,  # (B, S, nh) pre-activation ĩ
+    f_gate: jnp.ndarray,  # (B, S, nh) pre-activation f̃ (log-sigmoid applied here)
+    chunk: int,
+    state: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]:
+    # named_scope ⇒ roofline-attributable to a chunkwise mLSTM kernel
+    # (same VMEM-resident structure as kernels/ssd)
+    with jax.named_scope("kernel_mlstm_scan"):
+        return _mlstm_chunked_impl(q, k, v, i_gate, f_gate, chunk, state)
+
+
+def _mlstm_chunked_impl(q, k, v, i_gate, f_gate, chunk, state=None):
+    B, S, nh, P = q.shape
+    if S % chunk:  # serving prompts: largest divisor ≤ chunk keeps exactness
+        chunk = next(c for c in range(min(chunk, S), 0, -1) if S % c == 0)
+    nc = S // chunk
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))  # (B,S,nh)
+    i_gate = i_gate.astype(jnp.float32)
+
+    qc = q.reshape(B, nc, chunk, nh, P).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nc, chunk, nh, P).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, nh, P).transpose(1, 0, 2, 3, 4)
+    ic = i_gate.reshape(B, nc, chunk, nh).transpose(1, 0, 2, 3)
+    fc = logf.reshape(B, nc, chunk, nh).transpose(1, 0, 2, 3)
+
+    if state is None:
+        C0 = jnp.zeros((B, nh, P, P), jnp.float32)
+        n0 = jnp.zeros((B, nh, P), jnp.float32)
+        m0 = jnp.full((B, nh), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    scale = P ** -0.5
+
+    def body(carry, xs):
+        C, n, m = carry
+        qi, ki, vi, ii, fi = xs
+        L = qi.shape[1]
+        cumf = jnp.cumsum(fi, axis=1)  # (B,L,nh) Σ log f within chunk
+        # log weight of source j seen at target i (j ≤ i):
+        #   w_ij = cumf_i − cumf_j + ĩ_j        (decay from j+1..i, gate at j)
+        # log weight of carried state at target i: m + cumf_i
+        src = ii - cumf  # (B,L,nh) per-source summand
+        m_local = jnp.max(src, axis=1)  # (B,nh) running stabilizer candidate
+        m_new = jnp.maximum(m + 0.0, m_local)  # chunk-level stabilizer
+        # intra-chunk weights (stabilized by m_new per target row via cumf_i)
+        idx = jnp.arange(L)
+        causal = (idx[:, None] >= idx[None, :])[None, :, :, None]
+        logw = cumf[:, :, None, :] + src[:, None, :, :] - m_new[:, None, None, :]
+        w = jnp.where(causal, jnp.exp(logw), 0.0)  # (B,Li,Lj,nh)
+        qk = jnp.einsum("bihp,bjhp->bijh", qi.astype(jnp.float32), ki.astype(jnp.float32))
+        Wg = w * qk * scale
+        y_intra = jnp.einsum("bijh,bjhp->bihp", Wg, vi.astype(jnp.float32))
+        n_intra = jnp.einsum("bijh,bjhp->bihp", w, ki.astype(jnp.float32))
+        # inter-chunk: carried state decayed to each target
+        carry_w = jnp.exp(cumf + m[:, None, :] - m_new[:, None, :])  # (B,L,nh)
+        y_inter = jnp.einsum(
+            "bihp,bhpr->bihr", qi.astype(jnp.float32) * scale, C
+        ) * carry_w[..., None]
+        n_inter = n[:, None, :, :] * carry_w[..., None]
+        num = y_intra + y_inter
+        nvec = n_intra + n_inter
+        denom = jnp.abs(jnp.einsum("bihp,bihp->bih", nvec, qi.astype(jnp.float32) * scale))
+        y = num / jnp.maximum(denom, jnp.exp(-m_new)[:, None, :])[..., None]
+        # state update to end of chunk
+        last = cumf[:, -1, :]  # (B,nh)
+        to_end = jnp.exp(last[:, None, :] - cumf + ii - m_new[:, None, :])  # (B,L,nh)
+        C_new = C * jnp.exp(last + m - m_new)[..., None, None] + jnp.einsum(
+            "bjh,bjhp,bjhr->bhpr", to_end, vi.astype(jnp.float32), ki.astype(jnp.float32)
+        )
+        n_new = n * jnp.exp(last + m - m_new)[..., None] + jnp.einsum(
+            "bjh,bjhp->bhp", to_end, ki.astype(jnp.float32)
+        )
+        return (C_new, n_new, m_new), y
+
+    (C, n, m), yc = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, P)
+    return y, (C, n, m)
+
+
+def mlstm_block(p: Dict[str, Any], x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """(B,S,D) -> (B,S,D)."""
+    D = cfg.d_model
+    nh = cfg.n_heads
+    inner = int(cfg.xlstm.mlstm_proj_factor * D)
+    P = inner // nh
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    xg, xc = up[..., :inner], up[..., inner:]
+    xconv = jax.nn.silu(_causal_conv(xc, p["conv_w"], p["conv_b"]))
+    q = jnp.einsum("bse,ef->bsf", xconv, p["wq"]).reshape(*x.shape[:2], nh, P)
+    k = jnp.einsum("bse,ef->bsf", xconv, p["wk"]).reshape(*x.shape[:2], nh, P)
+    v = jnp.einsum("bse,ef->bsf", xc, p["wv"]).reshape(*x.shape[:2], nh, P)
+    gates = jnp.einsum("bse,eg->bsg", xconv, p["w_if"])
+    i_gate, f_gate = gates[..., :nh], gates[..., nh:]
+    y, _ = mlstm_chunked(q, k, v, i_gate, f_gate, chunk=cfg.xlstm.chunk)
+    y = y.reshape(*x.shape[:2], inner).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"]) * jax.nn.silu(xg)
+    return jnp.einsum("bse,ed->bsd", y, p["w_down"])
+
+
+def mlstm_init_cache(cfg, batch: int) -> Dict[str, jnp.ndarray]:
+    D = cfg.d_model
+    nh = cfg.n_heads
+    inner = int(cfg.xlstm.mlstm_proj_factor * D)
+    P = inner // nh
+    return {
+        "conv": jnp.zeros((batch, 3, inner), jnp.float32),
+        "C": jnp.zeros((batch, nh, P, P), jnp.float32),
+        "n": jnp.zeros((batch, nh, P), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(
+    p: Dict[str, Any], x: jnp.ndarray, cache: Dict[str, jnp.ndarray], cfg
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    D = cfg.d_model
+    nh = cfg.n_heads
+    inner = int(cfg.xlstm.mlstm_proj_factor * D)
+    P = inner // nh
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    xg, xc = up[..., :inner], up[..., inner:]
+    win = jnp.concatenate([cache["conv"], xc.astype(jnp.float32)], axis=1)
+    xconv = jax.nn.silu(jnp.einsum("bkc,kc->bc", win, p["conv_w"].astype(jnp.float32)) + p["conv_b"])
+    q = (xconv @ p["wq"]).reshape(-1, nh, P).astype(jnp.float32)
+    k = (xconv @ p["wk"]).reshape(-1, nh, P).astype(jnp.float32)
+    v = jnp.einsum("bse,ef->bsf", xc, p["wv"])[:, 0].reshape(-1, nh, P).astype(jnp.float32)
+    gates = xconv @ p["w_if"].astype(jnp.float32)
+    i_t, f_t = gates[:, :nh], gates[:, nh:]
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + cache["m"], i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(logf + cache["m"] - m_new)
+    scale = P ** -0.5
+    C = f_p[..., None, None] * cache["C"] + i_p[..., None, None] * jnp.einsum(
+        "bhp,bhr->bhpr", v, k
+    )
+    n = f_p[..., None] * cache["n"] + i_p[..., None] * k
+    num = jnp.einsum("bhpr,bhr->bhp", C, q * scale)
+    den = jnp.abs(jnp.einsum("bhp,bhp->bh", n, q * scale))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    y = h.reshape(-1, 1, inner).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"]) * jax.nn.silu(xg)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"])
+    return out, {"conv": win[:, 1:], "C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------- sLSTM ----
+
+def slstm_params(key_gen, cfg, dtype) -> Dict[str, Any]:
+    D = cfg.d_model
+    nh = cfg.n_heads
+    hd = D // nh
+    ff = int(cfg.xlstm.slstm_ff_factor * D)
+    return {
+        "conv_w": dense_init(key_gen(), (4, D), dtype, fan_in=4),
+        "conv_b": jnp.zeros((D,), dtype),
+        # input projections for gates z, i, f, o
+        "w_gates": dense_init(key_gen(), (D, 4 * D), dtype),
+        # block-diagonal recurrent weights per head: (4 gates, nh, hd, hd)
+        "r_gates": dense_init(key_gen(), (4, nh, hd, hd), dtype, fan_in=hd),
+        "gn": jnp.ones((D,), dtype),
+        "ff_gate": dense_init(key_gen(), (D, ff), dtype),
+        "ff_up": dense_init(key_gen(), (D, ff), dtype),
+        "ff_down": dense_init(key_gen(), (ff, D), dtype),
+    }
+
+
+def _slstm_cell(p, xg, state):
+    """One step. xg: (B, 4D) input-gate preactivations; state pytree."""
+    h, c, n, m = state  # h,c,n: (B,nh,hd); m: (B,nh)
+    B = xg.shape[0]
+    nh, hd = h.shape[1], h.shape[2]
+    rec = jnp.einsum("bhp,ghpr->bghr", h, p["r_gates"].astype(jnp.float32))
+    pre = xg.astype(jnp.float32).reshape(B, 4, nh, hd) + rec
+    z_t = jnp.tanh(pre[:, 0])
+    i_t = pre[:, 1].mean(-1)  # per-head scalar gates
+    f_t = pre[:, 2].mean(-1)
+    o_t = jax.nn.sigmoid(pre[:, 3])
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    i_p = jnp.exp(i_t - m_new)[..., None]
+    f_p = jnp.exp(logf + m - m_new)[..., None]
+    c_new = f_p * c + i_p * z_t
+    n_new = f_p * n + i_p
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_block(p: Dict[str, Any], x: jnp.ndarray, cfg) -> jnp.ndarray:
+    D = cfg.d_model
+    nh = cfg.n_heads
+    hd = D // nh
+    B, S, _ = x.shape
+    xconv = jax.nn.silu(_causal_conv(x, p["conv_w"], p["conv_b"]))
+    xg = jnp.einsum("bsd,dg->bsg", xconv, p["w_gates"])  # (B,S,4D)
+
+    state0 = (
+        jnp.zeros((B, nh, hd), jnp.float32),
+        jnp.zeros((B, nh, hd), jnp.float32),
+        jnp.zeros((B, nh, hd), jnp.float32),
+        jnp.full((B, nh), -1e30, jnp.float32),
+    )
+
+    def step(state, xg_t):
+        new = _slstm_cell(p, xg_t, state)
+        return new, new[0]
+
+    _, hs = jax.lax.scan(step, state0, xg.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    y = rms_norm(y, p["gn"])
+    # gated FFN (factor 4/3)
+    ff = jax.nn.silu(jnp.einsum("bsd,df->bsf", y, p["ff_gate"])) * jnp.einsum(
+        "bsd,df->bsf", y, p["ff_up"]
+    )
+    return jnp.einsum("bsf,fd->bsd", ff, p["ff_down"])
+
+
+def slstm_init_cache(cfg, batch: int) -> Dict[str, jnp.ndarray]:
+    D = cfg.d_model
+    nh = cfg.n_heads
+    hd = D // nh
+    return {
+        "conv": jnp.zeros((batch, 3, D), jnp.float32),
+        "h": jnp.zeros((batch, nh, hd), jnp.float32),
+        "c": jnp.zeros((batch, nh, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode(
+    p: Dict[str, Any], x: jnp.ndarray, cache: Dict[str, jnp.ndarray], cfg
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    D = cfg.d_model
+    win = jnp.concatenate([cache["conv"], x[:, 0:1].astype(jnp.float32)], axis=1)
+    xconv = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win, p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    )
+    xg = xconv @ p["w_gates"].astype(jnp.float32)
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h, c, n, m = _slstm_cell(p, xg, state)
+    B = x.shape[0]
+    y = h.reshape(B, 1, D).astype(x.dtype)
+    y = rms_norm(y, p["gn"])
+    ff = jax.nn.silu(jnp.einsum("bsd,df->bsf", y, p["ff_gate"])) * jnp.einsum(
+        "bsd,df->bsf", y, p["ff_up"]
+    )
+    out = jnp.einsum("bsf,fd->bsd", ff, p["ff_down"])
+    return out, {"conv": win[:, 1:], "h": h, "c": c, "n": n, "m": m}

@@ -1,0 +1,45 @@
+"""Task-type registry: ⟨type, config⟩ → executable JAX operator.
+
+Real RIoT-style IoT task logic (:mod:`repro.ops.riot`), deterministic
+synthetic sources (:mod:`repro.ops.sources`), digest sinks
+(:mod:`repro.ops.sinks`), and the OPMW π fallback. Model-block operators
+(embed / layer-group / head for multi-tenant LM serving) are registered by
+:mod:`repro.serve.model_ops` when imported.
+"""
+from . import riot  # noqa: F401 — populates the registry
+from .base import (
+    EVENT_WIDTH,
+    Operator,
+    make_operator,
+    parse_config,
+    register,
+    register_fallback,
+    registered_types,
+    stateless,
+)
+from .sinks import make_sink
+from .sources import make_source
+
+
+def operator_for_task(task, batch: int = 32) -> Operator:
+    """Instantiate the operator for a concrete task (source/sink aware)."""
+    if task.is_source:
+        return make_source(task.type, batch=batch)
+    if task.is_sink:
+        return make_sink(task.type)
+    return make_operator(task.type, task.config)
+
+
+__all__ = [
+    "EVENT_WIDTH",
+    "Operator",
+    "make_operator",
+    "make_sink",
+    "make_source",
+    "operator_for_task",
+    "parse_config",
+    "register",
+    "register_fallback",
+    "registered_types",
+    "stateless",
+]

@@ -1,0 +1,39 @@
+"""Sink operators — accumulate an output digest.
+
+A sink's state carries ``(count, checksum, last)``: the number of batches
+consumed, a running float checksum of every payload, and the last batch.
+The checksum is the *observable output stream identity*: the paper requires
+that running-DAG outputs be indistinguishable from standalone execution, so
+the test suite compares sink checksums between Default and Reuse runs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from .base import EVENT_WIDTH, Operator
+
+
+def make_sink(type_name: str) -> Operator:
+    def init_state(batch: int):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "checksum": jnp.zeros((), jnp.float32),
+            "last": jnp.zeros((batch, EVENT_WIDTH), jnp.float32),
+        }
+
+    def apply(state, x):
+        return (
+            {
+                "count": state["count"] + 1,
+                # weighted fold so the checksum is order-sensitive
+                "checksum": state["checksum"] * 0.5 + jnp.sum(x, dtype=jnp.float32),
+                "last": x,
+            },
+            None,
+        )
+
+    return Operator(
+        type=type_name, init_state=init_state, apply=apply, cost_weight=0.3, is_sink=True
+    )

@@ -1,0 +1,362 @@
+"""Trip-count-aware HLO cost extraction.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, so any
+``lax.scan`` model (layers, grad-accum) is undercounted by the trip count.
+This parser walks the partitioned HLO text from ENTRY, multiplying every
+computation's costs by the product of enclosing ``known_trip_count``s, and
+derives:
+
+  * ``flops``            — 2·M·N·K for every dot (+ conv), loop-corrected
+  * ``hbm_bytes``        — Σ (operand + output bytes) of every *top-level*
+                            executed instruction (fusion internals excluded:
+                            a fusion's HBM traffic is its boundary)
+  * ``collective``       — per type: op count, operand bytes, and *wire*
+                            bytes per device using ring factors
+                            (all-reduce 2(g−1)/g, all-gather/reduce-scatter
+                            (g−1)/g, all-to-all (g−1)/g, permute 1×)
+
+All numbers are per-device (the module is the post-SPMD partition).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+# "%name = TYPE opcode(" where TYPE may be a (possibly nested) tuple
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\(.*?\))|(?:\S+))\s+([\w\-]+)\("
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    out_type: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+    @property
+    def out_bytes(self) -> int:
+        return _nbytes(self.out_type)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # %name -> type str
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        if cur is None:
+            m = _COMP_HDR_RE.match(s)
+            if m and s.endswith("{") and "->" in s:
+                cur = Computation(m.group(1))
+                if s.startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR_RE.match(s)
+        if not im:
+            continue
+        name, out_type, opcode = im.group(1), im.group(2).strip(), im.group(3)
+        # operand names: inside the first paren group
+        rest = s[im.end():]
+        depth = 1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args, attrs = rest[:i], rest[i + 1 :]
+                    break
+        else:
+            args, attrs = rest, ""
+        operands = _NAME_RE.findall(args)
+        inst = Instr(name, out_type, opcode, operands, attrs)
+        cur.instrs.append(inst)
+        cur.shapes[name] = out_type
+    return comps, entry
+
+
+def _group_size(attrs: str, default: int = 1) -> int:
+    # iota form: replica_groups=[G,S]<=[N] → group size S
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]", attrs)
+    if m:
+        return int(m.group(2))
+    # explicit form: replica_groups={{0,1,2,3},{...}}
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _trip_count(attrs: str) -> int:
+    m = re.search(r'"known_trip_count":\s*\{"n":"(\d+)"', attrs)
+    return int(m.group(1)) if m else 1
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+_COLLECTIVES = tuple(_WIRE_FACTOR)
+
+
+def _dot_flops(inst: Instr, comp: Computation) -> float:
+    out_shapes = _shape_list(inst.out_type)
+    if not out_shapes:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
+    lhs_type = comp.shapes.get(inst.operands[0]) if inst.operands else None
+    k = 1
+    if m and lhs_type:
+        lhs_shapes = _shape_list(lhs_type)
+        if lhs_shapes:
+            dims = lhs_shapes[0][1]
+            for ci in m.group(1).split(","):
+                if ci:
+                    idx = int(ci)
+                    if idx < len(dims):
+                        k *= dims[idx]
+    return 2.0 * out_elems * k
+
+
+def analyze(text: str, top_k: int = 0) -> Dict[str, Any]:
+    comps, entry = parse_hlo(text)
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes: Dict[str, float] = defaultdict(float)
+    coll_wire: Dict[str, float] = defaultdict(float)
+    coll_count: Dict[str, float] = defaultdict(float)
+    hbm_by_site: Dict[str, float] = defaultdict(float)  # op_name metadata site
+    hbm_by_scope: Dict[str, float] = defaultdict(float)  # named_scope markers
+    seen_stack: List[str] = []
+
+    def _site(inst: Instr) -> str:
+        m = re.search(r'op_name="([^"]*)"', inst.attrs)
+        site = m.group(1) if m else inst.opcode
+        return f"{inst.opcode} @ {site[:110]}"
+
+    def _scope(inst: Instr) -> Optional[str]:
+        m = re.search(r'op_name="[^"]*?(kernel_\w+)', inst.attrs)
+        return m.group(1) if m else None
+
+    def visit(comp_name: str, mult: float, top_level: bool) -> None:
+        nonlocal flops, hbm
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen_stack:
+            return
+        seen_stack.append(comp_name)
+        for inst in comp.instrs:
+            op = inst.opcode
+            base = op
+            for sfx in ("-start", "-done", "-update"):
+                if base.endswith(sfx):
+                    base = base[: -len(sfx)]
+            if op == "while":
+                tc = _trip_count(inst.attrs)
+                m = re.search(r"body=%?([\w.\-]+)", inst.attrs)
+                if m:
+                    visit(m.group(1), mult * tc, True)
+                cm = re.search(r"condition=%?([\w.\-]+)", inst.attrs)
+                if cm:
+                    visit(cm.group(1), mult * tc, True)
+                continue
+            if op in ("fusion", "call", "custom-call", "async-start"):
+                m = re.search(r"calls=%?([\w.\-]+)", inst.attrs)
+                if m:
+                    # fusion internals contribute flops but not HBM traffic
+                    visit(m.group(1), mult, False)
+                if top_level and op != "call":
+                    b = mult * _instr_hbm(inst, comp)
+                    hbm += b
+                    if top_k:
+                        hbm_by_site[_site(inst)] += b
+                    sc = _scope(inst)
+                    if sc:
+                        hbm_by_scope[sc] += b
+                continue
+            if op == "conditional":
+                for m in re.finditer(r"(?:branch_computations=\{|true_computation=|false_computation=)%?([\w.\-]+)", inst.attrs):
+                    visit(m.group(1), mult, True)
+                continue
+            if op in ("dot", "dot-general"):
+                flops += mult * _dot_flops(inst, comp)
+            elif op == "convolution":
+                flops += mult * 2.0 * _nbytes(inst.out_type)  # coarse
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                opb = 0
+                for o in inst.operands:
+                    t = comp.shapes.get(o)
+                    if t:
+                        opb += _nbytes(t)
+                if opb == 0:
+                    opb = inst.out_bytes
+                g = _group_size(inst.attrs)
+                coll_bytes[base] += mult * opb
+                coll_wire[base] += mult * opb * _WIRE_FACTOR[base](max(g, 1))
+                coll_count[base] += mult
+            if top_level and op not in (
+                "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+            ):
+                b = mult * _instr_hbm(inst, comp)
+                hbm += b
+                if top_k:
+                    hbm_by_site[_site(inst)] += b
+                sc = _scope(inst)
+                if sc:
+                    hbm_by_scope[sc] += b
+        seen_stack.pop()
+
+    def _instr_hbm(inst: Instr, comp: Computation) -> float:
+        op = inst.opcode
+        if op == "dynamic-slice":
+            # reads only the slice (+ scalar indices), writes the slice
+            return float(2 * inst.out_bytes)
+        if op == "dynamic-update-slice":
+            # in-place on unique buffers: read+write the update region only
+            upd = comp.shapes.get(inst.operands[1]) if len(inst.operands) > 1 else None
+            return float(2 * (_nbytes(upd) if upd else inst.out_bytes))
+        if op == "gather":
+            # reads only the gathered elements (+ indices)
+            return float(2 * inst.out_bytes)
+        if op == "scatter":
+            # in-place: read+write the update region (operand 2) only
+            upd = comp.shapes.get(inst.operands[2]) if len(inst.operands) > 2 else None
+            return float(2 * (_nbytes(upd) if upd else inst.out_bytes))
+        if op == "fusion":
+            return _fusion_hbm(inst, comp)
+        b = inst.out_bytes
+        for o in inst.operands:
+            t = comp.shapes.get(o)
+            if t:
+                b += _nbytes(t)
+        return float(b)
+
+    def _fusion_hbm(inst: Instr, comp: Computation) -> float:
+        """Fusion traffic = outputs + operands, with two in-place patterns
+        recognized: (a) an operand whose only in-fusion use is a
+        dynamic-slice is charged at the slice size (scan-body weight/cache
+        slicing); (b) a fusion whose ROOT is a dynamic-update-slice writes
+        only the update region (XLA updates unique buffers in place), and
+        the buffer operand it updates is likewise not re-read in full."""
+        m = re.search(r"calls=%?([\w.\-]+)", inst.attrs)
+        fused = comps.get(m.group(1)) if m else None
+        b = float(inst.out_bytes)
+        dus_buffer_param: Optional[str] = None
+        if fused is not None and fused.instrs:
+            root = fused.instrs[-1]
+            if root.opcode == "dynamic-update-slice" and len(root.operands) > 1:
+                upd = fused.shapes.get(root.operands[1])
+                if upd is not None:
+                    b = float(2 * _nbytes(upd))  # write update; read update src
+                    dus_buffer_param = root.operands[0]
+        sliced_params: Dict[int, float] = {}
+        if fused is not None:
+            # map parameter index -> effective read bytes
+            param_users: Dict[str, List[Instr]] = defaultdict(list)
+            param_idx: Dict[str, int] = {}
+            for fi in fused.instrs:
+                for o in fi.operands:
+                    param_users[o].append(fi)
+            order = [fi.name for fi in fused.instrs if fi.opcode == "parameter"]
+            for idx, pname in enumerate(order):
+                if dus_buffer_param is not None and pname == dus_buffer_param:
+                    sliced_params[idx] = 0.0  # in-place updated buffer
+                    continue
+                users = param_users.get(pname, [])
+                # follow through bitcast/copy chains
+                expanded: List[Instr] = []
+                seen = set()
+                stack = list(users)
+                while stack:
+                    u = stack.pop()
+                    if u.name in seen:
+                        continue
+                    seen.add(u.name)
+                    if u.opcode in ("bitcast", "copy", "reshape"):
+                        stack.extend(param_users.get(u.name, []))
+                    else:
+                        expanded.append(u)
+                if expanded and all(u.opcode == "dynamic-slice" for u in expanded):
+                    sliced_params[idx] = float(
+                        sum(u.out_bytes for u in expanded)
+                    )
+        for i, o in enumerate(inst.operands):
+            t = comp.shapes.get(o)
+            if not t:
+                continue
+            if i in sliced_params:
+                b += sliced_params[i]
+            else:
+                b += _nbytes(t)
+        return b
+
+    if entry:
+        visit(entry, 1.0, True)
+    top = sorted(hbm_by_site.items(), key=lambda kv: -kv[1])[:top_k] if top_k else []
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "hbm_top_sites": [(k, round(v)) for k, v in top],
+        "hbm_by_kernel_scope": {k: float(v) for k, v in hbm_by_scope.items()},
+        "collective_bytes_by_type": dict(coll_bytes),
+        "collective_wire_bytes_by_type": dict(coll_wire),
+        "collective_counts_by_type": dict(coll_count),
+        "collective_bytes": float(sum(coll_bytes.values())),
+        "collective_wire_bytes": float(sum(coll_wire.values())),
+        "collective_count": float(sum(coll_count.values())),
+    }

@@ -1,0 +1,33 @@
+"""Storm-analogue data plane: broker, jit-compiled segments, executor with
+resource accounting + straggler mitigation, worker placement model, and the
+StreamSystem that binds the ReuseManager control plane to the data plane."""
+from .broker import Broker, topic_for
+from .executor import CORE_CALIBRATION, PAUSE_EPSILON, Executor, StepReport
+from .scheduler import (
+    TASKS_PER_WORKER,
+    WORKERS_PER_NODE,
+    Placement,
+    StragglerPolicy,
+    place_round_robin,
+)
+from .segment import Segment, SegmentSpec, build_segment, compute_batches
+from .system import StreamSystem
+
+__all__ = [
+    "Broker",
+    "CORE_CALIBRATION",
+    "Executor",
+    "PAUSE_EPSILON",
+    "Placement",
+    "Segment",
+    "SegmentSpec",
+    "StepReport",
+    "StragglerPolicy",
+    "StreamSystem",
+    "TASKS_PER_WORKER",
+    "WORKERS_PER_NODE",
+    "build_segment",
+    "compute_batches",
+    "place_round_robin",
+    "topic_for",
+]

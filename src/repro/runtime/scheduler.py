@@ -1,0 +1,91 @@
+"""Worker-pool placement model + straggler policy — the Storm scheduler analogue.
+
+The paper's setup: each node runs one Worker JVM per core (8/node), up to 8
+tasks per Worker without interference, and a Worker hosts tasks from only
+one topology (segment). Storm places tasks round-robin. This model converts
+a set of deployed segments into the node count a real cluster would need —
+benchmarks report it alongside task counts and core usage.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+WORKERS_PER_NODE = 8
+TASKS_PER_WORKER = 8
+
+
+@dataclass
+class Placement:
+    # segment -> list of (node, worker) slots, one per task
+    assignments: Dict[str, List[Tuple[int, int]]] = field(default_factory=dict)
+    nodes_used: int = 0
+    workers_used: int = 0
+
+
+def place_round_robin(segment_tasks: Dict[str, int]) -> Placement:
+    """Round-robin placement honoring one-segment-per-worker.
+
+    ``segment_tasks``: segment name -> number of deployed tasks (paused
+    tasks still occupy slots — the paper's pause overhead in worker slots).
+    """
+    placement = Placement()
+    next_worker = 0
+    for name in sorted(segment_tasks):
+        n = segment_tasks[name]
+        slots: List[Tuple[int, int]] = []
+        remaining = n
+        while remaining > 0:
+            batch = min(remaining, TASKS_PER_WORKER)
+            node, worker = divmod(next_worker, WORKERS_PER_NODE)
+            slots.extend((node, worker) for _ in range(batch))
+            next_worker += 1
+            remaining -= batch
+        placement.assignments[name] = slots
+    placement.workers_used = next_worker
+    placement.nodes_used = (next_worker + WORKERS_PER_NODE - 1) // WORKERS_PER_NODE
+    return placement
+
+
+@dataclass
+class StragglerEvent:
+    step: int
+    segment: str
+    ewma_ms: float
+    median_ms: float
+
+
+class StragglerPolicy:
+    """k·median EWMA policy (pure, unit-testable).
+
+    The Executor embeds the same logic; this standalone class is used by the
+    scheduler tests and by the simulated 1000-node run in the benchmarks.
+    """
+
+    def __init__(self, factor: float = 3.0, alpha: float = 0.3):
+        self.factor = factor
+        self.alpha = alpha
+        self.ewma: Dict[str, float] = {}
+        self.events: List[StragglerEvent] = []
+
+    def observe(self, step: int, timings_ms: Dict[str, float]) -> List[str]:
+        for name, ms in timings_ms.items():
+            prev = self.ewma.get(name)
+            self.ewma[name] = ms if prev is None else self.alpha * ms + (1 - self.alpha) * prev
+        for name in list(self.ewma):
+            if name not in timings_ms:
+                del self.ewma[name]
+        if len(self.ewma) < 2:
+            return []
+        vals = sorted(self.ewma.values())
+        median = vals[len(vals) // 2]
+        flagged = [
+            name
+            for name, ew in self.ewma.items()
+            if median > 0 and ew > self.factor * median
+        ]
+        for name in flagged:
+            self.events.append(StragglerEvent(step, name, self.ewma[name], median))
+            # re-dispatch: relocated segment is judged afresh
+            del self.ewma[name]
+        return flagged

@@ -1,0 +1,191 @@
+"""Segments — jit-compiled partial DAGs (the Storm-topology analogue).
+
+A segment owns a subset of a running DAG's tasks and compiles their
+composition into **one** jitted step function. Immutability of the compiled
+XLA executable mirrors Storm topology immutability; structural changes are
+made by launching new segments wired through the broker (incremental merge)
+or by defragmentation (relaunch as one fused segment).
+
+Batched event semantics:
+  * every stream carries one ``(B_t, EVENT_WIDTH)`` batch per step;
+  * a task's input batch is the concatenation of its parents' outputs in
+    **canonical order** (sorted by Merkle ancestor signature — equivalent
+    tasks sort identically, so Default and Reuse runs process events in the
+    same order and sink outputs are bit-identical);
+  * interleave semantics ⇒ B_task = Σ B_parent; sources emit B₀.
+
+Pause (paper §4.3): each task has an ``active`` flag in the carried state.
+A paused task's body is skipped via ``lax.cond`` and it emits zeros; this is
+the control-topic pause signal — no recompilation, no disruption to the
+segment. Termination closure (terminated sets are descendant-closed — see
+DESIGN.md) guarantees no live task ever consumes a paused task's output.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Dataflow
+from repro.ops import EVENT_WIDTH, Operator, operator_for_task
+
+from .broker import topic_for
+
+PyTree = Any
+
+
+@dataclass
+class SegmentSpec:
+    """Static description of a segment before compilation."""
+
+    name: str
+    dag_name: str  # running DAG this segment belongs to
+    task_ids: List[str]  # topological order within the segment
+    # task id -> parent ids in canonical (signature-sorted) order; parents may
+    # live outside the segment (boundary inputs fetched from the broker).
+    parents: Dict[str, List[str]]
+    # tasks initially forwarding their output to the broker (boundary streams
+    # known at deploy time). The executor can extend this set at runtime —
+    # the paper's control-topic "forward" signal — without recompiling,
+    # because the compiled step returns every task's output.
+    publish: Set[str]
+    batch_of: Dict[str, int]  # per-task output batch size
+    created_at: int = 0  # launch sequence number (segments step in this order)
+
+
+@dataclass
+class Segment:
+    spec: SegmentSpec
+    operators: Dict[str, Operator]
+    step_fn: Callable  # jitted: (states, active, inputs) -> (states, outputs, taps)
+    states: Dict[str, PyTree]
+    active: Dict[str, jnp.ndarray]
+    boundary_topics: List[str]  # topics fetched from the broker each step
+    steps_run: int = 0
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def live_task_ids(self) -> List[str]:
+        return [t for t in self.spec.task_ids if bool(self.active[t])]
+
+    def pause(self, task_ids: Set[str]) -> None:
+        for tid in task_ids:
+            if tid in self.active:
+                self.active[tid] = jnp.zeros((), jnp.bool_)
+
+    def resume(self, task_ids: Set[str]) -> None:
+        for tid in task_ids:
+            if tid in self.active:
+                self.active[tid] = jnp.ones((), jnp.bool_)
+
+
+def compute_batches(
+    order: List[str],
+    parents: Dict[str, List[str]],
+    known: Dict[str, int],
+    base_batch: int,
+) -> Dict[str, int]:
+    """Static per-task batch sizes: sources B₀, else Σ parent batches."""
+    out = dict(known)
+    for tid in order:
+        if tid in out:
+            continue
+        ps = parents[tid]
+        out[tid] = base_batch if not ps else sum(out[p] for p in ps)
+    return out
+
+
+def build_segment(
+    spec: SegmentSpec,
+    dataflow: Dataflow,
+    init_states: Optional[Dict[str, PyTree]] = None,
+) -> Segment:
+    """Compile a segment: one jitted step over all its tasks."""
+    operators: Dict[str, Operator] = {}
+    for tid in spec.task_ids:
+        operators[tid] = operator_for_task(dataflow.tasks[tid], batch=spec.batch_of[tid])
+
+    in_segment = set(spec.task_ids)
+    boundary_parents: List[str] = []
+    for tid in spec.task_ids:
+        for p in spec.parents[tid]:
+            if p not in in_segment and p not in boundary_parents:
+                boundary_parents.append(p)
+    boundary_topics = [topic_for(p) for p in boundary_parents]
+
+    states: Dict[str, PyTree] = {}
+    for tid in spec.task_ids:
+        if init_states and tid in init_states:
+            states[tid] = init_states[tid]
+        else:
+            states[tid] = operators[tid].init_state(spec.batch_of[tid])
+    active = {tid: jnp.ones((), jnp.bool_) for tid in spec.task_ids}
+
+    task_ids = list(spec.task_ids)
+    parents = {t: list(spec.parents[t]) for t in task_ids}
+    batch_of = dict(spec.batch_of)
+
+    def step_fn(
+        states: Dict[str, PyTree],
+        active: Dict[str, jnp.ndarray],
+        inputs: Dict[str, jnp.ndarray],
+    ):
+        outputs: Dict[str, jnp.ndarray] = {}  # task id -> output batch
+        new_states: Dict[str, PyTree] = {}
+        for tid in task_ids:
+            op, st, flag = operators[tid], states[tid], active[tid]
+            if op.is_source:
+                st2, y = jax.lax.cond(
+                    flag,
+                    lambda op=op, st=st: op.apply(st),
+                    lambda st=st, b=batch_of[tid]: (
+                        st,
+                        jnp.zeros((b, EVENT_WIDTH), jnp.float32),
+                    ),
+                )
+            else:
+                xs = [
+                    outputs[p] if p in outputs else inputs[topic_for(p)]
+                    for p in parents[tid]
+                ]
+                x = xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=0)
+                if op.is_sink:
+                    st2 = jax.lax.cond(
+                        flag,
+                        lambda op=op, st=st, x=x: op.apply(st, x)[0],
+                        lambda st=st: st,
+                    )
+                    y = None
+                else:
+                    # ops may change the event width (e.g. lm_embed lifts
+                    # (B, 8) → (B, d)); the paused branch must emit zeros of
+                    # the op's *output* shape, not the input's.
+                    _, y_abs = jax.eval_shape(op.apply, st, x)
+                    st2, y = jax.lax.cond(
+                        flag,
+                        lambda op=op, st=st, x=x: op.apply(st, x),
+                        lambda st=st, y_abs=y_abs: (
+                            st,
+                            jnp.zeros(y_abs.shape, y_abs.dtype),
+                        ),
+                    )
+            new_states[tid] = st2
+            if y is not None:
+                outputs[tid] = y
+        # Return *all* task outputs; the executor publishes the forwarding
+        # subset to the broker (runtime-switchable, no recompilation).
+        return new_states, outputs
+
+    jitted = jax.jit(step_fn)
+    return Segment(
+        spec=spec,
+        operators=operators,
+        step_fn=jitted,
+        states=states,
+        active=active,
+        boundary_topics=boundary_topics,
+    )

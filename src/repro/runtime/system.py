@@ -1,0 +1,176 @@
+"""StreamSystem — the full Reusable Dataflow Manager with data-plane bindings.
+
+Glues the control plane (:class:`repro.core.ReuseManager`) to the data plane
+(:class:`repro.runtime.Executor`) exactly as the paper's §4.3 Manager binds
+to Storm:
+
+  * ``submit`` — run the merge algorithm; launch one new segment holding the
+    created tasks ``T_x``; signal reused boundary tasks (``S_x⁺`` upstream
+    ends) to *forward* their derived streams to broker topics.
+  * ``remove`` — run the unmerge algorithm; *pause* terminated tasks via the
+    control flags (Reuse) or kill the submission's segments outright (the
+    Default baseline, which owns its topologies).
+  * ``defragment`` — enact :func:`repro.core.defrag.plan_defrag`: relaunch
+    one fused segment per running DAG, carrying task states over, dropping
+    paused tasks and broker hops.
+
+``strategy="none"`` is the paper's Default: no reuse, one segment per
+submission, kill on removal.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Set
+
+from repro.core import ReuseManager
+from repro.core.defrag import canonical_parents, plan_defrag
+from repro.core.graph import Dataflow
+from repro.core.manager import RemovalReceipt, SubmissionReceipt
+from repro.core.signatures import compute_signatures
+
+from .executor import Executor, StepReport
+from .scheduler import Placement, place_round_robin
+from .segment import SegmentSpec, compute_batches
+
+
+class StreamSystem:
+    def __init__(
+        self,
+        strategy: str = "signature",
+        base_batch: int = 32,
+        check_invariants: bool = False,
+        journal_path: Optional[str] = None,
+    ):
+        self.manager = ReuseManager(
+            strategy=strategy, check_invariants=check_invariants, journal_path=journal_path
+        )
+        self.executor = Executor()
+        self.base_batch = base_batch
+        self.task_batch: Dict[str, int] = {}  # running task id -> output batch size
+        self._seg_counter = 0
+        self._segments_of: Dict[str, List[str]] = {}  # submission -> segment names
+
+    @property
+    def strategy(self) -> str:
+        return self.manager.strategy
+
+    def _mint_segment(self) -> str:
+        self._seg_counter += 1
+        return f"seg{self._seg_counter}"
+
+    # -- operations ---------------------------------------------------------------
+    def submit(self, df: Dataflow) -> SubmissionReceipt:
+        receipt = self.manager.submit(df)
+        run_df = self.manager.running[receipt.running_dag]
+        created: Set[str] = set(receipt.plan.created.values())
+        if not created:  # fully contained in running DAGs — nothing to launch
+            self._segments_of[df.name] = []
+            # sinks must still be forwarded? no — reused sinks already consume.
+            return receipt
+
+        canon = canonical_parents(run_df)
+        order = [tid for tid in run_df.topological_order() if tid in created]
+        parents = {tid: canon[tid] for tid in order}
+        self.task_batch = compute_batches(order, parents, self.task_batch, self.base_batch)
+
+        # Control signal: reused upstream ends of boundary streams forward
+        # their derived stream to the broker (paper's control topic).
+        for up_id, _down in receipt.plan.new_streams_boundary:
+            self.executor.forward(up_id)
+
+        spec = SegmentSpec(
+            name=self._mint_segment(),
+            dag_name=receipt.running_dag,
+            task_ids=order,
+            parents=parents,
+            publish=set(),
+            batch_of={t: self.task_batch[t] for t in order},
+        )
+        self.executor.deploy(spec, run_df)
+        self._segments_of[df.name] = [spec.name]
+        return receipt
+
+    def remove(self, name: str) -> RemovalReceipt:
+        own_segments = self._segments_of.pop(name, [])
+        receipt = self.manager.remove(name)
+        if self.strategy == "none":
+            # Default: the submission owns its topologies — kill them.
+            for seg_name in own_segments:
+                if seg_name in self.executor.segments:
+                    self.executor.kill(seg_name)
+            for tid in receipt.terminated_tasks:
+                self.task_batch.pop(tid, None)
+        else:
+            # Reuse: Storm can't kill a subset of a topology — pause instead.
+            self.executor.pause(set(receipt.terminated_tasks))
+        return receipt
+
+    def defragment(self) -> int:
+        """Relaunch one fused segment per running DAG; returns segments killed."""
+        plan = plan_defrag(self.manager.running)
+        killed = len(self.executor.segments)
+        # Carry live task states across the relaunch (beyond-paper:
+        # state-preserving defrag — Storm would restart cold).
+        carried: Dict[str, Any] = {}
+        live: Set[str] = set()
+        for fused in plan.fused:
+            live |= set(fused.order)
+        for seg in list(self.executor.segments.values()):
+            for tid in seg.spec.task_ids:
+                if tid in live:
+                    carried[tid] = seg.states[tid]
+        for seg_name in list(self.executor.segments):
+            self.executor.kill(seg_name)
+        for fused in plan.fused:
+            run_df = self.manager.running[fused.dag_name]
+            spec = SegmentSpec(
+                name=self._mint_segment(),
+                dag_name=fused.dag_name,
+                task_ids=fused.order,
+                parents=fused.parents,
+                publish=set(),
+                batch_of={t: self.task_batch[t] for t in fused.order},
+            )
+            self.executor.deploy(
+                spec, run_df, init_states={t: carried[t] for t in fused.order if t in carried}
+            )
+        # Segment ownership bookkeeping: after defrag, segments are shared —
+        # submissions no longer own segments (only meaningful for Default,
+        # which never defragments).
+        for sub in self._segments_of:
+            self._segments_of[sub] = []
+        return killed
+
+    # -- execution -----------------------------------------------------------------
+    def step(self) -> StepReport:
+        return self.executor.step()
+
+    def run(self, steps: int) -> List[StepReport]:
+        return self.executor.run(steps)
+
+    # -- observability ----------------------------------------------------------------
+    def sink_digests(self, sub_name: str) -> Dict[str, Dict[str, Any]]:
+        """Per submitted sink: count/checksum state — the output stream
+        identity used to verify Default ≡ Reuse (paper's §3.3 guarantee)."""
+        sub_df = self.manager.submitted[sub_name]
+        task_map = self.manager.task_maps[sub_name]
+        out: Dict[str, Dict[str, Any]] = {}
+        for sink_id in sub_df.sink_ids:
+            st = self.executor.sink_state(task_map[sink_id])
+            out[sink_id] = {
+                "count": int(st["count"]),
+                "checksum": float(st["checksum"]),
+            }
+        return out
+
+    def placement(self) -> Placement:
+        return place_round_robin(
+            {name: len(seg.spec.task_ids) for name, seg in self.executor.segments.items()}
+        )
+
+    @property
+    def running_task_count(self) -> int:
+        return self.manager.running_task_count
+
+    @property
+    def deployed_task_count(self) -> int:
+        return sum(len(s.spec.task_ids) for s in self.executor.segments.values())

@@ -1,0 +1,12 @@
+"""Serving: batched prefill/decode engine and the multi-tenant
+reuse-serving integration of the paper's merge algorithms."""
+from .engine import ServeEngine, GenerationResult
+from .reuse_serving import TenantPipeline, ReuseServing, backbone_pipeline
+
+__all__ = [
+    "GenerationResult",
+    "ReuseServing",
+    "ServeEngine",
+    "TenantPipeline",
+    "backbone_pipeline",
+]

@@ -1,0 +1,131 @@
+"""Batched serving engine: slot-based continuous batching over the model
+zoo's prefill/decode paths.
+
+A fixed pool of ``slots`` (the decode batch) runs one jitted decode step
+per tick; finished/empty slots are refilled from the request queue via a
+fresh prefill whose cache row is spliced into the pool. Greedy or
+temperature sampling. The engine is deliberately mesh-agnostic — under a
+mesh the same jitted steps run SPMD (launch/serve.py wires that).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new: int = 16
+    temperature: float = 0.0    # 0 = greedy
+    memory: Optional[np.ndarray] = None
+
+
+@dataclass
+class GenerationResult:
+    rid: int
+    tokens: List[int]
+    prompt_len: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: PyTree, *, slots: int = 4, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        mem_len = {"vlm": cfg.num_image_tokens, "audio": cfg.encoder_seq}.get(cfg.family, 0)
+        self.mem_len = mem_len
+        self._queue: List[Request] = []
+        self._active: Dict[int, Request] = {}        # slot -> request
+        self._generated: Dict[int, List[int]] = {}
+        self._done: List[GenerationResult] = []
+        self._budget: Dict[int, int] = {}
+
+        # one cache per slot (batch=1) — spliceable without reshaping
+        self._caches: List[PyTree] = [
+            init_cache(cfg, 1, max_len, memory_len=mem_len) for _ in range(slots)
+        ]
+        self._next_tok = np.zeros((slots, 1), np.int32)
+        self._live = np.zeros((slots,), bool)
+
+        self._prefill = jax.jit(
+            lambda p, t, c, m: prefill(p, cfg, t, c, memory=m)
+            if mem_len
+            else prefill(p, cfg, t, c)
+        ) if mem_len else jax.jit(lambda p, t, c: prefill(p, cfg, t, c))
+        self._decode = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def run(self, max_ticks: int = 1000) -> List[GenerationResult]:
+        ticks = 0
+        while (self._queue or self._live.any()) and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return self.results()
+
+    def results(self) -> List[GenerationResult]:
+        out, self._done = self._done, []
+        return out
+
+    # -- engine internals ------------------------------------------------------
+    def tick(self) -> None:
+        self._fill_slots()
+        if not self._live.any():
+            return
+        for s in np.nonzero(self._live)[0]:
+            tok = jnp.asarray(self._next_tok[s : s + 1])
+            logits, self._caches[s] = self._decode(self.params, tok, self._caches[s])
+            nxt = self._sample(logits, self._active[s].temperature)
+            self._push_token(int(s), int(nxt))
+
+    def _fill_slots(self) -> None:
+        for s in range(self.slots):
+            if self._live[s] or not self._queue:
+                continue
+            req = self._queue.pop(0)
+            cache = init_cache(self.cfg, 1, self.max_len, memory_len=self.mem_len)
+            toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+            if self.mem_len:
+                mem = jnp.asarray(req.memory[None], jnp.float32)
+                logits, cache = self._prefill(self.params, toks, cache, mem)
+            else:
+                logits, cache = self._prefill(self.params, toks, cache)
+            self._caches[s] = cache
+            nxt = self._sample(logits, req.temperature)
+            self._active[s] = req
+            self._generated[s] = []
+            self._budget[s] = req.max_new
+            self._live[s] = True
+            self._push_token(s, int(nxt))
+
+    def _push_token(self, slot: int, tok: int) -> None:
+        self._generated[slot].append(tok)
+        self._next_tok[slot, 0] = tok
+        if len(self._generated[slot]) >= self._budget[slot]:
+            req = self._active.pop(slot)
+            self._done.append(
+                GenerationResult(req.rid, self._generated.pop(slot), len(req.prompt))
+            )
+            self._live[slot] = False
+
+    @staticmethod
+    def _sample(logits: jnp.ndarray, temperature: float) -> int:
+        if temperature <= 0:
+            return int(jnp.argmax(logits[0]))
+        key = jax.random.PRNGKey(int(jnp.sum(jnp.abs(logits)) * 1e3) % (2**31))
+        return int(jax.random.categorical(key, logits[0] / temperature))

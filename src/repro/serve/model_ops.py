@@ -1,0 +1,98 @@
+"""LM-pipeline task operators for multi-tenant reuse-serving.
+
+A tenant's serving pipeline is a dataflow of typed stages:
+
+  prompts:<stream> → lm_embed → lm_stage("0-7") → … → lm_head(<adapter>) → SINK
+
+Stage weights are a *pure function of the config* (seeded by
+``(model, layer range, d)``), so two tenants configured with the same
+checkpoint id and layer range have **identical** operators — exactly the
+paper's ⟨type, config⟩ equality — and the merge algorithm's reuse of a
+stage is provably output-preserving. A tenant with a different adapter or
+a fine-tuned upper range shares only the common prefix, which is the
+interesting (and realistic) multi-tenant case.
+
+Event contract: upstream sources emit (B, EVENT_WIDTH) request feature
+batches; ``lm_embed`` lifts them to (B, d); stages are (B, d) → (B, d);
+``lm_head`` folds back to (B, EVENT_WIDTH) response digests so the stock
+digest sinks apply.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.ops.base import EVENT_WIDTH, Operator, register
+
+
+def _seed(*parts: Any) -> int:
+    h = hashlib.sha256("|".join(str(p) for p in parts).encode()).digest()
+    return int.from_bytes(h[:4], "little")
+
+
+def _proj(seed: int, shape) -> jnp.ndarray:
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * (
+        shape[0] ** -0.5
+    )
+
+
+def _rms(x: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + 1e-6)
+
+
+@register("lm_embed")
+def lm_embed(cfg: Dict[str, Any]) -> Operator:
+    d = int(cfg.get("d", 64))
+    w = _proj(_seed("embed", cfg.get("model", ""), d), (EVENT_WIDTH, d))
+
+    def init_state(batch: int):
+        return ()
+
+    def apply(state, x):
+        return state, _rms(jnp.tanh(x @ w))
+
+    return Operator("lm_embed", init_state, apply, cost_weight=0.2)
+
+
+@register("lm_stage")
+def lm_stage(cfg: Dict[str, Any]) -> Operator:
+    """A contiguous group of transformer-ish blocks of the backbone."""
+    d = int(cfg.get("d", 64))
+    model = cfg.get("model", "")
+    lo, hi = (int(v) for v in str(cfg.get("layers", "0-0")).split("-"))
+    blocks = []
+    for i in range(lo, hi + 1):
+        s = _seed("stage", model, i, d)
+        blocks.append((_proj(s, (d, 2 * d)), _proj(s + 1, (2 * d, d))))
+
+    def init_state(batch: int):
+        return ()
+
+    def apply(state, x):
+        h = x
+        for w1, w2 in blocks:
+            h = h + jax.nn.silu(_rms(h) @ w1) @ w2
+        return state, h
+
+    return Operator("lm_stage", init_state, apply, cost_weight=1.0 * len(blocks))
+
+
+@register("lm_head")
+def lm_head(cfg: Dict[str, Any]) -> Operator:
+    """Tenant adapter + response digest (B, d) → (B, EVENT_WIDTH)."""
+    d = int(cfg.get("d", 64))
+    s = _seed("head", cfg.get("model", ""), cfg.get("adapter", ""), d)
+    wa = _proj(s, (d, d))
+    wo = _proj(s + 1, (d, EVENT_WIDTH))
+
+    def init_state(batch: int):
+        return ()
+
+    def apply(state, x):
+        h = x + jax.nn.silu(_rms(x) @ wa)
+        return state, _rms(h) @ wo
+
+    return Operator("lm_head", init_state, apply, cost_weight=0.4)

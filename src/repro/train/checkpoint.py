@@ -1,0 +1,190 @@
+"""Checkpoint/restore with resharding — the fault-tolerance substrate.
+
+Design (1000+-node ready):
+  * **Atomic**: write to ``step_N.tmp/``, fsync, rename to ``step_N/`` —
+    a crash mid-write never corrupts the latest checkpoint.
+  * **Async**: ``save_async`` snapshots device arrays to host (cheap) and
+    writes on a worker thread; the train loop never blocks on disk.
+  * **Resharded restore**: the manifest stores *logical* shapes + dtypes
+    + the PartitionSpec used; restore re-shards onto whatever mesh is
+    current. A 512-chip checkpoint restores onto 256 chips after a pod
+    loss (elastic resize) — the spec is re-resolved against the new mesh.
+  * **Self-describing**: manifest.json carries the pytree structure, so
+    restore needs no live model object.
+
+On a real multi-host pod each host writes only its addressable shards;
+here the single process holds the full array (CPU), which keeps the
+format identical while the gather path is a no-op.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_names(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, state: PyTree, *, specs: Optional[PyTree] = None) -> str:
+    """Synchronous atomic checkpoint; returns the final directory."""
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = _flatten_with_names(state)
+    spec_leaves = dict(_flatten_with_names(specs)) if specs is not None else {}
+    manifest: Dict[str, Any] = {"step": step, "arrays": {}}
+    for name, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        fname = name.replace("/", "__") + ".npy"
+        entry = {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        if arr.dtype.kind not in "biufc":  # ml_dtypes (bfloat16, fp8, …)
+            entry["stored_as"] = f"uint{arr.dtype.itemsize * 8}"
+            arr = arr.view(entry["stored_as"])
+        np.save(os.path.join(tmp, fname), arr)
+        if name in spec_leaves and spec_leaves[name] is not None:
+            entry["spec"] = _spec_to_json(spec_leaves[name])
+        manifest["arrays"][name] = entry
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _gc(ckpt_dir, keep=3)
+    return final
+
+
+def _spec_to_json(spec) -> List[Any]:
+    out = []
+    for p in tuple(spec):
+        if p is None:
+            out.append(None)
+        elif isinstance(p, (tuple, list)):
+            out.append(list(p))
+        else:
+            out.append(p)
+    return out
+
+
+def _spec_from_json(obj) -> "jax.sharding.PartitionSpec":
+    from jax.sharding import PartitionSpec as P
+
+    return P(*[tuple(p) if isinstance(p, list) else p for p in obj])
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host then write on a daemon thread; one in flight."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save_async(self, step: int, state: PyTree, specs: Optional[PyTree] = None) -> None:
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def work():
+            self.last_path = save(self.ckpt_dir, step, host_state, specs=specs)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            try:
+                steps.append(int(d.split("_", 1)[1]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    step: Optional[int] = None,
+    *,
+    mesh=None,
+    target: Optional[PyTree] = None,
+) -> PyTree:
+    """Restore (optionally resharding onto ``mesh``).
+
+    With ``target`` (a pytree of like-structured leaves or
+    ShapeDtypeStructs) the result is unflattened into that structure;
+    otherwise a flat {name: array} dict is returned.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+
+    arrays: Dict[str, Any] = {}
+    for name, entry in manifest["arrays"].items():
+        arr = np.load(os.path.join(d, entry["file"]))
+        if "stored_as" in entry:
+            import ml_dtypes  # ships with jax
+
+            arr = arr.view(np.dtype(entry["dtype"]))
+        if mesh is not None and "spec" in entry:
+            spec = _spec_from_json(entry["spec"])
+            # drop axes that no longer exist on the (resized) mesh
+            cleaned = []
+            for p in tuple(spec):
+                ax = [a for a in (p if isinstance(p, tuple) else (p,))
+                      if a is None or a in mesh.axis_names]
+                ax = [a for a in ax if a is not None]
+                cleaned.append(tuple(ax) if len(ax) > 1 else (ax[0] if ax else None))
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            sh = NamedSharding(mesh, P(*cleaned))
+            arrays[name] = jax.device_put(arr, sh)
+        else:
+            arrays[name] = arr
+    if target is None:
+        return arrays
+    flat_names = [n for n, _ in _flatten_with_names(target)]
+    leaves = [arrays[n] for n in flat_names]
+    treedef = jax.tree.structure(target)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        int(d.split("_", 1)[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)

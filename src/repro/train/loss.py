@@ -1,0 +1,33 @@
+"""Next-token cross-entropy with masking and z-loss.
+
+The log-softmax runs in f32 regardless of logits dtype. ``ignore_index``
+(-1) masks padding tokens out of both the loss and the denominator.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+IGNORE_INDEX = -1
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray,  # (B, S, V)
+    labels: jnp.ndarray,  # (B, S) int32, IGNORE_INDEX = masked
+    *,
+    z_loss_coeff: float = 0.0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (mean loss, token count)."""
+    logits = logits.astype(jnp.float32)
+    mask = labels != IGNORE_INDEX
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)  # (B, S)
+    picked = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if z_loss_coeff:
+        nll = nll + z_loss_coeff * jnp.square(lse)
+    n = jnp.maximum(mask.sum(), 1)
+    loss = jnp.where(mask, nll, 0.0).sum() / n
+    return loss, n

@@ -1,0 +1,109 @@
+"""Train state + step factory.
+
+The step is a pure function ``(state, batch) → (state, metrics)`` designed
+for ``jax.jit`` under a mesh: with params sharded over (fsdp × model) and
+the batch over the data axes, GSPMD inserts the reduce-scatter/all-gather
+collectives — the step body never references the mesh.
+
+Gradient accumulation: ``accum > 1`` scans over microbatches, accumulating
+grads in ``accum_dtype`` (f32 by default; bf16 for the memory-tightest
+configs). With remat on every block (see models/transformer.py) the live
+activation set is one microbatch deep.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.models.config import ModelConfig
+
+from .loss import cross_entropy_loss
+from .optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+PyTree = Any
+TrainState = Dict[str, Any]  # {"step", "params", "mu", "nu"}
+
+
+def train_state_init(cfg: ModelConfig, opt: AdamWConfig, key: jax.Array) -> TrainState:
+    from repro.models import init_params
+
+    params = init_params(cfg, key)
+    mu, nu = adamw_init(params, opt)
+    return {"step": jnp.zeros((), jnp.int32), "params": params, "mu": mu, "nu": nu}
+
+
+def abstract_train_state(cfg: ModelConfig, opt: AdamWConfig) -> TrainState:
+    """ShapeDtypeStruct tree — the dry-run path, no allocation."""
+    return jax.eval_shape(lambda: train_state_init(cfg, opt, jax.random.PRNGKey(0)))
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt: AdamWConfig,
+    *,
+    accum: int = 1,
+    z_loss_coeff: float = 1e-4,
+    accum_dtype: str = "float32",
+) -> Callable[[TrainState, Dict[str, jnp.ndarray]], Tuple[TrainState, Dict[str, jnp.ndarray]]]:
+    def loss_fn(params, tokens, labels, memory):
+        logits = forward(params, cfg, tokens, memory=memory)
+        loss, _ = cross_entropy_loss(logits, labels, z_loss_coeff=z_loss_coeff)
+        return loss
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        tokens, labels = batch["tokens"], batch["labels"]
+        memory = batch.get("memory")
+        params = state["params"]
+
+        if accum <= 1:
+            loss, grads = grad_fn(params, tokens, labels, memory)
+        else:
+            B = tokens.shape[0]
+            assert B % accum == 0, (B, accum)
+            mb = B // accum
+
+            def split(x):
+                return x.reshape(accum, mb, *x.shape[1:])
+
+            xs = (split(tokens), split(labels))
+            xs += (split(memory),) if memory is not None else (None,)
+            gacc = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.dtype(accum_dtype)), params
+            )
+
+            def micro(carry, x):
+                gacc, lacc = carry
+                t, l = x[0], x[1]
+                m = x[2] if memory is not None else None
+                loss_i, g = grad_fn(params, t, l, m)
+                gacc = jax.tree.map(lambda a, gi: a + gi.astype(a.dtype), gacc, g)
+                return (gacc, lacc + loss_i), None
+
+            if memory is None:
+                xs = (xs[0], xs[1])
+            (gacc, lsum), _ = jax.lax.scan(micro, (gacc, jnp.zeros((), jnp.float32)), xs)
+            grads = jax.tree.map(lambda g: (g / accum).astype(jnp.float32), gacc)
+            loss = lsum / accum
+
+        new_p, new_mu, new_nu, gnorm = adamw_update(
+            grads, params, state["mu"], state["nu"], state["step"], opt
+        )
+        new_state = {
+            "step": state["step"] + 1,
+            "params": new_p,
+            "mu": new_mu,
+            "nu": new_nu,
+        }
+        metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "lr": cosine_schedule(opt)(state["step"]),
+        }
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,18 @@
+"""Workload generators + traces matching the paper §5.1.
+
+The OPMW portal data is not shipped; the generators are seeded and
+calibrated to the *published statistics*:
+
+  OPMW: 35 DAGs, 471 total tasks, 219 unique abstract tasks, 2–38
+        tasks/DAG, π task logic, shared prefix structure.
+  RIoT: 21 DAGs, 138 total tasks, 19 distinct task types, 4–8 tasks/DAG,
+        3 IoT sources (Smart Grid / Urban / Taxi), real task logic.
+
+Traces (§5.1): SEQ (submit all in random order, then drain) and two
+Random Walks (add/remove p=½ ×100 after a ⅔ preload, then drain).
+"""
+from .opmw import opmw_workload
+from .riot import riot_workload
+from .traces import TraceEvent, rw_trace, seq_trace
+
+__all__ = ["opmw_workload", "riot_workload", "seq_trace", "rw_trace", "TraceEvent"]

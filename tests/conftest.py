@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make `repro` importable without installation (PYTHONPATH=src also works).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Keep the default 1-device view for smoke tests and benches. The multi-pod
+# dry-run (launch/dryrun.py) sets XLA_FLAGS itself in a fresh process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,76 @@
+"""Shared dataflow builders for the core tests."""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+from repro.core import Dataflow, Task
+
+
+def chain_df(
+    name: str,
+    source: str,
+    chain: Sequence[Tuple[str, Any]],
+    sink: str = "store",
+) -> Dataflow:
+    """source → chain[0] → … → chain[-1] → sink."""
+    d = Dataflow(name)
+    prev = d.add_task(Task.make(f"{name}.src.{source}", source, "SOURCE"))
+    for i, (typ, cfg) in enumerate(chain):
+        t = d.add_task(Task.make(f"{name}.{i}.{typ}", typ, cfg))
+        d.add_stream(prev.id, t.id)
+        prev = t
+    snk = d.add_task(Task.make(f"{name}.sink.{sink}", sink, "SINK"))
+    d.add_stream(prev.id, snk.id)
+    return d
+
+
+def fig1() -> Tuple[Dataflow, Dataflow, Dataflow, Dataflow]:
+    """The paper's Fig. 1 scenario."""
+    A = chain_df("A", "urban", [("parse", {}), ("kalman", {"q": 0.1})], "store_a")
+    B = chain_df(
+        "B",
+        "urban",
+        [("parse", {}), ("kalman", {"q": 0.1}), ("win", {"w": 10})],
+        "store_b",
+    )
+    C = chain_df(
+        "C",
+        "urban",
+        [("parse", {}), ("kalman", {"q": 0.1}), ("win", {"w": 10}), ("avg", {})],
+        "store_c",
+    )
+    D = chain_df("D", "meter", [("parse", {}), ("kalman", {"q": 0.1})], "store_d")
+    return A, B, C, D
+
+
+def diamond_df(name: str, source: str = "urban", merge_cfg: Any = None) -> Dataflow:
+    """source → (f1, f2) → join → sink — fork/join DAG."""
+    d = Dataflow(name)
+    src = d.add_task(Task.make(f"{name}.src", source, "SOURCE"))
+    f1 = d.add_task(Task.make(f"{name}.f1", "filter", {"sigma": 3}))
+    f2 = d.add_task(Task.make(f"{name}.f2", "interp", {"k": 2}))
+    j = d.add_task(Task.make(f"{name}.join", "join", merge_cfg or {"mode": "zip"}))
+    snk = d.add_task(Task.make(f"{name}.sink", "store", "SINK"))
+    d.add_stream(src.id, f1.id)
+    d.add_stream(src.id, f2.id)
+    d.add_stream(f1.id, j.id)
+    d.add_stream(f2.id, j.id)
+    d.add_stream(j.id, snk.id)
+    return d
+
+
+def two_source_df(name: str) -> Dataflow:
+    """Two sources joined — exercises multi-running-DAG merges."""
+    d = Dataflow(name)
+    s1 = d.add_task(Task.make(f"{name}.s1", "urban", "SOURCE"))
+    s2 = d.add_task(Task.make(f"{name}.s2", "meter", "SOURCE"))
+    p1 = d.add_task(Task.make(f"{name}.p1", "parse", {}))
+    p2 = d.add_task(Task.make(f"{name}.p2", "parse", {}))
+    j = d.add_task(Task.make(f"{name}.j", "join", {"mode": "zip"}))
+    snk = d.add_task(Task.make(f"{name}.sink", "store", "SINK"))
+    d.add_stream(s1.id, p1.id)
+    d.add_stream(s2.id, p2.id)
+    d.add_stream(p1.id, j.id)
+    d.add_stream(p2.id, j.id)
+    d.add_stream(j.id, snk.id)
+    return d

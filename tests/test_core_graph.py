@@ -1,0 +1,108 @@
+"""Unit tests for the dataflow graph model (paper §3.1)."""
+import pytest
+
+from repro.core import Dataflow, DataflowError, Task, canonical_config
+from helpers import chain_df, diamond_df
+
+
+def test_canonical_config_order_insensitive():
+    assert canonical_config({"a": 1, "b": 2}) == canonical_config({"b": 2, "a": 1})
+    assert canonical_config("SOURCE") == "SOURCE"
+    assert canonical_config({"w": 10}) != canonical_config({"w": 11})
+
+
+def test_task_similarity():
+    t1 = Task.make("x", "kalman", {"q": 0.1})
+    t2 = Task.make("y", "kalman", {"q": 0.1})
+    t3 = Task.make("z", "kalman", {"q": 0.2})
+    t4 = Task.make("w", "parse", {"q": 0.1})
+    assert t1.type_similar(t2) and t1.config_similar(t2)
+    assert t1.type_similar(t3) and not t1.config_similar(t3)
+    assert not t1.type_similar(t4)
+
+
+def test_source_sink_flags():
+    src = Task.make("s", "urban", "SOURCE")
+    snk = Task.make("k", "store", "SINK")
+    mid = Task.make("m", "parse", {})
+    assert src.is_source and not src.is_sink
+    assert snk.is_sink and not snk.is_source
+    assert not mid.is_source and not mid.is_sink
+
+
+def test_topological_order_and_cycle_detection():
+    d = chain_df("A", "urban", [("a", {}), ("b", {})])
+    order = d.topological_order()
+    pos = {tid: i for i, tid in enumerate(order)}
+    for u, v in d.streams:
+        assert pos[u] < pos[v]
+
+    # Introduce a cycle via raw mutation and expect failure.
+    d2 = Dataflow("cyc")
+    t1 = d2.add_task(Task.make("1", "a", {}))
+    t2 = d2.add_task(Task.make("2", "b", {}))
+    d2.add_stream("1", "2")
+    d2.add_stream("2", "1")
+    with pytest.raises(DataflowError):
+        d2.topological_order()
+
+
+def test_validate_rejects_source_with_inputs():
+    d = Dataflow("bad")
+    d.add_task(Task.make("s", "urban", "SOURCE"))
+    d.add_task(Task.make("s2", "meter", "SOURCE"))
+    with pytest.raises(DataflowError):
+        d.add_stream("s", "s")  # self loop
+    d.add_stream("s", "s2")
+    with pytest.raises(DataflowError):
+        d.validate()
+
+
+def test_validate_rejects_orphan_task():
+    d = Dataflow("orphan")
+    d.add_task(Task.make("s", "urban", "SOURCE"))
+    d.add_task(Task.make("p", "parse", {}))
+    with pytest.raises(DataflowError):
+        d.validate()
+
+
+def test_duplicate_task_id_conflict():
+    d = Dataflow("dup")
+    d.add_task(Task.make("x", "parse", {}))
+    d.add_task(Task.make("x", "parse", {}))  # identical re-add is a no-op
+    with pytest.raises(DataflowError):
+        d.add_task(Task.make("x", "kalman", {}))
+
+
+def test_connected_components():
+    d = Dataflow("cc")
+    for i in range(4):
+        d.add_task(Task.make(f"t{i}", "op", {}))
+    d.add_stream("t0", "t1")
+    d.add_stream("t2", "t3")
+    comps = d.connected_components()
+    assert sorted(sorted(c) for c in comps) == [["t0", "t1"], ["t2", "t3"]]
+
+
+def test_subgraph_and_copy():
+    d = diamond_df("dia")
+    sub = d.subgraph("sub", {f"dia.src", "dia.f1"})
+    assert len(sub.tasks) == 2 and len(sub.streams) == 1
+    cp = d.copy()
+    assert cp.tasks == d.tasks and cp.streams == d.streams
+    cp.remove_task("dia.f1")
+    assert "dia.f1" in d.tasks  # deep independence
+
+
+def test_json_roundtrip():
+    d = diamond_df("dia")
+    d2 = Dataflow.from_json(d.to_json())
+    assert d2.tasks == d.tasks
+    assert d2.streams == d.streams
+
+
+def test_remove_task_cleans_streams():
+    d = diamond_df("dia")
+    d.remove_task("dia.join")
+    assert all("dia.join" not in s for s in d.streams)
+    assert "dia.join" not in d.tasks

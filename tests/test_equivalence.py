@@ -1,0 +1,141 @@
+"""Unit tests for ancestor graphs + equivalence (paper §3.2), and the
+signature fast path cross-check (beyond-paper)."""
+import pytest
+
+from repro.core import (
+    Dataflow,
+    EquivalenceChecker,
+    Task,
+    ancestor_graph,
+    ancestor_graph_set,
+    compute_signatures,
+    dataflows_disjoint,
+    dedup,
+    dedup_fast,
+    find_equivalent_tasks,
+    is_dedup,
+    is_dedup_fast,
+    maximal,
+    maximal_ancestor_intersection,
+)
+from helpers import chain_df, diamond_df, fig1, two_source_df
+
+
+def test_ancestor_graph_chain():
+    d = chain_df("A", "urban", [("a", {}), ("b", {})])
+    order = d.topological_order()
+    ag = ancestor_graph(d, order[-1])  # sink
+    assert ag.task_ids == set(d.tasks)
+    assert ag.streams == d.streams
+    ag0 = ancestor_graph(d, order[0])  # source
+    assert ag0.task_ids == {order[0]} and not ag0.streams
+
+
+def test_ancestor_graph_diamond():
+    d = diamond_df("dia")
+    ag = ancestor_graph(d, "dia.join")
+    assert ag.task_ids == {"dia.src", "dia.f1", "dia.f2", "dia.join"}
+    assert len(ag.streams) == 4
+
+
+def test_maximal_ancestor_set_matches_sink_count():
+    # Paper §3.2: |maximal set| == number of sinks.
+    for d in (*fig1(), diamond_df("dia"), two_source_df("ts")):
+        ags = maximal(ancestor_graph_set(d))
+        assert len(ags) == len(d.sink_ids)
+        assert {a.root for a in ags} == set(d.sink_ids)
+
+
+def test_equivalence_prefix_chains():
+    A, B, C, D = fig1()
+    matches = find_equivalent_tasks(A, B)
+    # A's src, parse, kalman are equivalent to B's; A's sink differs (type).
+    assert len(matches) == 3
+    # D shares types but a different source → disjoint.
+    assert dataflows_disjoint(A, D)
+    assert not dataflows_disjoint(A, C)
+
+
+def test_equivalence_requires_config_match():
+    A = chain_df("A", "urban", [("kalman", {"q": 0.1})])
+    B = chain_df("B", "urban", [("kalman", {"q": 0.2})])
+    matches = find_equivalent_tasks(A, B)
+    assert len(matches) == 1  # only the source matches
+
+
+def test_equivalence_requires_ancestry_match():
+    # Same type+config but different upstream chain → NOT equivalent.
+    A = chain_df("A", "urban", [("parse", {}), ("avg", {})])
+    B = chain_df("B", "urban", [("avg", {})])
+    ch = EquivalenceChecker(A, B)
+    a_avg = "A.1.avg"
+    b_avg = "B.0.avg"
+    assert not ch.equivalent(a_avg, b_avg)
+
+
+def test_equivalence_diamond_and_witness():
+    d1 = diamond_df("x")
+    d2 = diamond_df("y")
+    ch = EquivalenceChecker(d1, d2)
+    assert ch.equivalent("x.join", "y.join")
+    eps = ch.witness("x.join", "y.join")
+    assert eps == {
+        "x.join": "y.join",
+        "x.f1": "y.f1",
+        "x.f2": "y.f2",
+        "x.src": "y.src",
+    }
+
+
+def test_fork_join_asymmetry_not_equivalent():
+    d1 = diamond_df("x", merge_cfg={"mode": "zip"})
+    d2 = diamond_df("y", merge_cfg={"mode": "concat"})
+    ch = EquivalenceChecker(d1, d2)
+    assert not ch.equivalent("x.join", "y.join")
+    assert ch.equivalent("x.f1", "y.f1")
+
+
+def test_maximal_ancestor_intersection_fig1():
+    A, B, C, D = fig1()
+    inter = maximal_ancestor_intersection(B, C)
+    # Frontier of equivalence between B and C is B's win task.
+    assert len(inter) == 1
+    assert inter[0].root == "B.2.win"
+    assert len(inter[0].task_ids) == 4
+
+
+def test_is_dedup_and_dedup():
+    d = Dataflow("dup")
+    s = d.add_task(Task.make("s", "urban", "SOURCE"))
+    p1 = d.add_task(Task.make("p1", "parse", {}))
+    p2 = d.add_task(Task.make("p2", "parse", {}))  # duplicate of p1
+    k = d.add_task(Task.make("k", "store", "SINK"))
+    k2 = d.add_task(Task.make("k2", "store2", "SINK"))
+    d.add_stream("s", "p1")
+    d.add_stream("s", "p2")
+    d.add_stream("p1", "k")
+    d.add_stream("p2", "k2")
+    assert not is_dedup(d)
+    assert not is_dedup_fast(d)
+    dd = dedup(d)
+    assert is_dedup(dd)
+    assert len(dd.tasks) == 4  # p2 collapsed into p1
+    ddf = dedup_fast(d)
+    assert {t.type for t in ddf.tasks.values()} == {t.type for t in dd.tasks.values()}
+    assert len(ddf.tasks) == 4
+
+
+def test_signature_theorem_equivalence_iff_equal_sigs():
+    """sig(t_i) == sig(t_j) ⟺ t_i ↔ t_j, across several DAG shapes."""
+    dfs = [*fig1(), diamond_df("dia"), two_source_df("ts")]
+    sigs = {df.name: compute_signatures(df) for df in dfs}
+    for da in dfs:
+        for db in dfs:
+            if da.name == db.name:
+                continue
+            ch = EquivalenceChecker(da, db)
+            for ta in da.tasks:
+                for tb in db.tasks:
+                    assert ch.equivalent(ta, tb) == (
+                        sigs[da.name][ta] == sigs[db.name][tb]
+                    ), (da.name, ta, db.name, tb)

@@ -1,0 +1,160 @@
+"""Property-based tests (hypothesis) on the paper's §3.3 system invariants:
+
+  C1 (Sink Task Coverage): every submitted sink has an equivalent task in
+      the running set.
+  C2 (Task & Stream Minimization): running DAGs are disjoint + de-dup and
+      contain only tasks/streams in some submitted sink's ancestor graph.
+
+The invariants must hold after EVERY prefix of an arbitrary interleaved
+submit/remove sequence, for both merge strategies, and both strategies
+must agree on the resulting running-set size (signature ≡ faithful)."""
+from __future__ import annotations
+
+from typing import List
+
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import ReuseManager
+from repro.core.graph import Dataflow, Task
+from repro.core.invariants import check_all
+
+# -- random de-dup DAG strategy ------------------------------------------------
+
+_TYPES = [f"op{i}" for i in range(6)]
+_SOURCES = ["urban", "meter", "taxi"]
+_CONFIGS = [{}, {"a": 1}]
+
+
+@st.composite
+def dataflow(draw, name: str) -> Dataflow:
+    df = Dataflow(name)
+    n_src = draw(st.integers(1, 2))
+    srcs = draw(
+        st.lists(st.sampled_from(_SOURCES), min_size=n_src, max_size=n_src, unique=True)
+    )
+    nodes: List[str] = []
+    for s in srcs:
+        t = df.add_task(Task.make(f"{name}/src/{s}", s, "SOURCE"))
+        nodes.append(t.id)
+    n_mid = draw(st.integers(1, 6))
+    for i in range(n_mid):
+        typ = draw(st.sampled_from(_TYPES))
+        cfg = draw(st.sampled_from(_CONFIGS))
+        t = df.add_task(Task.make(f"{name}/m{i}", typ, cfg))
+        # parents: 1-2 existing nodes
+        n_par = draw(st.integers(1, min(2, len(nodes))))
+        parents = draw(
+            st.lists(st.sampled_from(nodes), min_size=n_par, max_size=n_par, unique=True)
+        )
+        for p in parents:
+            df.add_stream(p, t.id)
+        nodes.append(t.id)
+    # connect weak components (submitted dataflows must be one application)
+    comps = df.connected_components()
+    if len(comps) > 1:
+        reps = [sorted(c)[0] for c in comps]
+        join_parents = []
+        for rep in reps:
+            cands = [tid for tid in sorted(comps[reps.index(rep)])
+                     if not df.tasks[tid].is_sink]
+            join_parents.append(cands[-1])
+        j = df.add_task(Task.make(f"{name}/join", "join", {}))
+        for p in join_parents:
+            df.add_stream(p, j.id)
+    # every leaf gets a sink (submitted DAGs must terminate in sinks)
+    leaves = [tid for tid in df.tasks if not df.children(tid) and not df.tasks[tid].is_sink]
+    for j2, leaf in enumerate(leaves):
+        snk = df.add_task(Task.make(f"{name}/sink{j2}", "store", "SINK"))
+        df.add_stream(leaf, snk.id)
+    df.validate()
+    from repro.core.signatures import dedup_fast
+
+    return dedup_fast(df)
+
+
+@st.composite
+def op_sequence(draw):
+    n = draw(st.integers(2, 8))
+    dags = [draw(dataflow(f"df{i}")) for i in range(n)]
+    # interleaved ops: add all eventually; removes of present ones in between
+    ops = []
+    present: List[str] = []
+    pending = list(range(n))
+    while pending or (present and draw(st.booleans())):
+        if pending and (not present or draw(st.booleans())):
+            i = pending.pop(0)
+            ops.append(("add", i))
+            present.append(dags[i].name)
+        elif present:
+            idx = draw(st.integers(0, len(present) - 1))
+            ops.append(("remove", present.pop(idx)))
+        else:
+            break
+    return dags, ops
+
+
+@settings(max_examples=40, deadline=None, suppress_health_check=list(HealthCheck))
+@given(op_sequence())
+def test_invariants_hold_after_every_op(seq):
+    dags, ops = seq
+    by_name = {d.name: d for d in dags}
+    sig = ReuseManager(strategy="signature", check_invariants=False)
+    fai = ReuseManager(strategy="faithful", check_invariants=False)
+    for op, arg in ops:
+        if op == "add":
+            df = dags[arg]
+            sig.submit(df.copy())
+            fai.submit(df.copy())
+        else:
+            sig.remove(arg)
+            fai.remove(arg)
+        # C1 + C2 for both strategies, after every prefix
+        check_all(sig.submitted, sig.running, sig.task_maps, sig.phi)
+        check_all(fai.submitted, fai.running, fai.task_maps, fai.phi)
+        # strategies agree on the minimal running set size
+        assert sig.running_task_count == fai.running_task_count
+
+
+@settings(max_examples=25, deadline=None, suppress_health_check=list(HealthCheck))
+@given(op_sequence())
+def test_full_drain_empties_running_set(seq):
+    dags, ops = seq
+    mgr = ReuseManager(strategy="signature")
+    present = set()
+    for op, arg in ops:
+        if op == "add":
+            mgr.submit(dags[arg].copy())
+            present.add(dags[arg].name)
+        else:
+            mgr.remove(arg)
+            present.discard(arg)
+    for name in sorted(present):
+        mgr.remove(name)
+    assert mgr.running_task_count == 0
+    assert not mgr.running
+
+
+@settings(max_examples=25, deadline=None, suppress_health_check=list(HealthCheck))
+@given(op_sequence())
+def test_signature_bijection_oracle(seq):
+    """sig(t_i) == sig(t_j) ⟺ t_i ↔ t_j (the §5 beyond-paper theorem),
+    cross-checked via the faithful EquivalenceChecker on running DAGs."""
+    from repro.core.equivalence import EquivalenceChecker
+    from repro.core.signatures import compute_signatures
+
+    dags, ops = seq
+    mgr = ReuseManager(strategy="signature")
+    for op, arg in ops:
+        if op == "add":
+            mgr.submit(dags[arg].copy())
+        else:
+            mgr.remove(arg)
+    dfs = list(mgr.running.values())
+    for df in dfs[:2]:
+        sigs = compute_signatures(df)
+        checker = EquivalenceChecker(df, df)
+        tids = sorted(df.tasks)[:12]
+        for a in tids:
+            for b in tids:
+                assert (sigs[a] == sigs[b]) == checker.equivalent(a, b), (a, b)

@@ -1,0 +1,135 @@
+"""Per-kernel allclose vs. the pure-jnp oracle (ref.py), executing the
+Pallas kernel bodies in interpret mode on CPU. Shapes & dtypes swept."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_residual
+from repro.kernels.ssd import ssd_scan
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,sq,sk,h,kv,hd,causal,window",
+    [
+        (1, 128, 128, 4, 4, 64, True, 0),
+        (2, 64, 64, 4, 2, 32, True, 0),      # GQA
+        (1, 96, 96, 2, 1, 64, True, 0),       # MQA, ragged seq vs block
+        (1, 128, 128, 2, 2, 64, False, 0),    # bidirectional (encoder)
+        (1, 256, 256, 2, 2, 64, True, 64),    # sliding window
+        (2, 33, 77, 2, 2, 16, False, 0),      # cross-attn-like, unaligned
+    ],
+)
+def test_flash_attention(b, sq, sk, h, kv, hd, causal, window, dtype):
+    if causal and sq != sk:
+        pytest.skip("causal assumes aligned q/k")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (b, sq, h, hd), dtype)
+    k = _rand(ks[1], (b, sk, kv, hd), dtype)
+    v = _rand(ks[2], (b, sk, kv, hd), dtype)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    groups = h // kv
+    kr = jnp.repeat(k, groups, axis=2) if groups > 1 else k
+    vr = jnp.repeat(v, groups, axis=2) if groups > 1 else v
+    got = flash_attention(
+        q, kr, vr, causal=causal, window=window, block_q=64, block_k=64, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+# --------------------------------------------------------------- decode attention
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,smax,clen,h,kv,hd,window",
+    [
+        (2, 128, 100, 4, 4, 64, 0),
+        (2, 128, 128, 4, 2, 64, 0),    # GQA
+        (1, 256, 200, 8, 1, 32, 0),    # MQA
+        (1, 256, 250, 4, 2, 64, 64),   # sliding window
+        (3, 96, 1, 2, 2, 16, 0),       # first decode step
+    ],
+)
+def test_decode_attention(b, smax, clen, h, kv, hd, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (b, 1, h, hd), dtype)
+    kc = _rand(ks[1], (b, smax, kv, hd), dtype)
+    vc = _rand(ks[2], (b, smax, kv, hd), dtype)
+    cl = jnp.asarray(clen, jnp.int32)
+    want = ref.decode_attention_ref(q, kc, vc, cl, window=window)
+    got = decode_attention(q, kc, vc, cl, window=window, block_s=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+# --------------------------------------------------------------------- rmsnorm
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 128), (2, 7, 256), (1, 33, 512)])
+def test_rmsnorm(shape, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    x = _rand(ks[0], shape, dtype)
+    scale = 1.0 + 0.1 * _rand(ks[1], shape[-1:], jnp.float32)
+    want = ref.rmsnorm_ref(x, scale)
+    got = rmsnorm(x, scale, block_rows=8, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_residual(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = _rand(ks[0], (2, 17, 256), dtype)
+    r = _rand(ks[1], (2, 17, 256), dtype)
+    scale = 1.0 + 0.1 * _rand(ks[2], (256,), jnp.float32)
+    want_n, want_a = ref.rmsnorm_residual_ref(x, r, scale)
+    got_n, got_a = rmsnorm_residual(x, r, scale, block_rows=8, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got_a, np.float32), np.asarray(want_a, np.float32), **_tol(dtype)
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_n, np.float32), np.asarray(want_n, np.float32), **_tol(dtype)
+    )
+
+
+# ------------------------------------------------------------------------- ssd
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,nh,p,n,chunk",
+    [
+        (1, 64, 2, 32, 16, 16),
+        (2, 128, 4, 64, 64, 32),
+        (1, 256, 2, 64, 128, 128),
+    ],
+)
+def test_ssd_scan(b, s, nh, p, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    xh = _rand(ks[0], (b, s, nh, p), dtype)
+    dt = jax.nn.softplus(_rand(ks[1], (b, s, nh), jnp.float32))
+    a = -jnp.exp(0.5 * _rand(ks[2], (nh,), jnp.float32))
+    B_ssm = _rand(ks[3], (b, s, n), dtype)
+    C_ssm = _rand(jax.random.PRNGKey(5), (b, s, n), dtype)
+    want_y, want_h = ref.ssd_scan_ref(xh, dt, a, B_ssm, C_ssm, chunk=chunk)
+    got_y, got_h = ssd_scan(xh, dt, a, B_ssm, C_ssm, chunk=chunk, interpret=True)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y), **tol)
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h), **tol)

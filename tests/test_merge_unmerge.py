@@ -1,0 +1,215 @@
+"""Unit tests for the merge (§4.1) and unmerge (§4.2) algorithms through the
+ReuseManager, for both equivalence strategies."""
+import pytest
+
+from repro.core import Dataflow, DataflowError, ReuseManager, Task
+from helpers import chain_df, diamond_df, fig1, two_source_df
+
+STRATEGIES = ("faithful", "signature")
+
+
+@pytest.fixture(params=STRATEGIES)
+def mgr(request):
+    return ReuseManager(strategy=request.param, check_invariants=True)
+
+
+def test_fig1_merge_counts(mgr):
+    A, B, C, D = fig1()
+    assert mgr.submit(A).num_created == 4
+    rB = mgr.submit(B)
+    assert (rB.num_reused, rB.num_created) == (3, 2)
+    rC = mgr.submit(C)
+    assert (rC.num_reused, rC.num_created) == (4, 2)
+    rD = mgr.submit(D)
+    assert (rD.num_reused, rD.num_created) == (0, 4)
+    assert mgr.running_task_count == 12
+    assert mgr.submitted_task_count == 19
+    # A, B, C share one running DAG; D runs alone.
+    assert len(mgr.running) == 2
+    assert mgr.phi["A"] == mgr.phi["B"] == mgr.phi["C"]
+    assert mgr.phi["D"] != mgr.phi["A"]
+
+
+def test_full_containment_creates_nothing(mgr):
+    A, B, C, D = fig1()
+    mgr.submit(C)  # C contains B's and A's prefixes
+    rA = mgr.submit(A)
+    assert rA.num_created == 1  # only A's sink is new
+    assert rA.num_reused == 3
+
+
+def test_sink_map_points_to_running_tasks(mgr):
+    A, B, _, _ = fig1()
+    mgr.submit(A)
+    r = mgr.submit(B)
+    run_df = mgr.running[r.running_dag]
+    for sink_id, run_id in r.sink_map.items():
+        assert run_id in run_df.tasks
+        assert run_df.tasks[run_id].is_sink
+
+
+def test_merge_joins_two_running_dags(mgr):
+    """A submitted DAG with two sources merges two disjoint running DAGs."""
+    A = chain_df("A", "urban", [("parse", {})], "sa")
+    B = chain_df("B", "meter", [("parse", {})], "sb")
+    mgr.submit(A)
+    mgr.submit(B)
+    assert len(mgr.running) == 2
+    ts = two_source_df("TS")
+    r = mgr.submit(ts)
+    assert len(mgr.running) == 1  # merged into one running DAG
+    assert r.num_reused == 4  # both sources + both parses
+    assert mgr.phi["A"] == mgr.phi["B"] == mgr.phi["TS"]
+
+
+def test_unmerge_splits_running_dag(mgr):
+    A = chain_df("A", "urban", [("parse", {})], "sa")
+    B = chain_df("B", "meter", [("parse", {})], "sb")
+    mgr.submit(A)
+    mgr.submit(B)
+    ts = two_source_df("TS")
+    mgr.submit(ts)
+    assert len(mgr.running) == 1
+    r = mgr.remove("TS")
+    # The join+sink die; the running DAG splits back into two components.
+    assert len(mgr.running) == 2
+    assert len(r.terminated_tasks) == 2
+    assert mgr.phi["A"] != mgr.phi["B"]
+    assert mgr.running_task_count == 6
+
+
+def test_remove_keeps_shared_prefix(mgr):
+    A, B, C, D = fig1()
+    for df in (A, B, C, D):
+        mgr.submit(df)
+    r = mgr.remove("B")
+    # win task survives (C needs it); only B's sink dies.
+    assert len(r.terminated_tasks) == 1
+    assert mgr.running_task_count == 11
+    r = mgr.remove("C")
+    # C's sink + avg + win die now.
+    assert len(r.terminated_tasks) == 3
+    assert mgr.running_task_count == 8
+
+
+def test_remove_in_any_order_drains_to_zero(mgr):
+    import itertools
+
+    for order in itertools.permutations("ABCD"):
+        m = ReuseManager(strategy=mgr.strategy, check_invariants=True)
+        dfs = dict(zip("ABCD", fig1()))
+        for name in "ABCD":
+            m.submit(dfs[name])
+        for name in order:
+            m.remove(name)
+        assert m.running_task_count == 0
+        assert not m.running and not m.submitted
+
+
+def test_resubmission_after_removal_reuses(mgr):
+    A, B, _, _ = fig1()
+    mgr.submit(A)
+    mgr.submit(B)
+    mgr.remove("B")
+    B2 = chain_df(
+        "B2", "urban", [("parse", {}), ("kalman", {"q": 0.1}), ("win", {"w": 10})], "store_b"
+    )
+    r = mgr.submit(B2)
+    assert r.num_reused == 3  # prefix still running under A... plus nothing else
+    assert r.num_created == 2
+
+
+def test_duplicate_submit_rejected(mgr):
+    A, *_ = fig1()
+    mgr.submit(A)
+    with pytest.raises(DataflowError):
+        mgr.submit(chain_df("A", "urban", [("x", {})]))
+
+
+def test_non_dedup_submission_rejected(mgr):
+    d = Dataflow("dup")
+    d.add_task(Task.make("s", "urban", "SOURCE"))
+    d.add_task(Task.make("p1", "parse", {}))
+    d.add_task(Task.make("p2", "parse", {}))
+    d.add_task(Task.make("k1", "store", "SINK"))
+    d.add_task(Task.make("k2", "store", "SINK"))
+    d.add_stream("s", "p1")
+    d.add_stream("s", "p2")
+    d.add_stream("p1", "k1")
+    d.add_stream("p2", "k2")
+    with pytest.raises(DataflowError):
+        mgr.submit(d)
+
+
+def test_non_sink_leaf_rejected(mgr):
+    d = Dataflow("leaf")
+    d.add_task(Task.make("s", "urban", "SOURCE"))
+    d.add_task(Task.make("p", "parse", {}))
+    d.add_stream("s", "p")
+    with pytest.raises(DataflowError):
+        mgr.submit(d)
+
+
+def test_default_strategy_never_reuses():
+    mgr = ReuseManager(strategy="none", check_invariants=False)
+    A, B, C, D = fig1()
+    for df in (A, B, C, D):
+        assert mgr.submit(df).num_reused == 0
+    assert mgr.running_task_count == mgr.submitted_task_count == 19
+    mgr.remove("B")
+    # B has 5 tasks (src, parse, kalman, win, sink): 19 - 5 = 14.
+    assert mgr.running_task_count == 14
+
+
+def test_reuse_counts_fig1():
+    mgr = ReuseManager(strategy="signature")
+    A, B, C, D = fig1()
+    for df in (A, B, C, D):
+        mgr.submit(df)
+    counts = mgr.reuse_counts()
+    by_reuse = sorted(counts.values(), reverse=True)
+    # src, parse, kalman used by A+B+C = 3; win by B+C = 2; rest 1.
+    assert by_reuse[:4] == [3, 3, 3, 2]
+    assert all(c >= 1 for c in counts.values())
+
+
+def test_strategies_agree_on_plans():
+    """Faithful and signature strategies must produce identical structure."""
+    results = {}
+    for strategy in STRATEGIES:
+        m = ReuseManager(strategy=strategy, check_invariants=True)
+        dfs = [*fig1(), diamond_df("dia"), two_source_df("ts")]
+        recs = [m.submit(df) for df in dfs]
+        m.remove("B")
+        m.remove("dia")
+        results[strategy] = (
+            [(r.num_reused, r.num_created) for r in recs],
+            m.running_task_count,
+            sorted(len(df.tasks) for df in m.running.values()),
+        )
+    assert results["faithful"] == results["signature"]
+
+
+def test_journal_replay_reconstructs_state():
+    mgr = ReuseManager(strategy="signature")
+    for df in fig1():
+        mgr.submit(df)
+    mgr.remove("B")
+    clone = ReuseManager.replay(mgr.journal)
+    assert clone.running_task_count == mgr.running_task_count
+    assert set(clone.submitted) == set(mgr.submitted)
+    assert sorted(len(d.tasks) for d in clone.running.values()) == sorted(
+        len(d.tasks) for d in mgr.running.values()
+    )
+    clone.verify()
+
+
+def test_journal_file_restore(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    mgr = ReuseManager(strategy="signature", journal_path=path)
+    for df in fig1():
+        mgr.submit(df)
+    mgr.remove("C")
+    restored = ReuseManager.restore(path)
+    restored.verify()
+    assert restored.running_task_count == mgr.running_task_count

@@ -1,0 +1,95 @@
+"""Roofline HLO parser: trip-count multiplication, collective wire
+factors, slice-aware HBM accounting — on a hand-written HLO fixture."""
+import textwrap
+
+from repro.roofline import hlo_parse
+from repro.roofline.analysis import HW, kernel_boundary_bytes, model_flops
+
+FIXTURE = textwrap.dedent("""
+    HloModule jit_f, num_partitions=8
+
+    %body (param: (s32[], f32[4,64], f32[6,256,64])) -> (s32[], f32[4,64], f32[6,256,64]) {
+      %param = (s32[], f32[4,64]{1,0}, f32[6,256,64]{2,1,0}) parameter(0)
+      %gte0 = s32[] get-tuple-element(%param), index=0
+      %gte1 = f32[4,64]{1,0} get-tuple-element(%param), index=1
+      %gte2 = f32[6,256,64]{2,1,0} get-tuple-element(%param), index=2
+      %c1 = s32[] constant(1)
+      %add = s32[] add(%gte0, %c1)
+      %ds = f32[1,256,64]{2,1,0} dynamic-slice(%gte2, %gte0, %c1, %c1), dynamic_slice_sizes={1,256,64}
+      %w = f32[256,64]{1,0} bitcast(%ds)
+      %ag = f32[4,256]{0,1} all-gather(%gte1), channel_id=1, replica_groups=[2,4]<=[8], dimensions={1}
+      %dot = f32[4,64]{1,0} dot(%ag, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      ROOT %tup = (s32[], f32[4,64]{1,0}, f32[6,256,64]{2,1,0}) tuple(%add, %dot, %gte2)
+    }
+
+    %cond (param.1: (s32[], f32[4,64], f32[6,256,64])) -> pred[] {
+      %param.1 = (s32[], f32[4,64]{1,0}, f32[6,256,64]{2,1,0}) parameter(0)
+      %g = s32[] get-tuple-element(%param.1), index=0
+      %n = s32[] constant(6)
+      ROOT %lt = pred[] compare(%g, %n), direction=LT
+    }
+
+    ENTRY %main (p0: f32[6,256,64], p1: f32[4,64]) -> f32[4,64] {
+      %p0 = f32[6,256,64]{2,1,0} parameter(0)
+      %p1 = f32[4,64]{1,0} parameter(1)
+      %c0 = s32[] constant(0)
+      %tup0 = (s32[], f32[4,64]{1,0}, f32[6,256,64]{2,1,0}) tuple(%c0, %p1, %p0)
+      %wh = (s32[], f32[4,64]{1,0}, f32[6,256,64]{2,1,0}) while(%tup0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"6"}}
+      ROOT %out = f32[4,64]{1,0} get-tuple-element(%wh), index=1
+    }
+""")
+
+
+def test_trip_count_flops():
+    r = hlo_parse.analyze(FIXTURE)
+    # dot: 2 · (4·64) · 256 = 131072 per iter × 6 iters
+    assert r["flops"] == 6 * 131072.0
+
+
+def test_collective_wire_bytes():
+    r = hlo_parse.analyze(FIXTURE)
+    # all-gather operand f32[4,64] = 1024 B × 6 iters; ring factor (4−1)/4
+    assert r["collective_bytes_by_type"]["all-gather"] == 6 * 1024
+    assert r["collective_wire_bytes_by_type"]["all-gather"] == 6 * 1024 * 0.75
+    assert r["collective_counts_by_type"]["all-gather"] == 6
+
+
+def test_dynamic_slice_charged_at_slice_size():
+    r = hlo_parse.analyze(FIXTURE)
+    # the f32[6,256,64] operand must NOT be charged per iteration:
+    # hbm ≪ 6 iters × 393 KB
+    assert r["hbm_bytes"] < 6 * 65536 * 4 * 2 + 6 * (1024 * 8 + 65536 * 8) + 1e6
+
+
+def test_group_size_parsing():
+    assert hlo_parse._group_size("replica_groups=[2,4]<=[8]") == 4
+    assert hlo_parse._group_size("replica_groups={{0,1},{2,3}}") == 2
+
+
+def test_model_flops_families():
+    from repro import configs
+
+    cell_train = configs.shape_cell("train_4k")
+    cell_dec = configs.shape_cell("decode_32k")
+    for arch in ("qwen3-4b", "deepseek-v2-236b", "seamless-m4t-medium"):
+        cfg = configs.get_config(arch)
+        ft = model_flops(cfg, cell_train)
+        fd = model_flops(cfg, cell_dec)
+        assert ft > fd > 0
+        _, active = cfg.param_count()
+        # train ≈ 6·N_active·tokens within 2× (enc-dec splits params)
+        approx = 6.0 * active * cell_train.global_batch * cell_train.seq_len
+        assert 0.3 * approx <= ft <= 1.01 * approx
+
+
+def test_kernel_boundary_positive_for_kernel_archs():
+    from repro import configs
+
+    cell = configs.shape_cell("train_4k")
+    for arch, scope in (
+        ("qwen3-4b", "kernel_flash_attn"),
+        ("zamba2-2.7b", "kernel_ssd_scan"),
+        ("xlstm-1.3b", "kernel_mlstm_scan"),
+    ):
+        b = kernel_boundary_bytes(configs.get_config(arch), cell)
+        assert b.get(scope, 0) > 0, (arch, b)

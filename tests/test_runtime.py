@@ -1,0 +1,199 @@
+"""Data-plane integration tests: segments, broker, pause, defrag, and the
+paper's core guarantee — Reuse outputs are indistinguishable from Default.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ReuseManager
+from repro.runtime import (
+    PAUSE_EPSILON,
+    StragglerPolicy,
+    StreamSystem,
+    place_round_robin,
+)
+
+from helpers import chain_df, diamond_df, fig1, two_source_df
+
+STEPS = 12
+
+
+def run_system(strategy, dfs, steps=STEPS, removals=(), defrag=False):
+    sys_ = StreamSystem(strategy=strategy, check_invariants=(strategy != "none"))
+    for df in dfs:
+        sys_.submit(df.copy())
+    for name in removals:
+        sys_.remove(name)
+    if defrag:
+        sys_.defragment()
+    sys_.run(steps)
+    return sys_
+
+
+class TestOutputConsistency:
+    """Paper §3.3: running-DAG outputs must be identical to standalone runs."""
+
+    def test_fig1_reuse_equals_default(self):
+        A, B, C, D = fig1()
+        default = run_system("none", [A, B, C, D])
+        reuse = run_system("signature", [A, B, C, D])
+        for name in "ABCD":
+            d_dig = default.sink_digests(name)
+            r_dig = reuse.sink_digests(name)
+            assert d_dig == r_dig, f"sink outputs diverged for {name}"
+            for sink in d_dig.values():
+                assert sink["count"] == STEPS
+                assert sink["checksum"] != 0.0
+
+    def test_diamond_and_two_source_consistency(self):
+        dfs = [diamond_df("dia"), two_source_df("ts"), *fig1()]
+        default = run_system("none", dfs)
+        reuse = run_system("faithful", dfs)
+        for df in dfs:
+            assert default.sink_digests(df.name) == reuse.sink_digests(df.name)
+
+    def test_consistency_after_removal(self):
+        A, B, C, D = fig1()
+        default = run_system("none", [A, B, C, D], removals=["B"])
+        reuse = run_system("signature", [A, B, C, D], removals=["B"])
+        for name in "ACD":
+            assert default.sink_digests(name) == reuse.sink_digests(name)
+
+    def test_consistency_after_defrag(self):
+        """Defrag must not perturb outputs (state carries over)."""
+        A, B, C, D = fig1()
+        plain = run_system("signature", [A, B, C, D], removals=["B"])
+        defr = run_system("signature", [A, B, C, D], removals=["B"], defrag=True)
+        for name in "ACD":
+            assert plain.sink_digests(name) == defr.sink_digests(name)
+
+    def test_mid_run_merge_keeps_streams_aligned(self):
+        """Submit A, step, then submit B (reusing A's prefix), step more:
+        B's sink sees the stream from the step it joined onward."""
+        A, B, *_ = fig1()
+        sys_ = StreamSystem(strategy="signature")
+        sys_.submit(A)
+        sys_.run(5)
+        sys_.submit(B)
+        sys_.run(7)
+        digests = sys_.sink_digests("B")
+        (sink,) = digests.values()
+        assert sink["count"] == 7  # joined 5 steps in
+
+
+class TestPauseAndDefrag:
+    def test_pause_frees_cost_but_keeps_deployment(self):
+        A, B, C, D = fig1()
+        sys_ = StreamSystem(strategy="signature")
+        for df in (A, B, C, D):
+            sys_.submit(df)
+        r_before = sys_.step()
+        sys_.remove("D")  # D runs alone: all 4 of its tasks pause
+        r_after = sys_.step()
+        assert r_after.live_tasks == r_before.live_tasks - 4
+        assert r_after.paused_tasks == 4
+        assert r_after.cost < r_before.cost
+        # deployment unchanged (Storm can't kill a subset)
+        assert sys_.deployed_task_count == 12
+
+    def test_paused_overhead_is_nonzero(self):
+        A, *_ = fig1()
+        sys_ = StreamSystem(strategy="signature")
+        sys_.submit(A)
+        sys_.remove("A")
+        rep = sys_.step()
+        assert rep.live_tasks == 0
+        assert rep.paused_tasks == 4
+        assert rep.cost > 0  # ε residue — the paper's drain-phase overhead
+
+    def test_defrag_drops_paused_tasks_and_broker_hops(self):
+        A, B, C, D = fig1()
+        sys_ = StreamSystem(strategy="signature")
+        for df in (A, B, C, D):
+            sys_.submit(df)
+        sys_.remove("B")
+        sys_.step()
+        assert sys_.deployed_task_count == 12  # 11 live + 1 paused
+        sys_.executor.broker.reset_counters()
+        sys_.defragment()
+        sys_.step()
+        assert sys_.deployed_task_count == 11  # paused dropped
+        assert sys_.executor.broker.publishes == 0  # no cross-segment hops
+        rep = sys_.executor.reports[-1]
+        assert rep.paused_tasks == 0
+
+    def test_default_kills_topologies_on_remove(self):
+        A, B, *_ = fig1()
+        sys_ = StreamSystem(strategy="none")
+        sys_.submit(A)
+        sys_.submit(B)
+        assert sys_.deployed_task_count == 9
+        sys_.remove("A")
+        rep = sys_.step()
+        assert sys_.deployed_task_count == 5
+        assert rep.paused_tasks == 0  # kill, not pause
+
+
+class TestSegmentsAndBroker:
+    def test_incremental_launch_uses_broker(self):
+        A, B, *_ = fig1()
+        sys_ = StreamSystem(strategy="signature")
+        sys_.submit(A)
+        sys_.step()
+        before = sys_.executor.broker.publishes
+        sys_.submit(B)  # B's new tasks subscribe to A's kalman output
+        sys_.step()
+        assert sys_.executor.broker.publishes > before
+        assert len(sys_.executor.segments) == 2
+
+    def test_fully_contained_submission_launches_nothing(self):
+        _, _, C, _ = fig1()
+        A = chain_df("A2", "urban", [("parse", {}), ("kalman", {"q": 0.1})], "store_a")
+        sys_ = StreamSystem(strategy="signature")
+        sys_.submit(C)
+        n_seg = len(sys_.executor.segments)
+        # A2's entire prefix exists; only its sink differs from C's tasks
+        r = sys_.submit(A)
+        assert r.num_created == 1
+        assert len(sys_.executor.segments) == n_seg + 1
+
+    def test_multi_parent_canonical_order(self):
+        """Join tasks concatenate parent batches in signature order — stable
+        across Default/Reuse (covered indirectly by consistency tests; here
+        we check the join batch size doubles)."""
+        ts = two_source_df("ts")
+        sys_ = StreamSystem(strategy="signature")
+        r = sys_.submit(ts)
+        sys_.step()
+        join_run = r.plan.task_map["ts.j"]
+        assert sys_.task_batch[join_run] == 2 * sys_.base_batch
+
+
+class TestSchedulerModels:
+    def test_round_robin_placement(self):
+        p = place_round_robin({"seg1": 20, "seg2": 4})
+        # seg1: 3 workers (8+8+4), seg2: 1 worker → 4 workers, 1 node
+        assert p.workers_used == 4
+        assert p.nodes_used == 1
+        assert len(p.assignments["seg1"]) == 20
+
+    def test_placement_never_shares_worker_across_segments(self):
+        p = place_round_robin({"a": 9, "b": 1})
+        workers_a = {w for w in p.assignments["a"]}
+        workers_b = {w for w in p.assignments["b"]}
+        assert not (workers_a & workers_b)
+
+    def test_straggler_policy_flags_and_resets(self):
+        pol = StragglerPolicy(factor=2.0, alpha=1.0)
+        for step in range(3):
+            flagged = pol.observe(step, {"s1": 10.0, "s2": 10.0, "s3": 50.0})
+            if step == 0:
+                assert flagged == ["s3"]
+        assert pol.events and pol.events[0].segment == "s3"
+
+    def test_executor_redispatch_bookkeeping(self):
+        A, *_ = fig1()
+        sys_ = StreamSystem(strategy="signature")
+        sys_.submit(A)
+        sys_.step()
+        sys_.executor.redispatch("seg1")
+        assert sys_.executor.redispatches[-1][1] == "seg1"

@@ -1,0 +1,22 @@
+"""End-to-end system behaviour tests.
+
+Real integration tests for the data plane / serving / training live in
+test_runtime.py, test_serving.py and test_train.py; this file covers the
+manager-level end-to-end scenario from the paper's Fig. 1.
+"""
+from repro.core import ReuseManager
+
+from helpers import fig1
+
+
+def test_manager_end_to_end_fig1():
+    """Fig. 1 scenario: A+B+C merge to one running DAG, D alone; drain to 0."""
+    mgr = ReuseManager(strategy="signature", check_invariants=True)
+    A, B, C, D = fig1()
+    for df in (A, B, C, D):
+        mgr.submit(df)
+    assert len(mgr.running) == 2
+    assert mgr.running_task_count == 12
+    for name in ("B", "A", "D", "C"):
+        mgr.remove(name)
+    assert mgr.running_task_count == 0

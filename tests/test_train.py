@@ -1,0 +1,179 @@
+"""Training substrate: loss decreases, AdamW semantics, schedules,
+grad-accum equivalence, checkpoint save/restore (incl. async + resume)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data import TokenStream
+from repro.train import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    cross_entropy_loss,
+    make_train_step,
+    train_state_init,
+)
+from repro.train import checkpoint as ckpt
+
+
+def test_cross_entropy_masking():
+    logits = jnp.zeros((1, 4, 8))
+    labels = jnp.array([[1, 2, -1, -1]])
+    loss, n = cross_entropy_loss(logits, labels)
+    assert int(n) == 2
+    np.testing.assert_allclose(float(loss), np.log(8), rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    opt = AdamWConfig(peak_lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lr = cosine_schedule(opt)
+    # warmup from step 1 so the first update is non-zero
+    np.testing.assert_allclose(float(lr(jnp.asarray(0))), 0.1, rtol=1e-5)
+    np.testing.assert_allclose(float(lr(jnp.asarray(9))), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(lr(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert 0.09 < float(lr(jnp.asarray(100))) < 0.11
+
+
+def test_adamw_moves_towards_gradient():
+    opt = AdamWConfig(peak_lr=0.1, warmup_steps=0, total_steps=10, weight_decay=0.0)
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.ones((4,))}
+    mu, nu = adamw_init(params, opt)
+    p2, _, _, gnorm = adamw_update(grads, params, mu, nu, jnp.asarray(0), opt)
+    assert float(gnorm) == pytest.approx(2.0)
+    assert np.all(np.asarray(p2["w"]) < 1.0)
+
+
+def test_loss_decreases_small_model():
+    cfg = configs.get_smoke_config("qwen3-4b")
+    opt = AdamWConfig(peak_lr=3e-3, warmup_steps=5, total_steps=60)
+    step = jax.jit(make_train_step(cfg, opt), donate_argnums=0)
+    state = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    stream = TokenStream(cfg.vocab_size, 32, 8, seed=1)
+    losses = []
+    for i in range(30):
+        b = stream.batch(i % 4)  # few batches → memorizable
+        state, m = step(state, {"tokens": jnp.asarray(b["tokens"]), "labels": jnp.asarray(b["labels"])})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_grad_accum_equivalence():
+    cfg = configs.get_smoke_config("granite_20b")
+    opt = AdamWConfig(peak_lr=1e-3, warmup_steps=0, total_steps=10, clip_norm=0.0)
+    s1 = make_train_step(cfg, opt, accum=1)
+    s4 = make_train_step(cfg, opt, accum=4)
+    state_a = train_state_init(cfg, opt, jax.random.PRNGKey(3))
+    state_b = jax.tree.map(lambda x: x, state_a)
+    stream = TokenStream(cfg.vocab_size, 16, 8, seed=2)
+    b = stream.batch(0)
+    batch = {"tokens": jnp.asarray(b["tokens"]), "labels": jnp.asarray(b["labels"])}
+    a2, ma = jax.jit(s1)(state_a, batch)
+    b2, mb = jax.jit(s4)(state_b, batch)
+    np.testing.assert_allclose(float(ma["loss"]), float(mb["loss"]), rtol=1e-5)
+    for la, lb in zip(jax.tree.leaves(a2["params"]), jax.tree.leaves(b2["params"])):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=2e-4, atol=2e-5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = configs.get_smoke_config("xlstm_1_3b")
+    opt = AdamWConfig()
+    state = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, state)
+    assert ckpt.latest_step(d) == 7
+    target = jax.eval_shape(lambda: train_state_init(cfg, opt, jax.random.PRNGKey(0)))
+    restored = ckpt.restore(d, target=target)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    d = str(tmp_path / "ck")
+    state = {"w": jnp.arange(8.0), "step": jnp.asarray(1)}
+    saver = ckpt.AsyncCheckpointer(d)
+    for s in (1, 2, 3, 4, 5):
+        state["step"] = jnp.asarray(s)
+        saver.save_async(s, state)
+    saver.wait()
+    assert ckpt.latest_step(d) == 5
+    steps = sorted(int(x.split("_")[1]) for x in os.listdir(d) if x.startswith("step_"))
+    assert len(steps) <= 3  # gc keeps 3
+
+
+def test_checkpoint_resume_exact(tmp_path):
+    """Crash-resume: training N steps straight == train k, restore, train N−k."""
+    cfg = configs.get_smoke_config("granite_20b")
+    opt = AdamWConfig(peak_lr=1e-3, warmup_steps=0, total_steps=20)
+    step = jax.jit(make_train_step(cfg, opt))
+    stream = TokenStream(cfg.vocab_size, 16, 4, seed=5)
+
+    def batch(i):
+        b = stream.batch(i)
+        return {"tokens": jnp.asarray(b["tokens"]), "labels": jnp.asarray(b["labels"])}
+
+    ref = train_state_init(cfg, opt, jax.random.PRNGKey(1))
+    for i in range(6):
+        ref, _ = step(ref, batch(i))
+
+    d = str(tmp_path / "ck")
+    st = train_state_init(cfg, opt, jax.random.PRNGKey(1))
+    for i in range(3):
+        st, _ = step(st, batch(i))
+    ckpt.save(d, 3, st)
+    target = jax.eval_shape(lambda: train_state_init(cfg, opt, jax.random.PRNGKey(1)))
+    st = jax.tree.map(jnp.asarray, ckpt.restore(d, target=target))
+    for i in range(int(st["step"]), 6):
+        st, _ = step(st, batch(i))
+    for a, b in zip(jax.tree.leaves(ref["params"]), jax.tree.leaves(st["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-5, atol=1e-6)
+
+
+def test_token_stream_determinism_and_sharding():
+    g = TokenStream(1000, 32, 8, seed=9)
+    h0 = TokenStream(1000, 32, 8, seed=9, host_id=0, num_hosts=2)
+    h1 = TokenStream(1000, 32, 8, seed=9, host_id=1, num_hosts=2)
+    full = g.batch(5)["tokens"]
+    np.testing.assert_array_equal(full[:4], h0.batch(5)["tokens"])
+    np.testing.assert_array_equal(full[4:], h1.batch(5)["tokens"])
+    np.testing.assert_array_equal(full, g.batch(5)["tokens"])  # pure fn of index
+
+
+def test_checkpoint_restore_with_mesh_resharding(tmp_path):
+    """Elastic restore: checkpoint with specs, restore onto a live mesh
+    (the 512→256 pod-loss path; here a 1×1 mesh stands in — the spec
+    resolution/axis-dropping logic is what is under test)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_host_mesh
+
+    state = {"w": jnp.arange(32.0).reshape(4, 8), "step": jnp.asarray(3)}
+    specs = {"w": P("data", "model"), "step": P()}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, state, specs=specs)
+    mesh = make_host_mesh()
+    restored = ckpt.restore(d, mesh=mesh, target=jax.eval_shape(lambda: state))
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
+    assert restored["w"].sharding.mesh.shape["data"] == 1  # resharded onto live mesh
+
+
+def test_checkpoint_restore_drops_missing_axes(tmp_path):
+    """A checkpoint taken on a ('pod','data','model') mesh restores onto a
+    mesh without 'pod' — the spec axis is dropped, not an error."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_host_mesh
+
+    state = {"w": jnp.ones((8, 4))}
+    specs = {"w": P(("pod", "data"), "model")}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, state, specs=specs)
+    restored = ckpt.restore(d, mesh=make_host_mesh(), target=jax.eval_shape(lambda: state))
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))

@@ -1,0 +1,58 @@
+"""Workload generators match the paper's §5.1 statistics, and the trace
+benchmark lands inside the paper's reported reduction bands."""
+import pytest
+
+from repro.workloads import opmw_workload, riot_workload, rw_trace, seq_trace
+from repro.workloads.opmw import workload_stats
+
+
+def test_opmw_stats_match_paper():
+    s = workload_stats(opmw_workload())
+    assert s["dags"] == 35
+    assert s["total_tasks"] == 471          # published: 471
+    assert 200 <= s["unique_abstract"] <= 235   # published: 219
+    assert 255 <= s["equiv_classes"] <= 295     # Reuse peak ≈ 274
+    assert s["min_size"] >= 2 and s["max_size"] <= 38
+
+
+def test_riot_stats_match_paper():
+    dags = riot_workload()
+    s = workload_stats(dags)
+    assert s["dags"] == 21
+    assert s["total_tasks"] == 138          # published: 138
+    assert 4 <= s["min_size"] and s["max_size"] <= 8
+    types = {t.type for d in dags for t in d.tasks.values()}
+    assert len(types) == 19                  # published: 19 distinct
+    srcs = {t.type for d in dags for t in d.tasks.values() if t.is_source}
+    assert len(srcs) == 3
+
+
+def test_traces_well_formed():
+    dags = riot_workload()
+    names = {d.name for d in dags}
+    for events in (seq_trace(dags, 0), rw_trace(dags, 1)):
+        present = set()
+        for ev in events:
+            assert ev.name in names
+            if ev.op == "add":
+                assert ev.name not in present
+                present.add(ev.name)
+            else:
+                assert ev.name in present
+                present.discard(ev.name)
+        assert not present  # both traces fully drain
+
+
+@pytest.mark.slow
+def test_reduction_bands():
+    """Peak task reduction within the paper's 38–46 % (±4 % tolerance)."""
+    from benchmarks.workload_traces import run_trace_with_pause, summarize
+
+    for dags in (opmw_workload(), riot_workload()):
+        events = seq_trace(dags, seed=3)
+        s = summarize(run_trace_with_pause(dags, events), drain_start=len(dags))
+        assert 0.34 <= s["peak_task_reduction"] <= 0.50, s
+        assert s["peak_core_reduction"] >= 0.30, s
+        assert s["frac_tasks_shared"] >= 0.08, s
+        # the §5.3 pause crossover exists in the drain phase
+        assert s["crossover_steps"] >= 1
