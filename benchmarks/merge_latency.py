@@ -1,11 +1,19 @@
 """Merge-algorithm latency at scale (beyond-paper §Perf for the control
-plane): faithful bijection matching vs. Merkle signature index.
+plane), through the `repro.api` facade.
 
-The paper's merge checks ancestor-graph equivalence pairwise; the
-signature index makes submit O(V+E). This benchmark grows the running
-set to N dataflows and reports per-submit latency for both strategies —
-the number that decides whether the manager can sit on a 1000-node
-cluster's critical path.
+Part 1 — faithful bijection matching vs. Merkle signature index. The
+paper's merge checks ancestor-graph equivalence pairwise; the signature
+index makes submit O(V+E). This grows the running set to N dataflows and
+reports per-submit latency for both strategies — the number that decides
+whether the manager can sit on a 1000-node cluster's critical path.
+
+Part 2 — batched vs sequential submission. Under multi-tenant arrival
+churn (RIoTBench's 21 dataflows, OPMW's synthetic portals), N overlapping
+arrivals used to pay N independent merges; ``submit_many`` plans the batch
+together: one signature pass per DAG, cross-submission dedup inside the
+batch, and one merged-DAG rebuild per overlapping group. Reported:
+per-DAG submit cost sequential vs batched, on an overlapping batch and on
+a disjoint batch (where batching must not be slower).
 """
 from __future__ import annotations
 
@@ -16,11 +24,10 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import ReuseManager
-from repro.core.graph import Dataflow, Task
+from repro.api import Dataflow, ReuseSession, flow
 
 
-def _library(n_dags: int, seed: int = 0) -> List[Dataflow]:
+def _library(n_dags: int, seed: int = 0, groups: int | None = None) -> List[Dataflow]:
     """n_dags chains over G groups with nested shared prefixes.
 
     Prefix task types come from a *small common vocabulary* (parse,
@@ -32,42 +39,45 @@ def _library(n_dags: int, seed: int = 0) -> List[Dataflow]:
     index stays O(1) per task.
     """
     rng = np.random.default_rng(seed)
-    groups = max(n_dags // 6, 1)
+    if groups is None:
+        groups = max(n_dags // 6, 1)
     dags = []
     for i in range(n_dags):
         g = int(rng.integers(groups))
         depth = int(rng.integers(8, 16))
         suffix = int(rng.integers(2, 10))
-        name = f"d{i:04d}"
-        df = Dataflow(name)
-        prev = df.add_task(Task.make(f"{name}/src", f"src{g}", "SOURCE")).id
+        b = flow(f"d{i:04d}").source(f"src{g}")
         for k in range(depth):
             # same ⟨type, config⟩ at depth k in EVERY group
-            t = df.add_task(Task.make(f"{name}/p{k}", f"pre{k % 8}", {"stage": k}))
-            df.add_stream(prev, t.id)
-            prev = t.id
+            b.then(f"pre{k % 8}", stage=k)
         for k in range(suffix):
-            t = df.add_task(Task.make(f"{name}/s{k}", f"u{int(rng.integers(40))}", {}))
-            df.add_stream(prev, t.id)
-            prev = t.id
-        snk = df.add_task(Task.make(f"{name}/sink", "store", "SINK"))
-        df.add_stream(prev, snk.id)
-        dags.append(df)
+            b.then(f"u{int(rng.integers(40))}")
+        dags.append(b.sink("store").build())
     return dags
 
 
-def main(out_dir: str = "results/benchmarks") -> Dict:
-    os.makedirs(out_dir, exist_ok=True)
-    out: Dict[str, Dict] = {}
+def _disjoint_library(n_dags: int, seed: int = 0) -> List[Dataflow]:
+    """One source type per DAG — zero overlap, the batching worst case."""
+    rng = np.random.default_rng(seed)
+    dags = []
+    for i in range(n_dags):
+        b = flow(f"x{i:04d}").source(f"only{i}")
+        for k in range(int(rng.integers(6, 12))):
+            b.then(f"pre{k % 8}", stage=k)
+        dags.append(b.sink("store").build())
+    return dags
+
+
+def bench_strategies(out: Dict[str, Dict]) -> None:
     for n in (50, 100, 200):
         dags = _library(n, seed=4)
         rows = {}
         for strategy in ("faithful", "signature"):
-            mgr = ReuseManager(strategy=strategy)
+            session = ReuseSession(strategy=strategy)
             lat = []
             for df in dags:
                 t0 = time.perf_counter()
-                mgr.submit(df.copy())
+                session.submit(df.copy())
                 lat.append(time.perf_counter() - t0)
             rows[strategy] = {
                 "mean_ms": round(1e3 * float(np.mean(lat)), 3),
@@ -83,6 +93,54 @@ def main(out_dir: str = "results/benchmarks") -> Dict:
             f"vs signature {rows['signature']['last10_mean_ms']:.2f} ms "
             f"(×{speedup:.1f} at steady state)"
         )
+
+
+def _time_sequential(dags: List[Dataflow]) -> float:
+    session = ReuseSession(strategy="signature")
+    copies = [df.copy() for df in dags]  # copy outside the clock, like batched
+    t0 = time.perf_counter()
+    for df in copies:
+        session.submit(df)
+    return time.perf_counter() - t0
+
+
+def _time_batched(dags: List[Dataflow]) -> float:
+    session = ReuseSession(strategy="signature")
+    batch = [df.copy() for df in dags]
+    t0 = time.perf_counter()
+    session.submit_many(batch)
+    return time.perf_counter() - t0
+
+
+def bench_batched(out: Dict[str, Dict], repeats: int = 5) -> None:
+    cases = {
+        # heavy cross-arrival overlap: few groups, deep shared prefixes
+        "overlapping": _library(200, seed=7, groups=4),
+        # no overlap at all: batching must not cost anything
+        "disjoint": _disjoint_library(200, seed=7),
+    }
+    for label, dags in cases.items():
+        seq = min(_time_sequential(dags) for _ in range(repeats))
+        bat = min(_time_batched(dags) for _ in range(repeats))
+        speedup = seq / max(bat, 1e-9)
+        out[f"batch_{label}"] = {
+            "n_dags": len(dags),
+            "sequential_ms_per_dag": round(1e3 * seq / len(dags), 3),
+            "batched_ms_per_dag": round(1e3 * bat / len(dags), 3),
+            "batch_speedup": round(speedup, 2),
+        }
+        print(
+            f"{label:12s}: sequential {1e3 * seq / len(dags):.3f} ms/DAG "
+            f"vs submit_many {1e3 * bat / len(dags):.3f} ms/DAG "
+            f"(×{speedup:.2f})"
+        )
+
+
+def main(out_dir: str = "results/benchmarks") -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    out: Dict[str, Dict] = {}
+    bench_strategies(out)
+    bench_batched(out)
     with open(os.path.join(out_dir, "merge_latency.json"), "w") as f:
         json.dump(out, f, indent=1)
     return out

@@ -2,7 +2,8 @@
 reuse histogram over the 6 traces (OPMW/RIoT × SEQ/RW1/RW2).
 
 Default (no reuse) vs Reuse (signature strategy) run through the
-ReuseManager control plane; core usage uses the calibrated cost model
+`repro.api.ReuseSession` control plane (pause accounting rides the
+session's ``on_unmerge`` hook); core usage uses the calibrated cost model
 (cost_weight per task type × CORES_PER_UNIT, paused tasks at
 PAUSE_FRACTION — the §5.3 observation that 274 paused tasks ≈ 7.5 cores
 while 471 active ≈ 74).
@@ -19,9 +20,9 @@ import time
 from collections import Counter
 from typing import Dict, List
 
-from repro.core import ReuseManager
+from repro.api import ReuseSession
 from repro.ops import make_operator
-from repro.workloads import opmw_workload, riot_workload, rw_trace, seq_trace
+from repro.workloads import opmw_workload, replay, riot_workload, rw_trace, seq_trace
 
 CORES_PER_UNIT = 0.157   # calibrated: 471 π tasks ≈ 74 cores (paper §5.3)
 PAUSE_FRACTION = 0.17    # 274 paused ≈ 7.5 cores ⇒ ~0.027 / 0.157
@@ -54,49 +55,54 @@ def run_trace_with_pause(dags, events) -> Dict[str, List]:
     """
     from repro.core.signatures import compute_signatures
 
-    by_name = {d.name: d for d in dags}
-    default = ReuseManager(strategy="none")
-    reuse = ReuseManager(strategy="signature")
+    default = ReuseSession(strategy="none")
+    reuse = ReuseSession(strategy="signature")
     paused: Dict[str, float] = {}           # class signature -> cost
     sig_of_rid: Dict[str, str] = {}
     task_cost_by_rid: Dict[str, float] = {}
+
+    @reuse.on_unmerge
+    def _pool_terminated(ev) -> None:
+        # terminated tasks join the paused pool, keyed by equivalence class
+        for tid in ev.terminated_tasks:
+            paused[sig_of_rid.get(tid, tid)] = task_cost_by_rid.get(tid, 1.0)
 
     series = {
         "default_tasks": [], "reuse_tasks": [],
         "default_cores": [], "reuse_cores": [], "reuse_cores_defrag": [],
         "reuse_hist": [],
     }
-    for ev in events:
+    # The two sessions replay the same trace in lockstep; the reuse session's
+    # on_unmerge hook pools terminated tasks as they happen.
+    lockstep = zip(replay(default, dags, events), replay(reuse, dags, events))
+    for (ev, _), _ in lockstep:
         if ev.op == "add":
-            default.submit(by_name[ev.name].copy())
-            reuse.submit(by_name[ev.name].copy())
-            for df in reuse.running.values():
+            for df in reuse.manager.running.values():
                 sigs = compute_signatures(df)
                 for tid, t in df.tasks.items():
                     task_cost_by_rid.setdefault(tid, _task_cost(t))
                     sig_of_rid.setdefault(tid, sigs[tid])
-        else:
-            default.remove(ev.name)
-            r = reuse.remove(ev.name)
-            for tid in r.terminated_tasks:
-                paused[sig_of_rid.get(tid, tid)] = task_cost_by_rid.get(tid, 1.0)
 
-        d_tasks = sum(len(df) for df in default.running.values())
+        d_tasks = sum(len(df) for df in default.manager.running.values())
         d_cores = CORES_PER_UNIT * sum(
-            _task_cost(t) for df in default.running.values() for t in df.tasks.values()
+            _task_cost(t)
+            for df in default.manager.running.values()
+            for t in df.tasks.values()
         )
-        running_sigs = {sig_of_rid[tid] for df in reuse.running.values() for tid in df.tasks}
+        running_sigs = {
+            sig_of_rid[tid] for df in reuse.manager.running.values() for tid in df.tasks
+        }
         for sig in list(paused):
             if sig in running_sigs:
                 del paused[sig]
         r_tasks = reuse.running_task_count
         r_active_cores = CORES_PER_UNIT * sum(
-            _task_cost(t) for df in reuse.running.values() for t in df.tasks.values()
+            _task_cost(t) for df in reuse.manager.running.values() for t in df.tasks.values()
         )
         r_cores = r_active_cores + CORES_PER_UNIT * PAUSE_FRACTION * sum(paused.values())
 
         mult = Counter()
-        for sub, tmap in reuse.task_maps.items():
+        for sub, tmap in reuse.manager.task_maps.items():
             for rid in set(tmap.values()):
                 mult[rid] += 1
         hist = Counter(v for v in mult.values())

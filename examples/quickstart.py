@@ -1,4 +1,4 @@
-"""Quickstart: the paper's technique in 40 lines.
+"""Quickstart: the paper's technique through the `repro.api` facade.
 
 Two IoT dataflows sharing a preprocessing prefix are submitted; the
 Reuse manager merges them so the shared prefix runs once; removing one
@@ -6,45 +6,55 @@ unmerges without disturbing the other. Run:
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core.graph import Dataflow, Task
-from repro.runtime.system import StreamSystem
+from repro.api import ReuseSession, flow
 
 
-def make_dataflow(name: str, extra_op: str) -> Dataflow:
+def make_flow(name: str, extra_op: str):
     """urban sensor → parse → kalman → <extra_op> → store"""
-    df = Dataflow(name)
-    src = df.add_task(Task.make(f"{name}/src", "urban", "SOURCE"))
-    parse = df.add_task(Task.make(f"{name}/parse", "senml_parse", {"schema": "urban"}))
-    kalman = df.add_task(Task.make(f"{name}/kalman", "kalman", {"q": 0.1}))
-    extra = df.add_task(Task.make(f"{name}/{extra_op}", extra_op, {"w": 8}))
-    sink = df.add_task(Task.make(f"{name}/sink", "store", "SINK"))
-    df.add_stream(src.id, parse.id)
-    df.add_stream(parse.id, kalman.id)
-    df.add_stream(kalman.id, extra.id)
-    df.add_stream(extra.id, sink.id)
-    return df
+    return (
+        flow(name)
+        .source("urban")
+        .then("senml_parse", schema="urban")
+        .then("kalman", q=0.1)
+        .then(extra_op, w=8)
+        .sink("store")
+    )
 
 
 def main():
-    system = StreamSystem(strategy="signature", base_batch=8)
+    session = ReuseSession(strategy="signature", execute=True, base_batch=8)
+    session.on_merge(
+        lambda ev: print(f"  [hook] {ev.name} merged into {ev.running_dag} "
+                         f"(reused {ev.num_reused}, created {ev.num_created})")
+    )
 
-    a = system.submit(make_dataflow("alice", "win"))
+    a = session.submit(make_flow("alice", "win"))
     print(f"alice: created {a.num_created} tasks, reused {a.num_reused}")
 
-    b = system.submit(make_dataflow("bob", "avg"))
+    b = session.submit(make_flow("bob", "avg"))
     print(f"bob:   created {b.num_created} tasks, reused {b.num_reused} "
           f"(the urban→parse→kalman prefix)")
 
-    print(f"running tasks: {system.running_task_count} "
-          f"(two 5-task dataflows would be 10 without reuse)")
+    stats = session.stats()
+    print(f"running tasks: {stats.running_task_count} "
+          f"(two 5-task dataflows would be 10 without reuse — "
+          f"{stats.task_reduction:.0%} saved)")
 
-    system.run(5)
-    print("alice output:", system.sink_digests("alice"))
-    print("bob   output:", system.sink_digests("bob"))
+    session.run(5)
+    print("alice output:", session.sink_digests("alice"))
+    print("bob   output:", session.sink_digests("bob"))
 
-    system.remove("alice")
-    system.run(2)
-    print("after removing alice, bob still streams:", system.sink_digests("bob"))
+    session.remove("alice")
+    session.run(2)
+    print("after removing alice, bob still streams:", session.sink_digests("bob"))
+
+    # Batched arrivals: overlapping submissions are planned together —
+    # one signature pass, one merged-DAG rebuild (§4.1 at scale).
+    batch = session.submit_many(
+        [make_flow(f"tenant{i}", "win") for i in range(3)]
+    )
+    print(f"batch of 3 tenants: created {batch.num_created}, "
+          f"reused {batch.num_reused}, running DAGs {batch.running_dags}")
 
 
 if __name__ == "__main__":

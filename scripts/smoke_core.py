@@ -1,36 +1,30 @@
-"""Quick manual smoke of the core merge/unmerge — Fig. 1 scenario."""
+"""Quick manual smoke of the core merge/unmerge through `repro.api` —
+the paper's Fig. 1 scenario plus batched submission and journal replay."""
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import Dataflow, ReuseManager, Task
+from repro.api import ReuseSession, available_strategies, flow
+from repro.core import ReuseManager
 
 
-def fig1_dataflows():
+def fig1_flows():
     """Paper Fig. 1: A, B, C share a source + prefix; D has a different source."""
 
-    def df(name, chain, source, sink):
-        d = Dataflow(name)
-        prev = Task.make(f"{name}.src", source, "SOURCE")
-        d.add_task(prev)
-        for i, (typ, cfg) in enumerate(chain):
-            t = Task.make(f"{name}.{i}.{typ}", typ, cfg)
-            d.add_task(t)
-            d.add_stream(prev.id, t.id)
-            prev = t
-        snk = Task.make(f"{name}.sink", sink, "SINK")
-        d.add_task(snk)
-        d.add_stream(prev.id, snk.id)
-        return d
+    def build(name, chain, source, sink):
+        b = flow(name).source(source)
+        for typ, cfg in chain:
+            b.then(typ, **cfg)
+        return b.sink(sink)
 
-    A = df("A", [("parse", {}), ("kalman", {"q": 0.1})], "urban", "store_a")
-    B = df(
+    A = build("A", [("parse", {}), ("kalman", {"q": 0.1})], "urban", "store_a")
+    B = build(
         "B",
         [("parse", {}), ("kalman", {"q": 0.1}), ("sliding_window", {"w": 10})],
         "urban",
         "store_b",
     )
-    C = df(
+    C = build(
         "C",
         [
             ("parse", {}),
@@ -41,39 +35,48 @@ def fig1_dataflows():
         "urban",
         "store_c",
     )
-    D = df("D", [("parse", {}), ("kalman", {"q": 0.1})], "smartmeter", "store_d")
+    D = build("D", [("parse", {}), ("kalman", {"q": 0.1})], "smartmeter", "store_d")
     return A, B, C, D
 
 
 def main():
+    print("registered strategies:", available_strategies())
     for strategy in ("faithful", "signature"):
         print(f"=== strategy={strategy} ===")
-        mgr = ReuseManager(strategy=strategy, check_invariants=True)
-        A, B, C, D = fig1_dataflows()
-        rA = mgr.submit(A)
-        print("A:", "reused", rA.num_reused, "created", rA.num_created)
-        rB = mgr.submit(B)
-        print("B:", "reused", rB.num_reused, "created", rB.num_created)
-        rC = mgr.submit(C)
-        print("C:", "reused", rC.num_reused, "created", rC.num_created)
-        rD = mgr.submit(D)
-        print("D:", "reused", rD.num_reused, "created", rD.num_created)
+        session = ReuseSession(strategy=strategy, check_invariants=True)
+        A, B, C, D = fig1_flows()
+        for label, f in zip("ABCD", (A, B, C, D)):
+            r = session.submit(f)
+            print(f"{label}:", "reused", r.num_reused, "created", r.num_created)
+        mgr = session.manager
         print("running DAGs:", {n: len(df.tasks) for n, df in mgr.running.items()})
-        print("running task count:", mgr.running_task_count, "(submitted:", mgr.submitted_task_count, ")")
+        print("running task count:", session.running_task_count,
+              "(submitted:", session.submitted_task_count, ")")
         # Expect: A(4)+B reuse 3 create 2+C reuse 4 create 2+D create 4 → 4+2+2+4=12 running
-        rm = mgr.remove("B")
+        rm = session.remove("B")
         print("removed B; terminated:", sorted(rm.terminated_tasks))
-        print("running task count:", mgr.running_task_count)
-        mgr.verify()
-        mgr.remove("A")
-        mgr.remove("C")
-        mgr.remove("D")
-        print("after drain:", mgr.running_task_count, "running DAGs:", len(mgr.running))
-        mgr.verify()
+        print("running task count:", session.running_task_count)
+        session.verify()
+        for name in ("A", "C", "D"):
+            session.remove(name)
+        print("after drain:", session.running_task_count,
+              "running DAGs:", len(mgr.running))
+        session.verify()
+
+    # batched submit ≡ sequential submits
+    seq = ReuseSession(check_invariants=True)
+    for f in fig1_flows():
+        seq.submit(f)
+    bat = ReuseSession(check_invariants=True)
+    bat.submit_many(fig1_flows())
+    assert bat.running_task_count == seq.running_task_count == 12
+    assert {n: sorted(d.tasks) for n, d in bat.manager.running.items()} == {
+        n: sorted(d.tasks) for n, d in seq.manager.running.items()
+    }
+    print("submit_many ≡ sequential OK")
+
     # journal replay check
-    mgr = ReuseManager(strategy="signature")
-    A, B, C, D = fig1_dataflows()
-    mgr.submit(A); mgr.submit(B); mgr.submit(C); mgr.submit(D)
+    mgr = bat.manager
     mgr.remove("B")
     clone = ReuseManager.replay(mgr.journal)
     assert clone.running_task_count == mgr.running_task_count

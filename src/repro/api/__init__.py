@@ -1,0 +1,63 @@
+"""`repro.api` — the single public surface of the reproduction.
+
+The paper's Reusable Dataflow Manager (§4.3) is one control-plane entry
+point for a growing ecosystem of collaborating IoT applications. This
+package is that entry point for library users:
+
+  * :func:`flow` / :class:`DataflowBuilder` — fluent construction of
+    validated de-dup :class:`~repro.core.graph.Dataflow` DAGs::
+
+        df = (flow("alice")
+              .source("urban")
+              .then("senml_parse", schema="urban")
+              .then("kalman", q=0.1)
+              .sink("store")
+              .build())
+
+  * :class:`ReuseSession` — owns a control-plane
+    :class:`~repro.core.manager.ReuseManager` (or, with ``execute=True``,
+    a full :class:`~repro.runtime.system.StreamSystem` data plane) and
+    exposes ``submit / submit_many / remove / defragment / run / stats``
+    plus ``on_merge / on_unmerge / on_defrag`` observability hooks.
+
+  * the pluggable equivalence-strategy registry
+    (:func:`register_strategy`, :func:`available_strategies`,
+    :class:`MergeStrategy`) — new engines plug in without editing the
+    manager.
+
+Import stays light: the JAX data plane only loads when a session is
+created with ``execute=True``.
+"""
+from repro.core import DataflowError
+from repro.core.graph import Dataflow, Task
+from repro.core.manager import RemovalReceipt, SubmissionReceipt
+from repro.core.strategies import (
+    MergeStrategy,
+    available_strategies,
+    register_strategy,
+    resolve_strategy,
+)
+
+from .builder import DataflowBuilder, flow
+from .events import BatchSubmitReceipt, DefragEvent, MergeEvent, SessionStats, UnmergeEvent
+from .session import ReuseSession
+
+__all__ = [
+    "BatchSubmitReceipt",
+    "Dataflow",
+    "DataflowBuilder",
+    "DataflowError",
+    "DefragEvent",
+    "MergeEvent",
+    "MergeStrategy",
+    "RemovalReceipt",
+    "ReuseSession",
+    "SessionStats",
+    "SubmissionReceipt",
+    "Task",
+    "UnmergeEvent",
+    "available_strategies",
+    "flow",
+    "register_strategy",
+    "resolve_strategy",
+]

@@ -1,0 +1,246 @@
+"""ReuseSession — the facade over control plane and data plane.
+
+One object owns the paper's §4.3 Manager lifecycle: submissions, removals,
+defragmentation, execution and observability. By default the session is
+control-plane only (a :class:`~repro.core.manager.ReuseManager` — cheap,
+no JAX import); with ``execute=True`` it owns a full
+:class:`~repro.runtime.system.StreamSystem` whose jit data plane actually
+streams event batches.
+
+    session = ReuseSession(strategy="signature", execute=True)
+    session.on_merge(lambda ev: print("merged", ev.name, "→", ev.running_dag))
+    receipt = session.submit(flow("alice").source("urban")...)
+    batch = session.submit_many([flow_b, flow_c])
+    session.run(5)
+    print(session.stats().task_reduction)
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Union
+
+from repro.core import DataflowError, ReuseManager
+from repro.core.graph import Dataflow
+from repro.core.manager import RemovalReceipt, SubmissionReceipt
+from repro.core.strategies import MergeStrategy
+
+from .builder import DataflowBuilder, as_dataflow
+from .events import BatchSubmitReceipt, DefragEvent, MergeEvent, SessionStats, UnmergeEvent
+
+Submittable = Union[Dataflow, DataflowBuilder]
+Hook = Callable[[Any], None]
+
+
+class ReuseSession:
+    def __init__(
+        self,
+        strategy: Union[str, MergeStrategy] = "signature",
+        *,
+        execute: bool = False,
+        base_batch: int = 32,
+        check_invariants: bool = False,
+        journal_path: Optional[str] = None,
+        on_merge: Optional[Hook] = None,
+        on_unmerge: Optional[Hook] = None,
+        on_defrag: Optional[Hook] = None,
+    ):
+        self._system = None
+        if execute:
+            # Deferred import keeps control-plane sessions free of JAX.
+            from repro.runtime.system import StreamSystem
+
+            self._system = StreamSystem(
+                strategy=strategy,
+                base_batch=base_batch,
+                check_invariants=check_invariants,
+                journal_path=journal_path,
+            )
+            self.manager: ReuseManager = self._system.manager
+        else:
+            self.manager = ReuseManager(
+                strategy=strategy,
+                check_invariants=check_invariants,
+                journal_path=journal_path,
+            )
+        self._hooks: Dict[str, List[Hook]] = {"merge": [], "unmerge": [], "defrag": []}
+        if on_merge:
+            self._hooks["merge"].append(on_merge)
+        if on_unmerge:
+            self._hooks["unmerge"].append(on_unmerge)
+        if on_defrag:
+            self._hooks["defrag"].append(on_defrag)
+
+    # -- construction helpers ------------------------------------------------
+    @classmethod
+    def restore(cls, journal_path: str, **kwargs: Any) -> "ReuseSession":
+        """Rebuild a control-plane session from a durable operation journal."""
+        session = cls(**kwargs)
+        if session._system is not None:
+            raise DataflowError("restore() rebuilds the control plane only (execute=False)")
+        session.manager = ReuseManager.restore(
+            journal_path,
+            strategy=session.manager._strategy,
+            check_invariants=session.manager.check_invariants,
+        )
+        return session
+
+    # -- properties -----------------------------------------------------------
+    @property
+    def strategy(self) -> str:
+        return self.manager.strategy
+
+    @property
+    def executes(self) -> bool:
+        """True when the session owns a jit data plane (StreamSystem)."""
+        return self._system is not None
+
+    @property
+    def names(self) -> List[str]:
+        """Names of currently submitted dataflows."""
+        return sorted(self.manager.submitted)
+
+    @property
+    def running_task_count(self) -> int:
+        return self.manager.running_task_count
+
+    @property
+    def submitted_task_count(self) -> int:
+        return self.manager.submitted_task_count
+
+    # -- hooks ----------------------------------------------------------------
+    def on_merge(self, fn: Hook) -> Hook:
+        """Register a merge observer (usable as a decorator)."""
+        self._hooks["merge"].append(fn)
+        return fn
+
+    def on_unmerge(self, fn: Hook) -> Hook:
+        self._hooks["unmerge"].append(fn)
+        return fn
+
+    def on_defrag(self, fn: Hook) -> Hook:
+        self._hooks["defrag"].append(fn)
+        return fn
+
+    def _emit(self, kind: str, event: Any) -> None:
+        for fn in self._hooks[kind]:
+            fn(event)
+
+    # -- operations -----------------------------------------------------------
+    def submit(self, df: Submittable) -> SubmissionReceipt:
+        """Submit one dataflow (builder or Dataflow) — merge per §4.1."""
+        dataflow = as_dataflow(df)
+        target = self._system if self._system is not None else self.manager
+        receipt = target.submit(dataflow)
+        self._emit(
+            "merge",
+            MergeEvent(
+                name=receipt.name,
+                running_dag=receipt.running_dag,
+                num_reused=receipt.num_reused,
+                num_created=receipt.num_created,
+                batched=False,
+                receipt=receipt,
+            ),
+        )
+        return receipt
+
+    def submit_many(self, dfs: Iterable[Submittable]) -> BatchSubmitReceipt:
+        """Submit a batch with batch-aware planning (one signature pass and
+        one merged-DAG rebuild per overlapping group — see
+        :meth:`repro.core.manager.ReuseManager.submit_many`)."""
+        dataflows = [as_dataflow(df) for df in dfs]
+        target = self._system if self._system is not None else self.manager
+        receipts = target.submit_many(dataflows)
+        for receipt in receipts:
+            self._emit(
+                "merge",
+                MergeEvent(
+                    name=receipt.name,
+                    running_dag=receipt.running_dag,
+                    num_reused=receipt.num_reused,
+                    num_created=receipt.num_created,
+                    batched=True,
+                    receipt=receipt,
+                ),
+            )
+        return BatchSubmitReceipt(receipts=tuple(receipts))
+
+    def remove(self, name: str) -> RemovalReceipt:
+        """Remove a submission — unmerge per §4.2."""
+        target = self._system if self._system is not None else self.manager
+        receipt = target.remove(name)
+        self._emit(
+            "unmerge",
+            UnmergeEvent(
+                name=receipt.name,
+                terminated_tasks=set(receipt.terminated_tasks),
+                surviving_dags=list(receipt.surviving_dags),
+                receipt=receipt,
+            ),
+        )
+        return receipt
+
+    def defragment(self) -> DefragEvent:
+        """Relaunch fused segments (state-preserving defrag; data plane only)."""
+        system = self._require_system("defragment")
+        killed = system.defragment()
+        event = DefragEvent(
+            segments_killed=killed,
+            segments_after=len(system.executor.segments),
+            deployed_tasks_after=system.deployed_task_count,
+        )
+        self._emit("defrag", event)
+        return event
+
+    # -- execution -------------------------------------------------------------
+    def step(self):
+        return self._require_system("step").step()
+
+    def run(self, steps: int):
+        return self._require_system("run").run(steps)
+
+    def sink_digests(self, name: str) -> Dict[str, Dict[str, Any]]:
+        """Per-sink count/checksum for a submission (output identity check)."""
+        return self._require_system("sink_digests").sink_digests(name)
+
+    def _require_system(self, op: str):
+        if self._system is None:
+            raise DataflowError(
+                f"{op}() needs a data plane — create the session with execute=True"
+            )
+        return self._system
+
+    # -- observability -----------------------------------------------------------
+    def verify(self) -> None:
+        """Check the §3.3 system invariants (C1 sink coverage, C2 minimization)."""
+        self.manager.verify()
+
+    def reuse_counts(self) -> Dict[str, int]:
+        return self.manager.reuse_counts()
+
+    def stats(self) -> SessionStats:
+        mgr = self.manager
+        hist = Counter(mgr.reuse_counts().values()) if mgr.running else Counter()
+        deployed = segments = steps = 0
+        if self._system is not None:
+            deployed = self._system.deployed_task_count
+            segments = len(self._system.executor.segments)
+            steps = self._system.executor.step_count
+        return SessionStats(
+            strategy=self.strategy,
+            submitted_dataflows=len(mgr.submitted),
+            running_dataflows=len(mgr.running),
+            submitted_task_count=mgr.submitted_task_count,
+            running_task_count=mgr.running_task_count,
+            reuse_histogram=dict(hist),
+            deployed_task_count=deployed,
+            segments=segments,
+            steps_run=steps,
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        plane = "data" if self.executes else "control"
+        return (
+            f"ReuseSession(strategy={self.strategy!r}, plane={plane}, "
+            f"submitted={len(self.manager.submitted)}, running_tasks={self.running_task_count})"
+        )

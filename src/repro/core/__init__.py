@@ -32,8 +32,14 @@ from .graph import (
 )
 from .invariants import InvariantViolation, check_all, check_minimization, check_sink_coverage
 from .manager import RemovalReceipt, ReuseManager, SubmissionReceipt
-from .merge import MergePlan, apply_merge, find_overlapping, plan_merge
+from .merge import MergePlan, apply_merge, build_plan, find_overlapping, plan_merge
 from .signatures import SignatureIndex, compute_signatures, dedup_fast, is_dedup_fast, signature_of
+from .strategies import (
+    MergeStrategy,
+    available_strategies,
+    register_strategy,
+    resolve_strategy,
+)
 from .unmerge import UnmergePlan, apply_unmerge, plan_unmerge
 
 __all__ = [
@@ -44,6 +50,7 @@ __all__ = [
     "EquivalenceChecker",
     "InvariantViolation",
     "MergePlan",
+    "MergeStrategy",
     "RemovalReceipt",
     "ReuseManager",
     "SINK_CONFIG",
@@ -58,6 +65,8 @@ __all__ = [
     "ancestor_intersection",
     "apply_merge",
     "apply_unmerge",
+    "available_strategies",
+    "build_plan",
     "canonical_config",
     "check_all",
     "check_minimization",
@@ -75,6 +84,8 @@ __all__ = [
     "maximal_ancestor_intersection",
     "plan_merge",
     "plan_unmerge",
+    "register_strategy",
+    "resolve_strategy",
     "signature_of",
     "up",
 ]

@@ -6,23 +6,26 @@ Maintains the submitted set 𝔻, the running set 𝔻̄, the decomposition map
 crash-recovery (replay reconstructs the state byte-identically — the
 fault-tolerance story for the control plane).
 
-``strategy`` picks the equivalence engine: ``"signature"`` (Merkle index,
-beyond-paper fast path, default), ``"faithful"`` (the paper's bijection
-check) or ``"none"`` (the Default baseline — no reuse, every submission
-runs independently; used for the paper's Default-vs-Reuse comparisons).
+``strategy`` picks the equivalence engine from the pluggable registry
+(:mod:`repro.core.strategies`): ``"signature"`` (Merkle index, beyond-paper
+fast path, default), ``"faithful"`` (the paper's bijection check) or
+``"none"`` (the Default baseline — no reuse, every submission runs
+independently; used for the paper's Default-vs-Reuse comparisons). A
+:class:`~repro.core.strategies.MergeStrategy` instance is also accepted.
 """
 from __future__ import annotations
 
 import json
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 from . import invariants
-from .equivalence import ancestor_graph, is_dedup
+from .equivalence import ancestor_graph
 from .graph import Dataflow, DataflowError, Task
-from .merge import MergePlan, apply_merge, plan_merge
-from .signatures import SignatureIndex, compute_signatures, is_dedup_fast
+from .merge import MergePlan, apply_merge, build_plan
+from .signatures import SignatureIndex, compute_signatures
+from .strategies import MergeStrategy, resolve_strategy
 from .unmerge import UnmergePlan, apply_unmerge, plan_unmerge
 
 
@@ -49,13 +52,12 @@ class RemovalReceipt:
 class ReuseManager:
     def __init__(
         self,
-        strategy: str = "signature",
+        strategy: Union[str, MergeStrategy] = "signature",
         check_invariants: bool = False,
         journal_path: Optional[str] = None,
     ):
-        if strategy not in ("signature", "faithful", "none"):
-            raise ValueError(f"unknown strategy {strategy!r}")
-        self.strategy = strategy
+        self._strategy = resolve_strategy(strategy)
+        self.strategy = self._strategy.name  # back-compat string view
         self.check_invariants = check_invariants
         self.journal_path = journal_path
 
@@ -78,36 +80,36 @@ class ReuseManager:
         self._dag_counter += 1
         return f"run{self._dag_counter}"
 
+    # -- validation ----------------------------------------------------------
+    def _validate_submission(self, df: Dataflow) -> Dict[str, str]:
+        """Structural + de-dup validation; returns the signature map (one pass)."""
+        df.validate()
+        for tid in df.tasks:
+            t = df.tasks[tid]
+            if not t.is_sink and not df.children(tid):
+                raise DataflowError(
+                    f"task {tid!r} is a non-sink leaf; submitted DAGs must "
+                    f"terminate in sink tasks (paper §3.3 C2)"
+                )
+        sigs = compute_signatures(df)
+        if len(set(sigs.values())) != len(sigs):
+            raise DataflowError(f"submitted dataflow {df.name!r} is not de-dup (§3.2)")
+        return sigs
+
     # -- operations ------------------------------------------------------------
     def submit(self, df: Dataflow, validate: bool = True) -> SubmissionReceipt:
         """Merge a submitted de-dup DAG into the running set (paper §4.1)."""
         if df.name in self.submitted:
             raise DataflowError(f"dataflow {df.name!r} already submitted")
+        sigs: Optional[Dict[str, str]] = None
         if validate:
-            df.validate()
-            for tid in df.tasks:
-                t = df.tasks[tid]
-                if not t.is_sink and not df.children(tid):
-                    raise DataflowError(
-                        f"task {tid!r} is a non-sink leaf; submitted DAGs must "
-                        f"terminate in sink tasks (paper §3.3 C2)"
-                    )
-            if not is_dedup_fast(df):
-                raise DataflowError(f"submitted dataflow {df.name!r} is not de-dup (§3.2)")
+            sigs = self._validate_submission(df)
+        elif self._strategy.wants_signatures:
+            sigs = compute_signatures(df)
 
-        df = df.copy()
+        df = df.copy()  # signatures are keyed by task id, which copy preserves
         merged_name = self._mint_dag_name()
-        if self.strategy == "none":
-            plan = self._plan_no_reuse(df, merged_name)
-        else:
-            plan = plan_merge(
-                self.running,
-                df,
-                mint_id=self._mint_task_id,
-                merged_name=merged_name,
-                strategy=self.strategy,
-                index=self.index if self.strategy == "signature" else None,
-            )
+        plan = self._strategy.plan(self, df, merged_name, sigs=sigs)
         # Update Δ/Φ: all submissions supported by the absorbed DAGs now map
         # to the merged DAG.
         absorbed: Set[str] = set()
@@ -120,12 +122,7 @@ class ReuseManager:
         self.task_maps[df.name] = plan.task_map
         self.phi[df.name] = merged_name
         self.delta[merged_name] = absorbed | {df.name}
-        # Index maintenance: a created running task is equivalent to its
-        # submitted counterpart, so it inherits that signature.
-        if self.strategy == "signature":
-            sigs = compute_signatures(df)
-            for sub_id, run_id in plan.created.items():
-                self.index.add(run_id, sigs[sub_id])
+        self._strategy.on_merged(self, df, plan, sigs=sigs)
 
         self._journal({"op": "submit", "dataflow": df.to_json()})
         receipt = SubmissionReceipt(
@@ -140,14 +137,200 @@ class ReuseManager:
             self.verify()
         return receipt
 
-    def _plan_no_reuse(self, df: Dataflow, merged_name: str) -> MergePlan:
-        """Default baseline: instantiate everything afresh, merge nothing."""
-        plan = MergePlan(submitted_name=df.name, merged_name=merged_name, overlapping=[])
-        for tid in df.topological_order():
-            plan.created[tid] = self._mint_task_id(df.tasks[tid].type)
-        for s_up, s_down in df.streams:
-            plan.new_streams_internal.append((plan.created[s_up], plan.created[s_down]))
-        return plan
+    def submit_many(
+        self, dfs: Sequence[Dataflow], validate: bool = True
+    ) -> List[SubmissionReceipt]:
+        """Submit a batch with batch-aware planning (beyond-paper).
+
+        Under heavy multi-tenant arrival rates, N overlapping submissions
+        paid N independent merges: each submit re-hashed its DAG up to three
+        times (de-dup check, matching, index maintenance) and rebuilt the
+        growing merged running DAG from scratch. The batch planner
+
+          1. computes each DAG's Merkle signatures exactly once and shares
+             them across validation, matching and index maintenance;
+          2. groups the batch with the running set by source-type
+             connectivity (union-find), plans every member against the
+             running set *plus the batch tasks planned so far* — so
+             cross-submission overlap inside the batch is de-duplicated
+             before anything touches the running set; and
+          3. rebuilds each group's merged running DAG once, not once per
+             member.
+
+        The result is state-identical to sequential :meth:`submit` calls
+        (same running task ids and DAG names, same Δ/Φ, same journal entries
+        in the same order — the journal still holds one ``submit`` op per
+        member, so replay needs no new op type). Receipts differ from
+        sequential in one deliberate way: every member's receipt (and its
+        ``plan.merged_name``) names the group's *final* merged DAG — the
+        one actually present in the running set — rather than an
+        intermediate name a later member immediately absorbed.
+        Strategies without ``supports_batch`` fall back to sequential;
+        batch-capable strategies supply the matching via
+        :meth:`~repro.core.strategies.MergeStrategy.batch_match`.
+        """
+        dfs = list(dfs)
+        if not dfs:
+            return []
+        names_seen: Set[str] = set()
+        for df in dfs:
+            if df.name in self.submitted or df.name in names_seen:
+                raise DataflowError(f"dataflow {df.name!r} already submitted")
+            names_seen.add(df.name)
+        if not self._strategy.supports_batch or len(dfs) == 1:
+            return [self.submit(df, validate=validate) for df in dfs]
+
+        # One signature pass per member, shared with validation.
+        sigs_of: Dict[str, Dict[str, str]] = {}
+        copies: List[Dataflow] = []
+        for df in dfs:
+            sigs_of[df.name] = (
+                self._validate_submission(df) if validate else compute_signatures(df)
+            )
+            copies.append(df.copy())
+
+        # Group records; planning then walks members in BATCH order so dag
+        # names and task ids mint exactly as sequential submits would.
+        records: List[Dict[str, Any]] = []
+        record_of: Dict[str, Dict[str, Any]] = {}
+        for members, run_names in self._group_by_sources(copies):
+            overlap_tasks: Set[str] = set()
+            for rn in run_names:
+                overlap_tasks |= set(self.running[rn].tasks)
+            rec: Dict[str, Any] = {
+                "members": [],
+                "plans": [],
+                "run_names": run_names,
+                "overlap_tasks": overlap_tasks,
+                "created_by_sig": {},
+                "merged_name": "",
+                "last_idx": -1,
+            }
+            records.append(rec)
+            for df in members:
+                record_of[df.name] = rec
+
+        for idx, df in enumerate(copies):
+            rec = record_of[df.name]
+            merged_name = self._mint_dag_name()  # the group keeps the last name
+            sigs = sigs_of[df.name]
+            matches = self._strategy.batch_match(
+                self, df, sigs, rec["overlap_tasks"], rec["created_by_sig"]
+            )
+            plan = build_plan(df, matches, rec["run_names"], self._mint_task_id, merged_name)
+            for tid, rid in plan.created.items():
+                rec["created_by_sig"][sigs[tid]] = rid
+            rec["members"].append(df)
+            rec["plans"].append(plan)
+            rec["merged_name"] = merged_name
+            rec["last_idx"] = idx
+
+        # Apply each group once, in the order sequential submits would have
+        # last touched them (preserves the running set's insertion order).
+        for rec in sorted(records, key=lambda r: r["last_idx"]):
+            self._apply_group(rec, sigs_of)
+
+        # Journal + receipts in batch order, mirroring sequential submits.
+        receipts: List[SubmissionReceipt] = []
+        for df in copies:
+            plan = record_of[df.name]["plans"][record_of[df.name]["members"].index(df)]
+            self._journal({"op": "submit", "dataflow": df.to_json()})
+            receipts.append(
+                SubmissionReceipt(
+                    name=df.name,
+                    running_dag=plan.merged_name,
+                    sink_map={s: plan.task_map[s] for s in df.sink_ids},
+                    num_reused=plan.num_reused,
+                    num_created=plan.num_created,
+                    plan=plan,
+                )
+            )
+        if self.check_invariants:
+            self.verify()
+        return receipts
+
+    def _group_by_sources(
+        self, dfs: List[Dataflow]
+    ) -> List[Tuple[List[Dataflow], List[str]]]:
+        """Partition batch members + running DAGs into connected groups.
+
+        Two dataflows land in the same group iff they are transitively
+        connected through shared source types — exactly the closure that
+        sequential merging would produce (paper §4.1 source pruning).
+        Returns ``(members, overlapping_running_names)`` per group, members
+        in batch order.
+        """
+        parent: Dict[Any, Any] = {}
+
+        def find(x: Any) -> Any:
+            parent.setdefault(x, x)
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        def union(a: Any, b: Any) -> None:
+            ra, rb = find(a), find(b)
+            if ra != rb:
+                parent[ra] = rb
+
+        for df in dfs:
+            for st in df.source_types:
+                union(("df", df.name), ("src", st))
+        for run_name, run_df in self.running.items():
+            for st in run_df.source_types:
+                union(("run", run_name), ("src", st))
+
+        members: Dict[Any, List[Dataflow]] = {}
+        for df in dfs:
+            members.setdefault(find(("df", df.name)), []).append(df)
+        groups: List[Tuple[List[Dataflow], List[str]]] = []
+        for root, group_dfs in members.items():
+            run_names = [rn for rn in self.running if find(("run", rn)) == root]
+            groups.append((group_dfs, run_names))
+        return groups
+
+    def _apply_group(self, rec: Dict[str, Any], sigs_of: Dict[str, Dict[str, str]]) -> None:
+        """Enact one connected group of a batch in a single merged-DAG rebuild."""
+        members: List[Dataflow] = rec["members"]
+        plans: List[MergePlan] = rec["plans"]
+        run_names: List[str] = rec["run_names"]
+        merged_name: str = rec["merged_name"]
+        # Every member's plan reports the group's final DAG — intermediate
+        # minted names never materialize in the running set.
+        for plan in plans:
+            plan.merged_name = merged_name
+
+        merged = Dataflow(merged_name)
+        for rn in run_names:
+            for t in self.running[rn].tasks.values():
+                merged.add_task(t)
+            for s in self.running[rn].streams:
+                merged.add_stream(*s)
+        for df, plan in zip(members, plans):
+            for sub_id, run_id in plan.created.items():
+                t = df.tasks[sub_id]
+                merged.add_task(Task(id=run_id, type=t.type, config=t.config))
+            for s in plan.new_streams_internal:
+                merged.add_stream(*s)
+            for s in plan.new_streams_boundary:
+                merged.add_stream(*s)
+
+        absorbed: Set[str] = set()
+        for rn in run_names:
+            absorbed |= self.delta.pop(rn, set())
+            del self.running[rn]
+        self.running[merged_name] = merged
+        for sub_name in absorbed:
+            self.phi[sub_name] = merged_name
+        self.delta[merged_name] = set(absorbed)
+
+        for df, plan in zip(members, plans):
+            self.submitted[df.name] = df
+            self.task_maps[df.name] = plan.task_map
+            self.phi[df.name] = merged_name
+            self.delta[merged_name].add(df.name)
+            self._strategy.on_merged(self, df, plan, sigs=sigs_of[df.name])
 
     def remove(self, name: str) -> RemovalReceipt:
         """Remove a submitted DAG and unmerge the running set (paper §4.2)."""
@@ -188,8 +371,7 @@ class ReuseManager:
         del self.submitted[name]
         del self.task_maps[name]
         del self.phi[name]
-        if self.strategy == "signature":
-            self.index.remove_tasks(plan.terminated_tasks)
+        self._strategy.on_unmerged(self, plan.terminated_tasks)
 
         self._journal({"op": "remove", "name": name})
         receipt = RemovalReceipt(
@@ -247,7 +429,14 @@ class ReuseManager:
     def replay(
         cls, journal: List[Dict[str, Any]], strategy: Optional[str] = None, **kwargs: Any
     ) -> "ReuseManager":
-        """Rebuild manager state by re-running the operation journal."""
+        """Rebuild manager state by re-running the operation journal.
+
+        Durable journaling is suspended during the replay itself — otherwise
+        a ``journal_path`` pointing at the source file would re-append every
+        replayed op, duplicating the journal on each restore. The path is
+        re-armed afterwards so *subsequent* operations keep journaling.
+        """
+        journal_path = kwargs.pop("journal_path", None)
         mgr = cls(strategy=strategy or "signature", **kwargs)
         for entry in journal:
             if entry["op"] == "submit":
@@ -256,6 +445,10 @@ class ReuseManager:
                 mgr.remove(entry["name"])
             else:
                 raise ValueError(f"unknown journal op {entry['op']!r}")
+        # Keep the original entries (timestamps included), not the re-journaled
+        # copies, so a restored manager's journal matches the source.
+        mgr.journal = [dict(e) for e in journal]
+        mgr.journal_path = journal_path
         return mgr
 
     @classmethod
@@ -266,4 +459,5 @@ class ReuseManager:
                 line = line.strip()
                 if line:
                     journal.append(json.loads(line))
+        kwargs.setdefault("journal_path", journal_path)
         return cls.replay(journal, **kwargs)

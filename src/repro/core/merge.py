@@ -83,23 +83,63 @@ def _match_faithful(merged: Dataflow, submitted: Dataflow) -> Dict[str, str]:
 
 
 def _match_signature(
-    index: SignatureIndex, running: Dict[str, Dataflow], overlapping: List[str], submitted: Dataflow
+    index: SignatureIndex,
+    running: Dict[str, Dataflow],
+    overlapping: List[str],
+    submitted: Dataflow,
+    sigs: Optional[Dict[str, str]] = None,
 ) -> Dict[str, str]:
     """submitted task id → running task id via the signature index.
 
     Any index hit necessarily lies in an overlapping running DAG (equal
     signatures imply equal source ancestry), so the global index is safe.
+    ``sigs`` may carry precomputed signatures of ``submitted`` to avoid a
+    redundant hashing pass (the batched-submit path computes them once).
     """
     overlap_tasks: Set[str] = set()
     for name in overlapping:
         overlap_tasks |= set(running[name].tasks)
-    sigs = compute_signatures(submitted)
+    if sigs is None:
+        sigs = compute_signatures(submitted)
     matches: Dict[str, str] = {}
     for tid, sig in sigs.items():
         hit = index.lookup(sig)
         if hit is not None and hit in overlap_tasks:
             matches[tid] = hit
     return matches
+
+
+def build_plan(
+    submitted: Dataflow,
+    matches: Dict[str, str],
+    overlapping: List[str],
+    mint_id: Callable[[str], str],
+    merged_name: str,
+) -> MergePlan:
+    """Assemble a :class:`MergePlan` from an equivalence match.
+
+    ``matches`` maps submitted task ids to already-running task ids (T_o);
+    everything else becomes T_x with freshly minted ids, and streams are
+    split into internal (S_x*) and boundary (S_x⁺) — paper §4.1.
+    """
+    plan = MergePlan(
+        submitted_name=submitted.name, merged_name=merged_name, overlapping=list(overlapping)
+    )
+    plan.reused = dict(matches)
+    # T_x = T_n \ T_o — tasks to instantiate with fresh running ids.
+    for tid in submitted.topological_order():
+        if tid not in matches:
+            plan.created[tid] = mint_id(submitted.tasks[tid].type)
+    # S_x = S_x* ∪ S_x⁺ — paper §4.1. (up ∉ T_o ∧ down ∈ T_o is impossible:
+    # a matched task's ancestors are all matched.)
+    for s_up, s_down in submitted.streams:
+        if s_down in matches:
+            continue  # stream already present among reused tasks
+        if s_up in matches:
+            plan.new_streams_boundary.append((matches[s_up], plan.created[s_down]))
+        else:
+            plan.new_streams_internal.append((plan.created[s_up], plan.created[s_down]))
+    return plan
 
 
 def plan_merge(
@@ -128,24 +168,7 @@ def plan_merge(
     else:
         raise ValueError(f"unknown equivalence strategy {strategy!r}")
 
-    plan = MergePlan(
-        submitted_name=submitted.name, merged_name=merged_name, overlapping=list(overlapping)
-    )
-    plan.reused = matches
-    # T_x = T_n \ T_o — tasks to instantiate with fresh running ids.
-    for tid in submitted.topological_order():
-        if tid not in matches:
-            plan.created[tid] = mint_id(submitted.tasks[tid].type)
-    # S_x = S_x* ∪ S_x⁺ — paper §4.1. (up ∉ T_o ∧ down ∈ T_o is impossible:
-    # a matched task's ancestors are all matched.)
-    for s_up, s_down in submitted.streams:
-        if s_down in matches:
-            continue  # stream already present among reused tasks
-        if s_up in matches:
-            plan.new_streams_boundary.append((matches[s_up], plan.created[s_down]))
-        else:
-            plan.new_streams_internal.append((plan.created[s_up], plan.created[s_down]))
-    return plan
+    return build_plan(submitted, matches, overlapping, mint_id, merged_name)
 
 
 def apply_merge(

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 NEG_INF = -1e30
 _LANES = 128
 
@@ -143,7 +145,7 @@ def flash_attention(
             pltpu.VMEM((bq, _LANES), jnp.float32),  # l
             pltpu.VMEM((bq, hd), jnp.float32),      # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,15 @@
+"""Version-compatibility shims for Pallas-TPU across JAX releases.
+
+Newer JAX exposes ``jax.experimental.pallas.tpu.CompilerParams`` and
+``MemorySpace``; older releases (≤0.4.x) call the same objects
+``TPUCompilerParams`` / ``TPUMemorySpace``. Kernels import the aliases from
+here so they compile against either.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+
+__all__ = ["CompilerParams", "MemorySpace"]

@@ -78,6 +78,8 @@ def run_cell(
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older JAX wraps the dict in a list
+        cost = cost[0] if cost else {}
     print(f"memory_analysis: {mem}")
     print(
         "cost_analysis: flops=%.4g bytes=%.4g"

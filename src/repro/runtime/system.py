@@ -19,13 +19,12 @@ submission, kill on removal.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Set
+from typing import Any, Dict, List, Optional, Sequence, Set, Union
 
-from repro.core import ReuseManager
+from repro.core import MergeStrategy, ReuseManager
 from repro.core.defrag import canonical_parents, plan_defrag
 from repro.core.graph import Dataflow
 from repro.core.manager import RemovalReceipt, SubmissionReceipt
-from repro.core.signatures import compute_signatures
 
 from .executor import Executor, StepReport
 from .scheduler import Placement, place_round_robin
@@ -35,7 +34,7 @@ from .segment import SegmentSpec, compute_batches
 class StreamSystem:
     def __init__(
         self,
-        strategy: str = "signature",
+        strategy: Union[str, MergeStrategy] = "signature",
         base_batch: int = 32,
         check_invariants: bool = False,
         journal_path: Optional[str] = None,
@@ -53,6 +52,10 @@ class StreamSystem:
     def strategy(self) -> str:
         return self.manager.strategy
 
+    @property
+    def reuses(self) -> bool:
+        return self.manager._strategy.reuses
+
     def _mint_segment(self) -> str:
         self._seg_counter += 1
         return f"seg{self._seg_counter}"
@@ -60,12 +63,26 @@ class StreamSystem:
     # -- operations ---------------------------------------------------------------
     def submit(self, df: Dataflow) -> SubmissionReceipt:
         receipt = self.manager.submit(df)
+        self._deploy(receipt)
+        return receipt
+
+    def submit_many(self, dfs: Sequence[Dataflow]) -> List[SubmissionReceipt]:
+        """Batch submit: one batch-aware control-plane pass, then one segment
+        per member's created tasks, deployed in batch order (so boundary
+        streams between batch members flow older segment → newer, keeping the
+        executor's launch-order invariant)."""
+        receipts = self.manager.submit_many(dfs)
+        for receipt in receipts:
+            self._deploy(receipt)
+        return receipts
+
+    def _deploy(self, receipt: SubmissionReceipt) -> None:
         run_df = self.manager.running[receipt.running_dag]
         created: Set[str] = set(receipt.plan.created.values())
         if not created:  # fully contained in running DAGs — nothing to launch
-            self._segments_of[df.name] = []
+            self._segments_of[receipt.name] = []
             # sinks must still be forwarded? no — reused sinks already consume.
-            return receipt
+            return
 
         canon = canonical_parents(run_df)
         order = [tid for tid in run_df.topological_order() if tid in created]
@@ -86,13 +103,12 @@ class StreamSystem:
             batch_of={t: self.task_batch[t] for t in order},
         )
         self.executor.deploy(spec, run_df)
-        self._segments_of[df.name] = [spec.name]
-        return receipt
+        self._segments_of[receipt.name] = [spec.name]
 
     def remove(self, name: str) -> RemovalReceipt:
         own_segments = self._segments_of.pop(name, [])
         receipt = self.manager.remove(name)
-        if self.strategy == "none":
+        if not self.reuses:
             # Default: the submission owns its topologies — kill them.
             for seg_name in own_segments:
                 if seg_name in self.executor.segments:

@@ -16,7 +16,8 @@ from typing import List
 
 import numpy as np
 
-from repro.core.graph import Dataflow, Task
+from repro.api.builder import flow
+from repro.core.graph import Dataflow
 
 N_DAGS = 35
 TOTAL_TASKS = 471
@@ -79,27 +80,14 @@ def opmw_workload(seed: int = 7) -> List[Dataflow]:
         g = groups[i]
         d = depths[i]
         name = f"opmw{i:02d}"
-        df = Dataflow(name)
-        src = Task.make(f"{name}/src", f"opmw-src-{g}", "SOURCE")
-        df.add_task(src)
-        prev = src.id
+        b = flow(name).source(f"opmw-src-{g}")
         for k in range(d):
             # shared prefix task: type+config identical across the group
-            t = Task.make(f"{name}/p{k}", f"g{g}.step{k}", {"stage": k})
-            df.add_task(t)
-            df.add_stream(prev, t.id)
-            prev = t.id
+            b.then(f"g{g}.step{k}", stage=k)
         for k in range(int(suffix[i])):
-            typ = f"op{int(rng.integers(SUFFIX_POOL))}"
-            t = Task.make(f"{name}/s{k}", typ, {})
-            df.add_task(t)
-            df.add_stream(prev, t.id)
-            prev = t.id
-        sink = Task.make(f"{name}/sink", f"store{int(rng.integers(SINK_TYPES))}", "SINK")
-        df.add_task(sink)
-        df.add_stream(prev, sink.id)
-        df.validate()
-        dags.append(df)
+            b.then(f"op{int(rng.integers(SUFFIX_POOL))}")
+        b.sink(f"store{int(rng.integers(SINK_TYPES))}")
+        dags.append(b.build())
     assert sum(len(d) for d in dags) == TOTAL_TASKS
     return dags
 

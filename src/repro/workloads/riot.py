@@ -15,26 +15,17 @@ from __future__ import annotations
 
 from typing import List
 
-from repro.core.graph import Dataflow, Task
+from repro.api.builder import flow
+from repro.core.graph import Dataflow
 
 SOURCES = ("urban", "meter", "taxi")
 
 
 def _chain(name: str, src_type: str, steps, sink_type: str = "store") -> Dataflow:
-    df = Dataflow(name)
-    src = Task.make(f"{name}/src", src_type, "SOURCE")
-    df.add_task(src)
-    prev = src.id
-    for i, (typ, cfg) in enumerate(steps):
-        t = Task.make(f"{name}/{i}.{typ}", typ, cfg)
-        df.add_task(t)
-        df.add_stream(prev, t.id)
-        prev = t.id
-    sink = Task.make(f"{name}/sink", sink_type, "SINK")
-    df.add_task(sink)
-    df.add_stream(prev, sink.id)
-    df.validate()
-    return df
+    b = flow(name).source(src_type)
+    for typ, cfg in steps:
+        b.then(typ, **cfg)
+    return b.sink(sink_type).build()
 
 
 def riot_workload(seed: int = 0) -> List[Dataflow]:

@@ -1,8 +1,8 @@
-"""Submission/removal traces (paper §5.1)."""
+"""Submission/removal traces (paper §5.1) and trace replay over the API."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import Any, Iterable, Iterator, List, Tuple
 
 import numpy as np
 
@@ -13,6 +13,25 @@ from repro.core.graph import Dataflow
 class TraceEvent:
     op: str  # "add" | "remove"
     name: str
+
+
+def replay(
+    session, dags: Iterable[Dataflow], events: Iterable[TraceEvent]
+) -> Iterator[Tuple[TraceEvent, Any]]:
+    """Drive a :class:`repro.api.ReuseSession` through a trace.
+
+    Yields ``(event, receipt)`` after each step so callers can sample
+    point-in-time metrics (Fig. 2/3/4 accounting); lifecycle hooks on the
+    session observe merges/unmerges as they happen.
+    """
+    by_name = {d.name: d for d in dags}
+    for ev in events:
+        if ev.op == "add":
+            yield ev, session.submit(by_name[ev.name].copy())
+        elif ev.op == "remove":
+            yield ev, session.remove(ev.name)
+        else:
+            raise ValueError(f"unknown trace op {ev.op!r}")
 
 
 def seq_trace(dags: List[Dataflow], seed: int = 0) -> List[TraceEvent]:

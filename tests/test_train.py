@@ -49,6 +49,7 @@ def test_adamw_moves_towards_gradient():
     assert np.all(np.asarray(p2["w"]) < 1.0)
 
 
+@pytest.mark.slow
 def test_loss_decreases_small_model():
     cfg = configs.get_smoke_config("qwen3-4b")
     opt = AdamWConfig(peak_lr=3e-3, warmup_steps=5, total_steps=60)
@@ -63,6 +64,7 @@ def test_loss_decreases_small_model():
     assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
 
 
+@pytest.mark.slow
 def test_grad_accum_equivalence():
     cfg = configs.get_smoke_config("granite_20b")
     opt = AdamWConfig(peak_lr=1e-3, warmup_steps=0, total_steps=10, clip_norm=0.0)
