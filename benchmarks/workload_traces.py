@@ -8,20 +8,24 @@ session's ``on_unmerge`` hook); core usage uses the calibrated cost model
 PAUSE_FRACTION — the §5.3 observation that 274 paused tasks ≈ 7.5 cores
 while 471 active ≈ 74).
 
-``--execute`` additionally runs the RIoT SEQ trace through the real jit
-data plane (segments + broker) and cross-checks sink digests between
-Default and Reuse — the output-consistency guarantee.
+``--backend NAME`` instead drives the traces through a real
+ExecutionBackend data plane (``dryrun`` / ``inprocess`` / ``sharded``):
+every event deploys/pauses segments and the per-event live/paused/cost
+series come from the backend's own accounting. ``--backend dryrun`` sweeps
+a full trace in milliseconds (no JAX) and is the CI smoke for backend
+regressions; the jit backends additionally move real event batches.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
 from collections import Counter
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.api import ReuseSession
-from repro.ops import make_operator
+from repro.ops.costs import cost_weight_for_task
 from repro.workloads import opmw_workload, replay, riot_workload, rw_trace, seq_trace
 
 CORES_PER_UNIT = 0.157   # calibrated: 471 π tasks ≈ 74 cores (paper §5.3)
@@ -33,13 +37,7 @@ _COST_CACHE: Dict[tuple, float] = {}
 def _task_cost(task) -> float:
     key = (task.type, task.config)
     if key not in _COST_CACHE:
-        if task.is_source or task.is_sink:
-            _COST_CACHE[key] = 0.3
-        else:
-            try:
-                _COST_CACHE[key] = make_operator(task.type, task.config).cost_weight
-            except Exception:
-                _COST_CACHE[key] = 1.0
+        _COST_CACHE[key] = cost_weight_for_task(task)
     return _COST_CACHE[key]
 
 
@@ -155,9 +153,63 @@ def summarize(series: Dict[str, List], drain_start: int | None = None) -> Dict[s
     }
 
 
-def main(out_dir: str = "results/benchmarks") -> Dict[str, Dict]:
+def run_trace_on_backend(dags, events, backend: str) -> Dict[str, List]:
+    """Drive one trace through a real ExecutionBackend data plane.
+
+    Default (no reuse) and Reuse (signature) sessions replay the trace in
+    lockstep; after every event each data plane steps once and the series
+    record the *backend's own* live/paused/cost accounting — the same
+    counters for every backend (the ExecutionBackend contract), which is
+    what makes ``--backend dryrun`` a faithful millisecond-scale stand-in
+    for the jit planes.
+    """
+    default = ReuseSession(strategy="none", execute=True, backend=backend)
+    reuse = ReuseSession(strategy="signature", execute=True, backend=backend)
+    series: Dict[str, List] = {
+        "default_tasks": [], "reuse_tasks": [],
+        "default_paused": [], "reuse_paused": [],
+        "default_cores": [], "reuse_cores": [],
+    }
+    lockstep = zip(replay(default, dags, events), replay(reuse, dags, events))
+    for _ in lockstep:
+        d = default.step()
+        r = reuse.step()
+        series["default_tasks"].append(d.live_tasks)
+        series["reuse_tasks"].append(r.live_tasks)
+        series["default_paused"].append(d.paused_tasks)
+        series["reuse_paused"].append(r.paused_tasks)
+        series["default_cores"].append(round(d.cost, 4))
+        series["reuse_cores"].append(round(r.cost, 4))
+    return series
+
+
+def summarize_backend(series: Dict[str, List]) -> Dict[str, float]:
+    dt, rt = series["default_tasks"], series["reuse_tasks"]
+    dc, rc = series["default_cores"], series["reuse_cores"]
+    peak_i = max(range(len(dt)), key=lambda i: dt[i])
+    return {
+        "peak_default_tasks": dt[peak_i],
+        "peak_reuse_tasks": rt[peak_i],
+        "peak_task_reduction": round(1 - rt[peak_i] / max(dt[peak_i], 1), 3),
+        "cum_core_reduction": round(1 - sum(rc) / max(sum(dc), 1e-9), 3),
+        "peak_reuse_paused": max(series["reuse_paused"]),
+    }
+
+
+def main(
+    out_dir: str = "results/benchmarks",
+    backend: Optional[str] = None,
+    workloads_filter: Optional[List[str]] = None,
+    traces_filter: Optional[List[str]] = None,
+) -> Dict[str, Dict]:
     os.makedirs(out_dir, exist_ok=True)
+    if workloads_filter and (bad := set(workloads_filter) - {"opmw", "riot"}):
+        raise SystemExit(f"unknown --workloads {sorted(bad)} (choose from opmw, riot)")
+    if traces_filter and (bad := set(traces_filter) - {"seq", "rw1", "rw2"}):
+        raise SystemExit(f"unknown --traces {sorted(bad)} (choose from seq, rw1, rw2)")
     workloads = {"opmw": opmw_workload(), "riot": riot_workload()}
+    if workloads_filter:
+        workloads = {k: v for k, v in workloads.items() if k in workloads_filter}
     out: Dict[str, Dict] = {}
     for wname, dags in workloads.items():
         traces = {
@@ -165,9 +217,28 @@ def main(out_dir: str = "results/benchmarks") -> Dict[str, Dict]:
             "rw1": rw_trace(dags, seed=11),
             "rw2": rw_trace(dags, seed=23),
         }
+        if traces_filter:
+            traces = {k: v for k, v in traces.items() if k in traces_filter}
         for tname, events in traces.items():
-            drain_start = len(dags) if tname == "seq" else (2 * len(dags)) // 3 + 100
             t0 = time.time()
+            if backend:
+                series = run_trace_on_backend(dags, events, backend)
+                s = summarize_backend(series)
+                s["backend"] = backend
+                s["wall_s"] = round(time.time() - t0, 3)
+                out[f"{wname}_{tname}"] = s
+                path = os.path.join(out_dir, f"backend_{backend}_{wname}_{tname}.json")
+                with open(path, "w") as f:
+                    json.dump({"series": series, "summary": s}, f, indent=1)
+                print(
+                    f"{wname}/{tname} [{backend}]: peak tasks "
+                    f"{s['peak_default_tasks']}→{s['peak_reuse_tasks']} "
+                    f"(−{s['peak_task_reduction']:.0%}), cores "
+                    f"−{s['cum_core_reduction']:.0%} cum, peak paused "
+                    f"{s['peak_reuse_paused']}  [{s['wall_s']}s]"
+                )
+                continue
+            drain_start = len(dags) if tname == "seq" else (2 * len(dags)) // 3 + 100
             series = run_trace_with_pause(dags, events)
             s = summarize(series, drain_start=drain_start)
             s["wall_s"] = round(time.time() - t0, 2)
@@ -188,4 +259,19 @@ def main(out_dir: str = "results/benchmarks") -> Dict[str, Dict]:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--backend",
+        help="run traces through this ExecutionBackend (dryrun/inprocess/sharded) "
+        "instead of the control-plane cost model",
+    )
+    ap.add_argument("--workloads", help="comma list, e.g. opmw,riot")
+    ap.add_argument("--traces", help="comma list, e.g. seq,rw1,rw2")
+    ap.add_argument("--out-dir", default="results/benchmarks")
+    args = ap.parse_args()
+    main(
+        out_dir=args.out_dir,
+        backend=args.backend,
+        workloads_filter=args.workloads.split(",") if args.workloads else None,
+        traces_filter=args.traces.split(",") if args.traces else None,
+    )

@@ -23,10 +23,17 @@ package is that entry point for library users:
   * the pluggable equivalence-strategy registry
     (:func:`register_strategy`, :func:`available_strategies`,
     :class:`MergeStrategy`) — new engines plug in without editing the
-    manager.
+    manager;
+
+  * the pluggable execution-backend registry
+    (:func:`register_backend`, :func:`available_backends`,
+    :class:`ExecutionBackend`) — the data plane behind
+    ``ReuseSession(execute=True, backend=...)``: ``"inprocess"`` jit,
+    ``"sharded"`` multi-device, ``"dryrun"`` pure cost model.
 
 Import stays light: the JAX data plane only loads when a session is
-created with ``execute=True``.
+created with ``execute=True`` on a jit backend — ``backend="dryrun"``
+never imports JAX at all.
 """
 from repro.core import DataflowError
 from repro.core.graph import Dataflow, Task
@@ -37,9 +44,23 @@ from repro.core.strategies import (
     register_strategy,
     resolve_strategy,
 )
+from repro.runtime.backend import (
+    ExecutionBackend,
+    StepReport,
+    available_backends,
+    register_backend,
+    resolve_backend,
+)
 
 from .builder import DataflowBuilder, flow
-from .events import BatchSubmitReceipt, DefragEvent, MergeEvent, SessionStats, UnmergeEvent
+from .events import (
+    BatchSubmitReceipt,
+    DefragEvent,
+    MergeEvent,
+    SessionStats,
+    StepEvent,
+    UnmergeEvent,
+)
 from .session import ReuseSession
 
 __all__ = [
@@ -48,16 +69,22 @@ __all__ = [
     "DataflowBuilder",
     "DataflowError",
     "DefragEvent",
+    "ExecutionBackend",
     "MergeEvent",
     "MergeStrategy",
     "RemovalReceipt",
     "ReuseSession",
     "SessionStats",
+    "StepEvent",
+    "StepReport",
     "SubmissionReceipt",
     "Task",
     "UnmergeEvent",
+    "available_backends",
     "available_strategies",
     "flow",
+    "register_backend",
     "register_strategy",
+    "resolve_backend",
     "resolve_strategy",
 ]

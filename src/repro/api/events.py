@@ -8,7 +8,7 @@ objects delivered to ``on_merge`` / ``on_unmerge`` / ``on_defrag`` hooks.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Set, Tuple
+from typing import Any, Dict, List, Set, Tuple
 
 from repro.core.manager import RemovalReceipt, SubmissionReceipt
 
@@ -42,6 +42,18 @@ class DefragEvent:
     segments_killed: int
     segments_after: int
     deployed_tasks_after: int
+
+
+@dataclass(frozen=True)
+class StepEvent:
+    """Fired after every data-plane step (any backend) — the Fig. 2/3 counters."""
+
+    step: int
+    live_tasks: int
+    paused_tasks: int
+    cost: float  # core-equivalents this step
+    wall_ms: float
+    report: Any  # the backend's full StepReport
 
 
 @dataclass(frozen=True)
@@ -86,10 +98,11 @@ class SessionStats:
     submitted_task_count: int
     running_task_count: int
     reuse_histogram: Dict[int, int] = field(default_factory=dict)
-    # data-plane extras (0 when the session is control-plane only)
+    # data-plane extras (0/None when the session is control-plane only)
     deployed_task_count: int = 0
     segments: int = 0
     steps_run: int = 0
+    backend: Any = None  # ExecutionBackend registry name
 
     @property
     def task_reduction(self) -> float:

@@ -4,11 +4,16 @@ One object owns the paper's §4.3 Manager lifecycle: submissions, removals,
 defragmentation, execution and observability. By default the session is
 control-plane only (a :class:`~repro.core.manager.ReuseManager` — cheap,
 no JAX import); with ``execute=True`` it owns a full
-:class:`~repro.runtime.system.StreamSystem` whose jit data plane actually
-streams event batches.
+:class:`~repro.runtime.system.StreamSystem` driving a pluggable
+:class:`~repro.runtime.backend.ExecutionBackend`: ``backend="inprocess"``
+(default — the jit data plane actually streams event batches),
+``"sharded"`` (segments placed across ``jax.devices()``) or ``"dryrun"``
+(pure cost-model stepping, no JAX — full OPMW trace sweeps in
+milliseconds).
 
-    session = ReuseSession(strategy="signature", execute=True)
+    session = ReuseSession(strategy="signature", execute=True, backend="dryrun")
     session.on_merge(lambda ev: print("merged", ev.name, "→", ev.running_dag))
+    session.on_step(lambda ev: print(ev.live_tasks, ev.cost))
     receipt = session.submit(flow("alice").source("urban")...)
     batch = session.submit_many([flow_b, flow_c])
     session.run(5)
@@ -25,7 +30,14 @@ from repro.core.manager import RemovalReceipt, SubmissionReceipt
 from repro.core.strategies import MergeStrategy
 
 from .builder import DataflowBuilder, as_dataflow
-from .events import BatchSubmitReceipt, DefragEvent, MergeEvent, SessionStats, UnmergeEvent
+from .events import (
+    BatchSubmitReceipt,
+    DefragEvent,
+    MergeEvent,
+    SessionStats,
+    StepEvent,
+    UnmergeEvent,
+)
 
 Submittable = Union[Dataflow, DataflowBuilder]
 Hook = Callable[[Any], None]
@@ -37,16 +49,20 @@ class ReuseSession:
         strategy: Union[str, MergeStrategy] = "signature",
         *,
         execute: bool = False,
+        backend: Union[str, Any] = "inprocess",
         base_batch: int = 32,
         check_invariants: bool = False,
         journal_path: Optional[str] = None,
         on_merge: Optional[Hook] = None,
         on_unmerge: Optional[Hook] = None,
         on_defrag: Optional[Hook] = None,
+        on_step: Optional[Hook] = None,
     ):
         self._system = None
         if execute:
-            # Deferred import keeps control-plane sessions free of JAX.
+            # Deferred import keeps control-plane sessions light; the
+            # runtime package itself resolves backends lazily, so a
+            # backend="dryrun" session never imports JAX either.
             from repro.runtime.system import StreamSystem
 
             self._system = StreamSystem(
@@ -54,6 +70,7 @@ class ReuseSession:
                 base_batch=base_batch,
                 check_invariants=check_invariants,
                 journal_path=journal_path,
+                backend=backend,
             )
             self.manager: ReuseManager = self._system.manager
         else:
@@ -62,13 +79,20 @@ class ReuseSession:
                 check_invariants=check_invariants,
                 journal_path=journal_path,
             )
-        self._hooks: Dict[str, List[Hook]] = {"merge": [], "unmerge": [], "defrag": []}
+        self._hooks: Dict[str, List[Hook]] = {
+            "merge": [],
+            "unmerge": [],
+            "defrag": [],
+            "step": [],
+        }
         if on_merge:
             self._hooks["merge"].append(on_merge)
         if on_unmerge:
             self._hooks["unmerge"].append(on_unmerge)
         if on_defrag:
             self._hooks["defrag"].append(on_defrag)
+        if on_step:
+            self._hooks["step"].append(on_step)
 
     # -- construction helpers ------------------------------------------------
     @classmethod
@@ -91,8 +115,15 @@ class ReuseSession:
 
     @property
     def executes(self) -> bool:
-        """True when the session owns a jit data plane (StreamSystem)."""
+        """True when the session owns a data plane (StreamSystem)."""
         return self._system is not None
+
+    @property
+    def backend_name(self) -> Optional[str]:
+        """Registry name of the data-plane backend (None for control-plane)."""
+        if self._system is None:
+            return None
+        return self._system.backend.name or type(self._system.backend).__name__
 
     @property
     def names(self) -> List[str]:
@@ -119,6 +150,11 @@ class ReuseSession:
 
     def on_defrag(self, fn: Hook) -> Hook:
         self._hooks["defrag"].append(fn)
+        return fn
+
+    def on_step(self, fn: Hook) -> Hook:
+        """Register a per-step observer (fires on ``step()`` and ``run()``)."""
+        self._hooks["step"].append(fn)
         return fn
 
     def _emit(self, kind: str, event: Any) -> None:
@@ -186,7 +222,7 @@ class ReuseSession:
         killed = system.defragment()
         event = DefragEvent(
             segments_killed=killed,
-            segments_after=len(system.executor.segments),
+            segments_after=len(system.backend.segments),
             deployed_tasks_after=system.deployed_task_count,
         )
         self._emit("defrag", event)
@@ -194,10 +230,33 @@ class ReuseSession:
 
     # -- execution -------------------------------------------------------------
     def step(self):
-        return self._require_system("step").step()
+        report = self._require_system("step").step()
+        self._emit_step(report)
+        return report
 
     def run(self, steps: int):
-        return self._require_system("run").run(steps)
+        system = self._require_system("run")
+        reports = []
+        for _ in range(steps):
+            report = system.step()
+            self._emit_step(report)
+            reports.append(report)
+        return reports
+
+    def _emit_step(self, report: Any) -> None:
+        if not self._hooks["step"]:
+            return
+        self._emit(
+            "step",
+            StepEvent(
+                step=report.step,
+                live_tasks=report.live_tasks,
+                paused_tasks=report.paused_tasks,
+                cost=report.cost,
+                wall_ms=report.wall_ms,
+                report=report,
+            ),
+        )
 
     def sink_digests(self, name: str) -> Dict[str, Dict[str, Any]]:
         """Per-sink count/checksum for a submission (output identity check)."""
@@ -224,8 +283,8 @@ class ReuseSession:
         deployed = segments = steps = 0
         if self._system is not None:
             deployed = self._system.deployed_task_count
-            segments = len(self._system.executor.segments)
-            steps = self._system.executor.step_count
+            segments = len(self._system.backend.segments)
+            steps = self._system.backend.step_count
         return SessionStats(
             strategy=self.strategy,
             submitted_dataflows=len(mgr.submitted),
@@ -236,10 +295,11 @@ class ReuseSession:
             deployed_task_count=deployed,
             segments=segments,
             steps_run=steps,
+            backend=self.backend_name,
         )
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
-        plane = "data" if self.executes else "control"
+        plane = f"data[{self.backend_name}]" if self.executes else "control"
         return (
             f"ReuseSession(strategy={self.strategy!r}, plane={plane}, "
             f"submitted={len(self.manager.submitted)}, running_tasks={self.running_task_count})"

@@ -5,7 +5,9 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
 ).strip()
 
-"""Multi-pod dry-run: ``lower() + compile()`` every (architecture ×
+"""Dry-runs: model-compile cells and dataflow-trace simulations.
+
+Mode 1 (model cells) — ``lower() + compile()`` every (architecture ×
 input-shape × mesh) cell on placeholder devices, and extract the roofline
 terms from the compiled artifact.
 
@@ -19,6 +21,16 @@ compile memory stay isolated:
 or sweep everything (spawns one subprocess per cell):
 
     PYTHONPATH=src python -m repro.launch.dryrun --all --out-dir results/dryrun
+
+Mode 2 (dataflow traces) — replay an OPMW/RIoT arrival-departure trace
+through the ExecutionBackend data plane behind ``repro.api.ReuseSession``.
+With the default ``--backend dryrun`` this never initializes JAX (the
+registry resolves backends lazily), so a full 35-dataflow sweep answers
+in milliseconds — the control-plane capacity-planning companion to the
+compile cells:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --trace opmw/rw1 \
+        [--backend dryrun] [--steps-per-event 1] [--json out.json]
 """
 import argparse
 import json
@@ -106,10 +118,69 @@ def run_cell(
     return rec
 
 
+def run_dataflow_trace(
+    spec: str,
+    backend: str = "dryrun",
+    strategy: str = "signature",
+    steps_per_event: int = 1,
+) -> Dict[str, Any]:
+    """Replay ``workload/trace`` (e.g. ``opmw/rw1``) on an ExecutionBackend."""
+    from repro.api import ReuseSession
+    from repro.workloads import (
+        opmw_workload,
+        replay,
+        riot_workload,
+        rw_trace,
+        seq_trace,
+    )
+
+    workload, _, trace = spec.partition("/")
+    makers = {"opmw": opmw_workload, "riot": riot_workload}
+    if workload not in makers or trace not in ("seq", "rw1", "rw2"):
+        raise SystemExit(f"--trace must be {{opmw,riot}}/{{seq,rw1,rw2}}, got {spec!r}")
+    dags = makers[workload]()
+    seeds = {"seq": 3, "rw1": 11, "rw2": 23}
+    events = (
+        seq_trace(dags, seed=seeds[trace])
+        if trace == "seq"
+        else rw_trace(dags, seed=seeds[trace])
+    )
+
+    session = ReuseSession(strategy=strategy, execute=True, backend=backend)
+    live, paused, cost = [], [], []
+    t0 = time.time()
+    for _ in replay(session, dags, events):
+        report = None
+        for _ in range(steps_per_event):
+            report = session.step()
+        if report is None:  # steps_per_event=0: account without stepping
+            l, p, c = session._system.backend.account()
+        else:
+            l, p, c = report.live_tasks, report.paused_tasks, report.cost
+        live.append(l)
+        paused.append(p)
+        cost.append(round(c, 4))
+    return {
+        "trace": spec,
+        "backend": backend,
+        "strategy": strategy,
+        "events": len(events),
+        "wall_s": round(time.time() - t0, 3),
+        "peak_live_tasks": max(live),
+        "peak_paused_tasks": max(paused),
+        "peak_cores": max(cost),
+        "series": {"live_tasks": live, "paused_tasks": paused, "cores": cost},
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")
+    ap.add_argument("--trace", help="dataflow-trace mode: {opmw,riot}/{seq,rw1,rw2}")
+    ap.add_argument("--backend", default="dryrun", help="ExecutionBackend for --trace")
+    ap.add_argument("--strategy", default="signature", help="merge strategy for --trace")
+    ap.add_argument("--steps-per-event", type=int, default=1)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--experiment", help="named §Perf override set (launch/experiments.py)")
     ap.add_argument("--top-sites", type=int, default=0, help="report top-N HBM sites")
@@ -119,6 +190,21 @@ def main(argv=None) -> int:
     ap.add_argument("--out-dir", default="results/dryrun")
     ap.add_argument("--timeout", type=int, default=7200)
     args = ap.parse_args(argv)
+
+    if args.trace:
+        rec = run_dataflow_trace(
+            args.trace,
+            backend=args.backend,
+            strategy=args.strategy,
+            steps_per_event=args.steps_per_event,
+        )
+        summary = {k: v for k, v in rec.items() if k != "series"}
+        print(json.dumps(summary, indent=2))
+        if args.json:
+            os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+            with open(args.json, "w") as f:
+                json.dump(rec, f, indent=1)
+        return 0
 
     if args.all:
         return sweep(args)

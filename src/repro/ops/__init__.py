@@ -5,34 +5,46 @@ synthetic sources (:mod:`repro.ops.sources`), digest sinks
 (:mod:`repro.ops.sinks`), and the OPMW π fallback. Model-block operators
 (embed / layer-group / head for multi-tenant LM serving) are registered by
 :mod:`repro.serve.model_ops` when imported.
+
+The package init is lazy (PEP 562): the JAX operator modules only load on
+first attribute access, so the jax-free cost model (:mod:`repro.ops.costs`,
+used by the dry-run backend) can be imported without pulling in JAX.
 """
-from . import riot  # noqa: F401 — populates the registry
-from .base import (
-    EVENT_WIDTH,
-    Operator,
-    make_operator,
-    parse_config,
-    register,
-    register_fallback,
-    registered_types,
-    stateless,
-)
-from .sinks import make_sink
-from .sources import make_source
+from __future__ import annotations
 
+import importlib
+from typing import TYPE_CHECKING
 
-def operator_for_task(task, batch: int = 32) -> Operator:
-    """Instantiate the operator for a concrete task (source/sink aware)."""
-    if task.is_source:
-        return make_source(task.type, batch=batch)
-    if task.is_sink:
-        return make_sink(task.type)
-    return make_operator(task.type, task.config)
+from .costs import cost_weight_for, cost_weight_for_task, parse_config
 
+_BASE_NAMES = {
+    "EVENT_WIDTH",
+    "Operator",
+    "make_operator",
+    "register",
+    "register_fallback",
+    "registered_types",
+    "stateless",
+}
+
+if TYPE_CHECKING:  # pragma: no cover - static imports for type checkers
+    from .base import (
+        EVENT_WIDTH,
+        Operator,
+        make_operator,
+        register,
+        register_fallback,
+        registered_types,
+        stateless,
+    )
+    from .sinks import make_sink
+    from .sources import make_source
 
 __all__ = [
     "EVENT_WIDTH",
     "Operator",
+    "cost_weight_for",
+    "cost_weight_for_task",
     "make_operator",
     "make_sink",
     "make_source",
@@ -43,3 +55,32 @@ __all__ = [
     "registered_types",
     "stateless",
 ]
+
+
+def operator_for_task(task, batch: int = 32):
+    """Instantiate the JAX operator for a concrete task (source/sink aware)."""
+    from . import riot  # noqa: F401 — populates the registry (imports JAX)
+    from .base import make_operator
+    from .sinks import make_sink
+    from .sources import make_source
+
+    if task.is_source:
+        return make_source(task.type, batch=batch)
+    if task.is_sink:
+        return make_sink(task.type)
+    return make_operator(task.type, task.config)
+
+
+def __getattr__(name: str):
+    if name in _BASE_NAMES:
+        from . import riot  # noqa: F401 — registry side effects before use
+        module = importlib.import_module(f"{__name__}.base")
+    elif name == "make_sink":
+        module = importlib.import_module(f"{__name__}.sinks")
+    elif name == "make_source":
+        module = importlib.import_module(f"{__name__}.sources")
+    else:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(module, name)
+    globals()[name] = value  # cache for subsequent lookups
+    return value

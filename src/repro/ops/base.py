@@ -19,12 +19,13 @@ calibrated per task family and also cross-checked against measured FLOPs.
 """
 from __future__ import annotations
 
-import json
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from .costs import parse_config  # noqa: F401 — canonical home is the jax-free cost model
 
 # Payload width of an event batch: every event is a fixed-width float vector
 # (sensor observations: timestamp, value channels, quality flags ...).
@@ -74,21 +75,6 @@ def register_fallback(factory: OperatorFactory) -> OperatorFactory:
     global _FALLBACK
     _FALLBACK = factory
     return factory
-
-
-def parse_config(config: Any) -> Dict[str, Any]:
-    """Inverse of :func:`repro.core.graph.canonical_config` for dict configs."""
-    if isinstance(config, Mapping):
-        return dict(config)
-    if isinstance(config, str):
-        if config in ("SOURCE", "SINK"):
-            return {}
-        try:
-            obj = json.loads(config)
-            return obj if isinstance(obj, dict) else {"value": obj}
-        except (json.JSONDecodeError, ValueError):
-            return {"value": config}
-    return {}
 
 
 def make_operator(type_name: str, config: Any) -> Operator:

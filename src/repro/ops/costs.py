@@ -1,0 +1,114 @@
+"""Task cost model — the single source of truth for ``cost_weight``.
+
+``cost_weight`` is the relative per-event CPU cost used by the resource
+accounting that reproduces the paper's Fig. 3 (cumulative cores). The jit
+operator factories (:mod:`repro.ops.riot`, :mod:`repro.ops.sources`,
+:mod:`repro.ops.sinks`, :mod:`repro.serve.model_ops`) read their weights
+from here, and :class:`repro.runtime.dryrun.DryRunBackend` evaluates the
+same weights **without** instantiating any JAX operator — which is what
+makes its cost trajectories contract-identical to the jit backends while
+never importing JAX.
+
+This module must therefore stay free of JAX imports.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Mapping
+
+SOURCE_COST = 0.3
+SINK_COST = 0.3
+
+# RIoTBench task families (parse < filter < window stats < predict) —
+# relative weights mirroring the costs reported per category.
+RIOT_COSTS: Dict[str, float] = {
+    # ETL
+    "senml_parse": 3.0,
+    "csv_parse": 2.0,
+    "range_filter": 0.5,
+    "bloom_filter": 1.5,
+    "interpolate": 1.5,
+    "join": 0.4,
+    "annotate": 0.3,
+    # STATS
+    "kalman": 2.0,
+    "win": 1.8,
+    "avg": 1.0,
+    "moment2": 1.4,
+    "distinct_count": 1.1,
+    # PREDICT
+    "linreg": 1.6,
+    "dtree": 1.3,
+    "sliding_linreg": 2.2,
+    "error_estimate": 0.4,
+}
+
+# LM-pipeline stages (multi-tenant reuse serving).
+LM_EMBED_COST = 0.2
+LM_STAGE_COST_PER_BLOCK = 1.0
+LM_HEAD_COST = 0.4
+
+# OPMW synthetic π task: cost scales with the iteration count.
+PI_COST_PER_ITER = 0.02
+PI_DEFAULT_ITERS = 100
+
+
+def parse_config(config: Any) -> Dict[str, Any]:
+    """Inverse of :func:`repro.core.graph.canonical_config` for dict configs."""
+    if isinstance(config, Mapping):
+        return dict(config)
+    if isinstance(config, str):
+        if config in ("SOURCE", "SINK"):
+            return {}
+        try:
+            obj = json.loads(config)
+            return obj if isinstance(obj, dict) else {"value": obj}
+        except (json.JSONDecodeError, ValueError):
+            return {"value": config}
+    return {}
+
+
+def pi_cost(cfg: Mapping[str, Any]) -> float:
+    return PI_COST_PER_ITER * int(cfg.get("iters", PI_DEFAULT_ITERS))
+
+
+def lm_stage_cost(cfg: Mapping[str, Any]) -> float:
+    lo, hi = (int(v) for v in str(cfg.get("layers", "0-0")).split("-"))
+    return LM_STAGE_COST_PER_BLOCK * (hi - lo + 1)
+
+
+def cost_weight_for(
+    type_name: str,
+    config: Any = None,
+    *,
+    is_source: bool = False,
+    is_sink: bool = False,
+) -> float:
+    """cost_weight of the operator ⟨type, config⟩ — without building it.
+
+    Must stay in lockstep with :func:`repro.ops.operator_for_task`: the
+    conformance tests assert that dry-run and jit backends report identical
+    cost trajectories.
+    """
+    if is_source:
+        return SOURCE_COST
+    if is_sink:
+        return SINK_COST
+    if type_name in RIOT_COSTS:
+        return RIOT_COSTS[type_name]
+    cfg = parse_config(config)
+    if type_name == "lm_embed":
+        return LM_EMBED_COST
+    if type_name == "lm_stage":
+        return lm_stage_cost(cfg)
+    if type_name == "lm_head":
+        return LM_HEAD_COST
+    # unknown task types fall back to the OPMW iterative-π logic (§5.1)
+    return pi_cost(cfg)
+
+
+def cost_weight_for_task(task: Any) -> float:
+    """cost_weight of a concrete :class:`repro.core.graph.Task`."""
+    return cost_weight_for(
+        task.type, task.config, is_source=task.is_source, is_sink=task.is_sink
+    )

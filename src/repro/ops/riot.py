@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from .base import EVENT_WIDTH, Operator, register, register_fallback, stateless
+from .costs import RIOT_COSTS, pi_cost
 
 VAL = slice(1, 6)  # observation channels
 FLAG = 6
@@ -47,7 +48,7 @@ def senml_parse(cfg: Dict[str, Any]) -> Operator:
         vals = x[:, VAL] * scale + offset
         return x.at[:, VAL].set(vals)
 
-    return stateless("senml_parse", fn, cost=3.0)
+    return stateless("senml_parse", fn, cost=RIOT_COSTS["senml_parse"])
 
 
 @register("csv_parse")
@@ -59,7 +60,7 @@ def csv_parse(cfg: Dict[str, Any]) -> Operator:
         vals = jnp.roll(x[:, VAL], shift=shift, axis=1)
         return x.at[:, VAL].set(vals)
 
-    return stateless("csv_parse", fn, cost=2.0)
+    return stateless("csv_parse", fn, cost=RIOT_COSTS["csv_parse"])
 
 
 @register("range_filter")
@@ -72,7 +73,7 @@ def range_filter(cfg: Dict[str, Any]) -> Operator:
         ok = (x[:, 1] >= lo) & (x[:, 1] <= hi)
         return x.at[:, FLAG].set(x[:, FLAG] * ok.astype(x.dtype))
 
-    return stateless("range_filter", fn, cost=0.5)
+    return stateless("range_filter", fn, cost=RIOT_COSTS["range_filter"])
 
 
 @register("bloom_filter")
@@ -95,7 +96,7 @@ def bloom_filter(cfg: Dict[str, Any]) -> Operator:
         y = x.at[:, FLAG].set(x[:, FLAG] * (~seen).astype(x.dtype))
         return new, y
 
-    return Operator("bloom_filter", init_state, apply, cost_weight=1.5)
+    return Operator("bloom_filter", init_state, apply, cost_weight=RIOT_COSTS["bloom_filter"])
 
 
 @register("interpolate")
@@ -114,7 +115,7 @@ def interpolate(cfg: Dict[str, Any]) -> Operator:
         new_state, y = jax.lax.scan(step, state, x)
         return new_state, y
 
-    return Operator("interpolate", init_state, apply, cost_weight=1.5)
+    return Operator("interpolate", init_state, apply, cost_weight=RIOT_COSTS["interpolate"])
 
 
 @register("join")
@@ -127,7 +128,7 @@ def join(cfg: Dict[str, Any]) -> Operator:
     def apply(state, x):
         return state + 1, x.at[:, 0].add(0.0)  # timestamp untouched; count advances
 
-    return Operator("join", init_state, apply, cost_weight=0.4)
+    return Operator("join", init_state, apply, cost_weight=RIOT_COSTS["join"])
 
 
 @register("annotate")
@@ -138,7 +139,7 @@ def annotate(cfg: Dict[str, Any]) -> Operator:
     def fn(x: jnp.ndarray) -> jnp.ndarray:
         return x.at[:, 5].set(tag)
 
-    return stateless("annotate", fn, cost=0.3)
+    return stateless("annotate", fn, cost=RIOT_COSTS["annotate"])
 
 
 # -- STATS family --------------------------------------------------------------
@@ -164,7 +165,7 @@ def kalman(cfg: Dict[str, Any]) -> Operator:
         (xe, p), y = jax.lax.scan(step, (state["x"], state["p"]), x)
         return {"x": xe, "p": p}, y
 
-    return Operator("kalman", init_state, apply, cost_weight=2.0)
+    return Operator("kalman", init_state, apply, cost_weight=RIOT_COSTS["kalman"])
 
 
 @register("win")
@@ -185,7 +186,7 @@ def sliding_window(cfg: Dict[str, Any]) -> Operator:
         # values re-centered around the window aggregate
         return {"buf": buf, "n": n}, x.at[:, VAL].set(x[:, VAL] - agg)
 
-    return Operator("win", init_state, apply, cost_weight=1.8)
+    return Operator("win", init_state, apply, cost_weight=RIOT_COSTS["win"])
 
 
 @register("avg")
@@ -201,7 +202,7 @@ def block_average(cfg: Dict[str, Any]) -> Operator:
         mean = state["mean"] + (bmean - state["mean"]) / n
         return {"mean": mean, "n": n}, x.at[:, VAL].set(x[:, VAL] - mean)
 
-    return Operator("avg", init_state, apply, cost_weight=1.0)
+    return Operator("avg", init_state, apply, cost_weight=RIOT_COSTS["avg"])
 
 
 @register("moment2")
@@ -221,7 +222,7 @@ def second_order_moment(cfg: Dict[str, Any]) -> Operator:
         y = x.at[:, VAL].set((x[:, VAL] - mean) * jax.lax.rsqrt(var + 1e-6))
         return {"mean": mean, "m2": m2, "n": n}, y
 
-    return Operator("moment2", init_state, apply, cost_weight=1.4)
+    return Operator("moment2", init_state, apply, cost_weight=RIOT_COSTS["moment2"])
 
 
 @register("distinct_count")
@@ -239,7 +240,7 @@ def distinct_count(cfg: Dict[str, Any]) -> Operator:
         est = -float(m) * jnp.log(jnp.maximum(zeros, 1.0) / float(m))
         return bits, x.at[:, 5].set(est)
 
-    return Operator("distinct_count", init_state, apply, cost_weight=1.1)
+    return Operator("distinct_count", init_state, apply, cost_weight=RIOT_COSTS["distinct_count"])
 
 
 # -- PREDICT family --------------------------------------------------------------
@@ -254,7 +255,7 @@ def multivar_linreg(cfg: Dict[str, Any]) -> Operator:
         pred = x[:, VAL] @ w
         return x.at[:, 5].set(pred)
 
-    return stateless("linreg", fn, cost=1.6)
+    return stateless("linreg", fn, cost=RIOT_COSTS["linreg"])
 
 
 @register("dtree")
@@ -272,7 +273,7 @@ def decision_tree(cfg: Dict[str, Any]) -> Operator:
         )
         return x.at[:, 5].set(c)
 
-    return stateless("dtree", fn, cost=1.3)
+    return stateless("dtree", fn, cost=RIOT_COSTS["dtree"])
 
 
 @register("sliding_linreg")
@@ -298,7 +299,7 @@ def sliding_linreg(cfg: Dict[str, Any]) -> Operator:
         slope = cov / jnp.maximum(var, 1e-6)
         return {"buf": buf, "n": n}, x.at[:, 5].set(slope)
 
-    return Operator("sliding_linreg", init_state, apply, cost_weight=2.2)
+    return Operator("sliding_linreg", init_state, apply, cost_weight=RIOT_COSTS["sliding_linreg"])
 
 
 @register("error_estimate")
@@ -308,7 +309,7 @@ def error_estimate(cfg: Dict[str, Any]) -> Operator:
     def fn(x: jnp.ndarray) -> jnp.ndarray:
         return x.at[:, 4].set(jnp.abs(x[:, 5] - x[:, 1]))
 
-    return stateless("error_estimate", fn, cost=0.4)
+    return stateless("error_estimate", fn, cost=RIOT_COSTS["error_estimate"])
 
 
 # -- OPMW synthetic π task (paper §5.1) -----------------------------------------
@@ -337,4 +338,4 @@ def _pi_operator(cfg: Dict[str, Any], type_name: str) -> Operator:
         return x.at[:, 5].set(pi_est)
 
     # π cost scales with the iteration count (CPU-intensive per event).
-    return stateless(type_name, fn, cost=0.02 * iters)
+    return stateless(type_name, fn, cost=pi_cost(cfg))

@@ -13,6 +13,7 @@ from typing import Any, Dict
 import jax.numpy as jnp
 
 from .base import EVENT_WIDTH, Operator
+from .costs import SINK_COST
 
 
 def make_sink(type_name: str) -> Operator:
@@ -35,5 +36,5 @@ def make_sink(type_name: str) -> Operator:
         )
 
     return Operator(
-        type=type_name, init_state=init_state, apply=apply, cost_weight=0.3, is_sink=True
+        type=type_name, init_state=init_state, apply=apply, cost_weight=SINK_COST, is_sink=True
     )

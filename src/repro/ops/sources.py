@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from .base import EVENT_WIDTH, Operator
+from .costs import SOURCE_COST
 
 # Distinct signal profiles per source family: (bias, amplitude, period, noise)
 _PROFILES = {
@@ -55,5 +56,9 @@ def make_source(type_name: str, batch: int = 32) -> Operator:
         return state + 1, out
 
     return Operator(
-        type=type_name, init_state=init_state, apply=apply, cost_weight=0.3, is_source=True
+        type=type_name,
+        init_state=init_state,
+        apply=apply,
+        cost_weight=SOURCE_COST,
+        is_source=True,
     )

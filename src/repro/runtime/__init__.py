@@ -1,33 +1,100 @@
-"""Storm-analogue data plane: broker, jit-compiled segments, executor with
-resource accounting + straggler mitigation, worker placement model, and the
-StreamSystem that binds the ReuseManager control plane to the data plane."""
-from .broker import Broker, topic_for
-from .executor import CORE_CALIBRATION, PAUSE_EPSILON, Executor, StepReport
+"""Storm-analogue data plane behind the pluggable ExecutionBackend API:
+broker, jit-compiled segments, the in-process / sharded / dry-run backends,
+worker placement model, and the StreamSystem that binds the ReuseManager
+control plane to any backend.
+
+Imports resolve lazily (PEP 562) so that control-plane and dry-run users —
+``StreamSystem(backend="dryrun")`` — never pay the JAX import; the jit
+modules load on first attribute access.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import TYPE_CHECKING
+
+# JAX-free eagerly-imported surface.
+from .backend import (
+    CORE_CALIBRATION,
+    PAUSE_EPSILON,
+    BackendSnapshot,
+    ExecutionBackend,
+    SegmentSpec,
+    StepReport,
+    available_backends,
+    compute_batches,
+    register_backend,
+    resolve_backend,
+)
 from .scheduler import (
     TASKS_PER_WORKER,
     WORKERS_PER_NODE,
     Placement,
+    PlacementPolicy,
     StragglerPolicy,
+    available_placements,
     place_round_robin,
+    register_placement,
+    resolve_placement,
 )
-from .segment import Segment, SegmentSpec, build_segment, compute_batches
-from .system import StreamSystem
+
+# name -> (module, attribute); resolved on first access to keep JAX lazy.
+_LAZY = {
+    "Broker": ("repro.runtime.broker", "Broker"),
+    "topic_for": ("repro.runtime.broker", "topic_for"),
+    "DryRunBackend": ("repro.runtime.dryrun", "DryRunBackend"),
+    "Executor": ("repro.runtime.executor", "Executor"),
+    "InProcessJitBackend": ("repro.runtime.executor", "InProcessJitBackend"),
+    "Segment": ("repro.runtime.segment", "Segment"),
+    "build_segment": ("repro.runtime.segment", "build_segment"),
+    "ShardedBackend": ("repro.runtime.sharded", "ShardedBackend"),
+    "StreamSystem": ("repro.runtime.system", "StreamSystem"),
+}
+
+if TYPE_CHECKING:  # pragma: no cover - static imports for type checkers
+    from .broker import Broker, topic_for
+    from .dryrun import DryRunBackend
+    from .executor import Executor, InProcessJitBackend
+    from .segment import Segment, build_segment
+    from .sharded import ShardedBackend
+    from .system import StreamSystem
 
 __all__ = [
+    "BackendSnapshot",
     "Broker",
     "CORE_CALIBRATION",
+    "DryRunBackend",
+    "ExecutionBackend",
     "Executor",
+    "InProcessJitBackend",
     "PAUSE_EPSILON",
     "Placement",
+    "PlacementPolicy",
     "Segment",
     "SegmentSpec",
+    "ShardedBackend",
     "StepReport",
     "StragglerPolicy",
     "StreamSystem",
     "TASKS_PER_WORKER",
     "WORKERS_PER_NODE",
+    "available_backends",
+    "available_placements",
     "build_segment",
     "compute_batches",
     "place_round_robin",
+    "register_backend",
+    "register_placement",
+    "resolve_backend",
+    "resolve_placement",
     "topic_for",
 ]
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value  # cache for subsequent lookups
+    return value

@@ -1,0 +1,381 @@
+"""ExecutionBackend — the pluggable data-plane contract behind StreamSystem.
+
+The paper's Manager (§4.3) binds the merge/unmerge control plane to one
+concrete runtime (Storm). This module makes that binding an API instead:
+:class:`StreamSystem` is a thin policy layer that drives any
+:class:`ExecutionBackend` through a fixed verb set —
+
+  ``deploy / kill / forward / pause / resume / step / snapshot /
+  sink_state / account``
+
+— and backends plug in by name through a registry that mirrors the
+``MergeStrategy`` registry in :mod:`repro.core.strategies`. Three ship
+built-in:
+
+  * ``"inprocess"`` — :class:`repro.runtime.executor.InProcessJitBackend`,
+    today's jit data plane (segments compiled to one XLA step each, broker
+    topics between them);
+  * ``"sharded"`` — :class:`repro.runtime.sharded.ShardedBackend`, the same
+    jit plane with segments placed across ``jax.devices()`` via a pluggable
+    :class:`~repro.runtime.scheduler.PlacementPolicy`;
+  * ``"dryrun"`` — :class:`repro.runtime.dryrun.DryRunBackend`, no JAX at
+    all: pure cost-model stepping over ``cost_weight × batch`` accounting,
+    fast enough to sweep full OPMW/RIoT arrival-departure traces in
+    milliseconds. Its ``live_tasks``/``paused_tasks``/``cost`` trajectories
+    are contract-identical to the jit backends (checksums are jit-only).
+
+This module is deliberately **JAX-free**: it holds the shared contract
+(:class:`SegmentSpec`, :class:`StepReport`, the accounting constants, the
+O(1) task→segment reverse index, straggler bookkeeping) so that a
+``backend="dryrun"`` session never imports JAX.
+"""
+from __future__ import annotations
+
+import importlib
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple, Type, Union
+
+from repro.core.graph import Dataflow
+
+# Fraction of a task's cost still consumed while paused (deployed-but-idle
+# Storm bolt). Calibrated so the paper's drain-phase crossover reproduces.
+PAUSE_EPSILON = 0.03
+# events·cost_weight per core: 1 core ≡ one weight-1.0 task at 10 ev/s ×
+# 32-event batches — matches the paper's constant 10 ev/s input rate setup.
+CORE_CALIBRATION = 320.0
+# Straggler detection floor: below this median step-time the k·median test
+# would flag pure perf_counter jitter (the dry-run backend steps in
+# microseconds), so segments are only judged once steps cost real time.
+STRAGGLER_MIN_MEDIAN_MS = 0.05
+
+PyTree = Any
+
+
+@dataclass
+class SegmentSpec:
+    """Static description of a segment before compilation/instantiation."""
+
+    name: str
+    dag_name: str  # running DAG this segment belongs to
+    task_ids: List[str]  # topological order within the segment
+    # task id -> parent ids in canonical (signature-sorted) order; parents may
+    # live outside the segment (boundary inputs fetched from the broker).
+    parents: Dict[str, List[str]]
+    # tasks initially forwarding their output to the broker (boundary streams
+    # known at deploy time). The backend can extend this set at runtime —
+    # the paper's control-topic "forward" signal — without recompiling,
+    # because the compiled step returns every task's output.
+    publish: Set[str]
+    batch_of: Dict[str, int]  # per-task output batch size
+    created_at: int = 0  # launch sequence number (segments step in this order)
+
+
+@dataclass
+class StepReport:
+    step: int
+    live_tasks: int
+    paused_tasks: int
+    cost: float  # core-equivalents this step
+    wall_ms: float
+    segment_ms: Dict[str, float] = field(default_factory=dict)
+    stragglers: List[str] = field(default_factory=list)
+
+
+@dataclass
+class BackendSnapshot:
+    """Point-in-time backend state — the ``snapshot`` verb of the protocol."""
+
+    backend: str
+    step_count: int
+    segments: Dict[str, List[str]]  # segment name -> deployed task ids
+    paused: Set[str]
+    live_tasks: int
+    paused_tasks: int
+    cost: float
+    device_of: Dict[str, Any] = field(default_factory=dict)  # sharded only
+
+
+def compute_batches(
+    order: List[str],
+    parents: Dict[str, List[str]],
+    known: Dict[str, int],
+    base_batch: int,
+) -> Dict[str, int]:
+    """Static per-task batch sizes: sources B₀, else Σ parent batches."""
+    out = dict(known)
+    for tid in order:
+        if tid in out:
+            continue
+        ps = parents[tid]
+        out[tid] = base_batch if not ps else sum(out[p] for p in ps)
+    return out
+
+
+class ExecutionBackend:
+    """Data-plane protocol + the runtime-agnostic bookkeeping.
+
+    Concrete backends implement two hooks:
+
+      * :meth:`_build` — turn a :class:`SegmentSpec` into a segment object
+        exposing ``spec``, ``states``, ``active``, ``cost_of``,
+        ``pause``/``resume`` and ``live_task_ids``;
+      * :meth:`_step_segments` — advance every segment one step, returning
+        per-segment wall-times in ms.
+
+    Everything else — the O(1) task→segment reverse index (replacing the
+    old linear scans in ``forward``/``_owner``), pause/resume flags, the
+    cost accounting that reproduces the paper's Fig. 2/3 counters,
+    straggler EWMAs and state-preserving defragmentation — is shared here,
+    so every backend reports identical control-plane trajectories by
+    construction.
+    """
+
+    name: str = ""
+
+    def __init__(self, straggler_factor: float = 3.0, ewma_alpha: float = 0.3):
+        self.segments: Dict[str, Any] = {}
+        self.forwarding: Dict[str, Set[str]] = {}  # segment -> task ids forwarded
+        self.paused: Set[str] = set()  # running task ids paused (global view)
+        self.step_count = 0
+        self._launch_seq = 0
+        # O(1) reverse index: task id -> owning segment name, maintained
+        # across deploy/kill/defragment (was an O(segments·tasks) scan).
+        self._owner_of: Dict[str, str] = {}
+        # straggler tracking
+        self.straggler_factor = straggler_factor
+        self.ewma_alpha = ewma_alpha
+        self.ewma_ms: Dict[str, float] = {}
+        self.redispatches: List[Tuple[int, str]] = []
+        self.reports: List[StepReport] = []
+
+    # -- hooks for concrete backends ------------------------------------------
+    def _build(
+        self,
+        spec: SegmentSpec,
+        dataflow: Dataflow,
+        init_states: Optional[Dict[str, PyTree]],
+    ) -> Any:
+        raise NotImplementedError
+
+    def _step_segments(self) -> Dict[str, float]:
+        raise NotImplementedError
+
+    def _drop_streams(self, seg: Any) -> None:
+        """Release any transport resources of a killed segment (broker topics)."""
+
+    # -- deployment -----------------------------------------------------------
+    def deploy(
+        self,
+        spec: SegmentSpec,
+        dataflow: Dataflow,
+        init_states: Optional[Dict[str, PyTree]] = None,
+    ) -> Any:
+        spec.created_at = self._launch_seq
+        self._launch_seq += 1
+        seg = self._build(spec, dataflow, init_states)
+        self.segments[spec.name] = seg
+        self.forwarding[spec.name] = set(spec.publish)
+        for tid in spec.task_ids:
+            self._owner_of[tid] = spec.name
+        return seg
+
+    def kill(self, segment_name: str) -> None:
+        seg = self.segments.pop(segment_name)
+        self.forwarding.pop(segment_name, None)
+        self.ewma_ms.pop(segment_name, None)
+        self._drop_streams(seg)
+        for tid in seg.spec.task_ids:
+            self.paused.discard(tid)
+            if self._owner_of.get(tid) == segment_name:
+                del self._owner_of[tid]
+
+    # -- control signals (paper §4.3 control topic) -----------------------------
+    def forward(self, task_id: str) -> None:
+        """Ask the segment owning ``task_id`` to forward its output stream."""
+        owner = self._owner_of.get(task_id)
+        if owner is None:
+            raise KeyError(f"task {task_id!r} not deployed")
+        self.forwarding[owner].add(task_id)
+
+    def pause(self, task_ids: Set[str]) -> None:
+        for seg in self.segments.values():
+            seg.pause(task_ids)
+        self.paused |= {t for t in task_ids if t in self._owner_of}
+
+    def resume(self, task_ids: Set[str]) -> None:
+        for seg in self.segments.values():
+            seg.resume(task_ids)
+        self.paused -= set(task_ids)
+
+    def _owner(self, task_id: str) -> Optional[str]:
+        return self._owner_of.get(task_id)
+
+    # -- stepping ----------------------------------------------------------------
+    def step(self) -> StepReport:
+        t0 = time.perf_counter()
+        seg_ms = self._step_segments()
+        live, paused_n, cost = self.account()
+        stragglers = self._update_stragglers(seg_ms)
+        self.step_count += 1
+        report = StepReport(
+            step=self.step_count,
+            live_tasks=live,
+            paused_tasks=paused_n,
+            cost=cost,
+            wall_ms=(time.perf_counter() - t0) * 1e3,
+            segment_ms=seg_ms,
+            stragglers=stragglers,
+        )
+        self.reports.append(report)
+        return report
+
+    def run(self, steps: int) -> List[StepReport]:
+        return [self.step() for _ in range(steps)]
+
+    # -- accounting ----------------------------------------------------------------
+    def account(self) -> Tuple[int, int, float]:
+        """(live tasks, paused tasks, core-equivalents) — the Fig. 2/3 counters."""
+        live = 0
+        paused_n = 0
+        cost = 0.0
+        for seg in self.segments.values():
+            for tid in seg.spec.task_ids:
+                w = seg.cost_of[tid] * seg.spec.batch_of[tid]
+                if bool(seg.active[tid]):
+                    live += 1
+                    cost += w
+                else:
+                    paused_n += 1
+                    cost += PAUSE_EPSILON * w
+        return live, paused_n, cost / CORE_CALIBRATION
+
+    @property
+    def live_task_count(self) -> int:
+        return sum(len(s.live_task_ids()) for s in self.segments.values())
+
+    @property
+    def deployed_task_count(self) -> int:
+        return sum(len(s.spec.task_ids) for s in self.segments.values())
+
+    def sink_state(self, task_id: str) -> Any:
+        owner = self._owner_of.get(task_id)
+        if owner is None:
+            raise KeyError(f"sink task {task_id!r} not deployed")
+        return self.segments[owner].states[task_id]
+
+    def snapshot(self) -> BackendSnapshot:
+        live, paused_n, cost = self.account()
+        return BackendSnapshot(
+            backend=self.name or type(self).__name__,
+            step_count=self.step_count,
+            segments={n: list(s.spec.task_ids) for n, s in self.segments.items()},
+            paused=set(self.paused),
+            live_tasks=live,
+            paused_tasks=paused_n,
+            cost=cost,
+            device_of=dict(getattr(self, "device_of", {})),
+        )
+
+    # -- straggler mitigation -----------------------------------------------------
+    def _update_stragglers(self, seg_ms: Dict[str, float]) -> List[str]:
+        flagged: List[str] = []
+        for name, ms in seg_ms.items():
+            prev = self.ewma_ms.get(name)
+            self.ewma_ms[name] = ms if prev is None else (
+                self.ewma_alpha * ms + (1 - self.ewma_alpha) * prev
+            )
+        # prune EWMAs of killed segments
+        for name in list(self.ewma_ms):
+            if name not in self.segments:
+                del self.ewma_ms[name]
+        if len(self.ewma_ms) >= 2:
+            vals = sorted(self.ewma_ms.values())
+            median = vals[len(vals) // 2]
+            for name, ew in list(self.ewma_ms.items()):
+                if median > STRAGGLER_MIN_MEDIAN_MS and ew > self.straggler_factor * median:
+                    flagged.append(name)
+                    self.redispatch(name)
+        return flagged
+
+    def redispatch(self, segment_name: str) -> None:
+        """Re-dispatch a straggling segment (hardware: move to spare host).
+
+        The compiled executable and task states are retained; the EWMA is
+        reset so the relocated segment is judged afresh.
+        """
+        self.redispatches.append((self.step_count, segment_name))
+        self.ewma_ms.pop(segment_name, None)
+
+    # -- defragmentation (enactment; planning in repro.core.defrag) -----------------
+    def defragment(
+        self,
+        dag_name: str,
+        fused_spec: SegmentSpec,
+        dataflow: Dataflow,
+    ) -> Any:
+        """Replace all segments of ``dag_name`` by one fused segment.
+
+        Task states carry over (state-preserving defrag — beyond the paper,
+        which would relaunch cold). Paused tasks are dropped entirely,
+        reclaiming their ε overhead.
+        """
+        carried: Dict[str, PyTree] = {}
+        for name, seg in list(self.segments.items()):
+            if seg.spec.dag_name != dag_name:
+                continue
+            for tid in fused_spec.task_ids:
+                if tid in seg.spec.task_ids:
+                    carried[tid] = seg.states[tid]
+            self.kill(name)
+        return self.deploy(fused_spec, dataflow, init_states=carried)
+
+
+# -- backend registry ----------------------------------------------------------
+
+_BACKENDS: Dict[str, Type[ExecutionBackend]] = {}
+# Built-ins resolve lazily so that naming "dryrun" never imports JAX and
+# naming "inprocess" only pays the JAX import when actually used.
+_LAZY_BUILTINS: Dict[str, Tuple[str, str]] = {
+    "inprocess": ("repro.runtime.executor", "InProcessJitBackend"),
+    "sharded": ("repro.runtime.sharded", "ShardedBackend"),
+    "dryrun": ("repro.runtime.dryrun", "DryRunBackend"),
+}
+
+
+def register_backend(cls: Type[ExecutionBackend]) -> Type[ExecutionBackend]:
+    """Class decorator: register ``cls`` under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"backend class {cls.__name__} has no name")
+    if cls.name in _BACKENDS or cls.name in _LAZY_BUILTINS:
+        raise ValueError(f"execution backend {cls.name!r} already registered")
+    _BACKENDS[cls.name] = cls
+    return cls
+
+
+def available_backends() -> List[str]:
+    return sorted(set(_BACKENDS) | set(_LAZY_BUILTINS))
+
+
+def resolve_backend(
+    backend: Union[str, ExecutionBackend, Type[ExecutionBackend]],
+    **kwargs: Any,
+) -> ExecutionBackend:
+    """Name / instance / class → backend instance (names hit the registry)."""
+    if isinstance(backend, ExecutionBackend):
+        return backend
+    if isinstance(backend, type) and issubclass(backend, ExecutionBackend):
+        return backend(**kwargs)
+    if isinstance(backend, str):
+        cls = _BACKENDS.get(backend)
+        if cls is None and backend in _LAZY_BUILTINS:
+            module, attr = _LAZY_BUILTINS[backend]
+            cls = getattr(importlib.import_module(module), attr)
+        if cls is None:
+            raise ValueError(
+                f"unknown backend {backend!r} (registered: {', '.join(available_backends())})"
+            )
+        return cls(**kwargs)
+    raise TypeError(
+        f"backend must be a name or ExecutionBackend, got {type(backend).__name__}"
+    )

@@ -1,123 +1,77 @@
-"""Executor — steps deployed segments, accounts resources, detects stragglers.
+"""InProcessJitBackend — the jit data plane behind the ExecutionBackend API.
 
-Segments step in launch order: merges only ever add segments *downstream* of
-existing ones (boundary streams flow old → new; see DESIGN.md invariant), so
-launch order is a valid topological order of the segment graph.
+Steps deployed segments in launch order: merges only ever add segments
+*downstream* of existing ones (boundary streams flow old → new; see
+DESIGN.md invariant), so launch order is a valid topological order of the
+segment graph.
 
-Resource accounting reproduces the paper's measurements:
-  * *running task count* — live (non-paused) tasks across segments (Fig. 2);
-  * *cores used* — Σ cost_weight·events for live tasks plus a pause overhead
-    ε per paused task (paused Storm bolts still occupy their worker slot —
-    the paper's observed drain-phase overhead), scaled by a calibration
-    constant (Fig. 3);
-  * broker bytes published (the indirection overhead defrag removes).
+Resource accounting, straggler EWMAs, pause flags and the task→segment
+reverse index (O(1) ``forward``/``_owner`` instead of the old linear scan
+over segments) live in the shared :class:`repro.runtime.backend.ExecutionBackend`
+base — this module adds only what is jit-specific: segment compilation,
+broker transport, and real device buffers for task states.
 
-Straggler mitigation: per-segment step-time EWMA; a segment exceeding
-``k × median`` is flagged and re-dispatched (on hardware: moved to a spare
-host; here the policy and bookkeeping are exercised and unit-tested).
+``Executor`` remains as a backwards-compatible alias.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Set, Tuple
-
-import jax
-import jax.numpy as jnp
+from typing import Any, Dict, Optional, Tuple
 
 from repro.core.graph import Dataflow
 
+from .backend import (
+    CORE_CALIBRATION,
+    PAUSE_EPSILON,
+    ExecutionBackend,
+    SegmentSpec,
+    StepReport,
+)
 from .broker import Broker, topic_for
-from .segment import Segment, SegmentSpec, build_segment
+from .segment import Segment, build_segment
 
-# Fraction of a task's cost still consumed while paused (deployed-but-idle
-# Storm bolt). Calibrated so the paper's drain-phase crossover reproduces.
-PAUSE_EPSILON = 0.03
-# events·cost_weight per core: 1 core ≡ one weight-1.0 task at 10 ev/s ×
-# 32-event batches — matches the paper's constant 10 ev/s input rate setup.
-CORE_CALIBRATION = 320.0
-
-
-@dataclass
-class StepReport:
-    step: int
-    live_tasks: int
-    paused_tasks: int
-    cost: float  # core-equivalents this step
-    wall_ms: float
-    segment_ms: Dict[str, float] = field(default_factory=dict)
-    stragglers: List[str] = field(default_factory=list)
+__all__ = [
+    "CORE_CALIBRATION",
+    "Executor",
+    "InProcessJitBackend",
+    "PAUSE_EPSILON",
+    "StepReport",
+]
 
 
-class Executor:
+class InProcessJitBackend(ExecutionBackend):
+    """Today's Executor: one jit-compiled step function per segment, broker
+    topics between segments, device-resident task states."""
+
+    name = "inprocess"
+
     def __init__(self, straggler_factor: float = 3.0, ewma_alpha: float = 0.3):
+        super().__init__(straggler_factor=straggler_factor, ewma_alpha=ewma_alpha)
         self.broker = Broker()
-        self.segments: Dict[str, Segment] = {}
-        self.forwarding: Dict[str, Set[str]] = {}  # segment -> task ids forwarded
-        self.paused: Set[str] = set()  # running task ids paused (global view)
-        self.step_count = 0
-        self._launch_seq = 0
-        # straggler tracking
-        self.straggler_factor = straggler_factor
-        self.ewma_alpha = ewma_alpha
-        self.ewma_ms: Dict[str, float] = {}
-        self.redispatches: List[Tuple[int, str]] = []
-        self.reports: List[StepReport] = []
 
-    # -- deployment -----------------------------------------------------------
-    def deploy(
+    # -- ExecutionBackend hooks -------------------------------------------------
+    def _build(
         self,
         spec: SegmentSpec,
         dataflow: Dataflow,
-        init_states: Optional[Dict[str, Any]] = None,
+        init_states: Optional[Dict[str, Any]],
     ) -> Segment:
-        spec.created_at = self._launch_seq
-        self._launch_seq += 1
-        seg = build_segment(spec, dataflow, init_states=init_states)
-        self.segments[spec.name] = seg
-        self.forwarding[spec.name] = set(spec.publish)
-        return seg
+        return build_segment(spec, dataflow, init_states=init_states)
 
-    def kill(self, segment_name: str) -> None:
-        seg = self.segments.pop(segment_name)
-        self.forwarding.pop(segment_name, None)
+    def _drop_streams(self, seg: Segment) -> None:
         for tid in seg.spec.task_ids:
             self.broker.drop(topic_for(tid))
-            self.paused.discard(tid)
 
-    # -- control signals (paper §4.3 control topic) -----------------------------
-    def forward(self, task_id: str) -> None:
-        """Ask the segment owning ``task_id`` to forward its output stream."""
-        for name, seg in self.segments.items():
-            if task_id in seg.spec.task_ids:
-                self.forwarding[name].add(task_id)
-                return
-        raise KeyError(f"task {task_id!r} not deployed")
+    def _fetch_inputs(self, seg: Segment) -> Dict[str, Any]:
+        """Boundary inputs for one segment (hook — sharded moves them on-device)."""
+        return {t: self.broker.fetch(t) for t in seg.boundary_topics}
 
-    def pause(self, task_ids: Set[str]) -> None:
-        for seg in self.segments.values():
-            seg.pause(task_ids)
-        self.paused |= {t for t in task_ids if self._owner(t) is not None}
-
-    def resume(self, task_ids: Set[str]) -> None:
-        for seg in self.segments.values():
-            seg.resume(task_ids)
-        self.paused -= set(task_ids)
-
-    def _owner(self, task_id: str) -> Optional[str]:
-        for name, seg in self.segments.items():
-            if task_id in seg.spec.task_ids:
-                return name
-        return None
-
-    # -- stepping ----------------------------------------------------------------
-    def step(self) -> StepReport:
-        t0 = time.perf_counter()
+    def _step_segments(self) -> Dict[str, float]:
         seg_ms: Dict[str, float] = {}
         ordered = sorted(self.segments.values(), key=lambda s: s.spec.created_at)
         for seg in ordered:
             s0 = time.perf_counter()
-            inputs = {t: self.broker.fetch(t) for t in seg.boundary_topics}
+            inputs = self._fetch_inputs(seg)
             new_states, outputs = seg.step_fn(seg.states, seg.active, inputs)
             seg.states = new_states
             for tid in self.forwarding[seg.name]:
@@ -125,100 +79,8 @@ class Executor:
                     self.broker.publish(topic_for(tid), outputs[tid])
             seg.steps_run += 1
             seg_ms[seg.name] = (time.perf_counter() - s0) * 1e3
+        return seg_ms
 
-        live, paused_n, cost = self._account()
-        stragglers = self._update_stragglers(seg_ms)
-        self.step_count += 1
-        report = StepReport(
-            step=self.step_count,
-            live_tasks=live,
-            paused_tasks=paused_n,
-            cost=cost,
-            wall_ms=(time.perf_counter() - t0) * 1e3,
-            segment_ms=seg_ms,
-            stragglers=stragglers,
-        )
-        self.reports.append(report)
-        return report
 
-    def run(self, steps: int) -> List[StepReport]:
-        return [self.step() for _ in range(steps)]
-
-    # -- accounting ----------------------------------------------------------------
-    def _account(self) -> Tuple[int, int, float]:
-        live = 0
-        paused_n = 0
-        cost = 0.0
-        for seg in self.segments.values():
-            for tid in seg.spec.task_ids:
-                w = seg.operators[tid].cost_weight * seg.spec.batch_of[tid]
-                if bool(seg.active[tid]):
-                    live += 1
-                    cost += w
-                else:
-                    paused_n += 1
-                    cost += PAUSE_EPSILON * w
-        return live, paused_n, cost / CORE_CALIBRATION
-
-    @property
-    def live_task_count(self) -> int:
-        return sum(len(s.live_task_ids()) for s in self.segments.values())
-
-    def sink_state(self, task_id: str) -> Any:
-        owner = self._owner(task_id)
-        if owner is None:
-            raise KeyError(f"sink task {task_id!r} not deployed")
-        return self.segments[owner].states[task_id]
-
-    # -- straggler mitigation -----------------------------------------------------
-    def _update_stragglers(self, seg_ms: Dict[str, float]) -> List[str]:
-        flagged: List[str] = []
-        for name, ms in seg_ms.items():
-            prev = self.ewma_ms.get(name)
-            self.ewma_ms[name] = ms if prev is None else (
-                self.ewma_alpha * ms + (1 - self.ewma_alpha) * prev
-            )
-        # prune EWMAs of killed segments
-        for name in list(self.ewma_ms):
-            if name not in self.segments:
-                del self.ewma_ms[name]
-        if len(self.ewma_ms) >= 2:
-            vals = sorted(self.ewma_ms.values())
-            median = vals[len(vals) // 2]
-            for name, ew in list(self.ewma_ms.items()):
-                if median > 0 and ew > self.straggler_factor * median:
-                    flagged.append(name)
-                    self.redispatch(name)
-        return flagged
-
-    def redispatch(self, segment_name: str) -> None:
-        """Re-dispatch a straggling segment (hardware: move to spare host).
-
-        The compiled executable and task states are retained; the EWMA is
-        reset so the relocated segment is judged afresh.
-        """
-        self.redispatches.append((self.step_count, segment_name))
-        self.ewma_ms.pop(segment_name, None)
-
-    # -- defragmentation (enactment; planning in repro.core.defrag) -----------------
-    def defragment(
-        self,
-        dag_name: str,
-        fused_spec: SegmentSpec,
-        dataflow: Dataflow,
-    ) -> Segment:
-        """Replace all segments of ``dag_name`` by one fused segment.
-
-        Task states carry over (state-preserving defrag — beyond the paper,
-        which would relaunch cold). Paused tasks are dropped entirely,
-        reclaiming their ε overhead.
-        """
-        carried: Dict[str, Any] = {}
-        for name, seg in list(self.segments.items()):
-            if seg.spec.dag_name != dag_name:
-                continue
-            for tid in fused_spec.task_ids:
-                if tid in seg.spec.task_ids:
-                    carried[tid] = seg.states[tid]
-            self.kill(name)
-        return self.deploy(fused_spec, dataflow, init_states=carried)
+# Backwards-compatible name: the pre-API-redesign data plane class.
+Executor = InProcessJitBackend

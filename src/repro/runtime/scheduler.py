@@ -1,18 +1,105 @@
-"""Worker-pool placement model + straggler policy — the Storm scheduler analogue.
+"""Placement policies + worker-pool model + straggler policy — the Storm
+scheduler analogue.
 
-The paper's setup: each node runs one Worker JVM per core (8/node), up to 8
-tasks per Worker without interference, and a Worker hosts tasks from only
-one topology (segment). Storm places tasks round-robin. This model converts
-a set of deployed segments into the node count a real cluster would need —
-benchmarks report it alongside task counts and core usage.
+Two layers of placement live here:
+
+  * :class:`PlacementPolicy` — the pluggable segment→device assignment API
+    used by :class:`repro.runtime.sharded.ShardedBackend`. It generalizes
+    :func:`place_round_robin` from the fixed worker-slot model to any pool
+    of execution slots (``jax.devices()``, worker JVMs, hosts). Policies
+    register by name, mirroring the strategy/backend registries.
+  * :func:`place_round_robin` — the paper's setup: each node runs one
+    Worker JVM per core (8/node), up to 8 tasks per Worker without
+    interference, and a Worker hosts tasks from only one topology
+    (segment). Storm places tasks round-robin. This model converts a set
+    of deployed segments into the node count a real cluster would need —
+    benchmarks report it alongside task counts and core usage.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import TYPE_CHECKING, Dict, List, Tuple, Type, Union
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .backend import SegmentSpec
 
 WORKERS_PER_NODE = 8
 TASKS_PER_WORKER = 8
+
+
+# -- segment → device placement (ShardedBackend) -------------------------------
+
+
+class PlacementPolicy:
+    """Assign each newly deployed segment to one of ``n_devices`` slots.
+
+    ``load`` maps device index → number of tasks currently placed there;
+    policies may ignore it (round-robin) or balance on it (least-loaded).
+    """
+
+    name: str = ""
+
+    def assign(self, spec: "SegmentSpec", n_devices: int, load: Dict[int, int]) -> int:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+_PLACEMENTS: Dict[str, Type[PlacementPolicy]] = {}
+
+
+def register_placement(cls: Type[PlacementPolicy]) -> Type[PlacementPolicy]:
+    if not cls.name:
+        raise ValueError(f"placement class {cls.__name__} has no name")
+    if cls.name in _PLACEMENTS:
+        raise ValueError(f"placement policy {cls.name!r} already registered")
+    _PLACEMENTS[cls.name] = cls
+    return cls
+
+
+def available_placements() -> List[str]:
+    return sorted(_PLACEMENTS)
+
+
+def resolve_placement(policy: Union[str, PlacementPolicy, Type[PlacementPolicy]]) -> PlacementPolicy:
+    if isinstance(policy, PlacementPolicy):
+        return policy
+    if isinstance(policy, type) and issubclass(policy, PlacementPolicy):
+        return policy()
+    if isinstance(policy, str):
+        cls = _PLACEMENTS.get(policy)
+        if cls is None:
+            raise ValueError(
+                f"unknown placement {policy!r} (registered: {', '.join(available_placements())})"
+            )
+        return cls()
+    raise TypeError(f"placement must be a name or PlacementPolicy, got {type(policy).__name__}")
+
+
+@register_placement
+class RoundRobinPlacement(PlacementPolicy):
+    """Storm's scheme, lifted to device slots: segments cycle through the pool."""
+
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def assign(self, spec: "SegmentSpec", n_devices: int, load: Dict[int, int]) -> int:
+        idx = self._next % n_devices
+        self._next += 1
+        return idx
+
+
+@register_placement
+class LeastLoadedPlacement(PlacementPolicy):
+    """Greedy balance on deployed task count (paused tasks still occupy slots)."""
+
+    name = "least_loaded"
+
+    def assign(self, spec: "SegmentSpec", n_devices: int, load: Dict[int, int]) -> int:
+        return min(range(n_devices), key=lambda i: (load.get(i, 0), i))
 
 
 @dataclass

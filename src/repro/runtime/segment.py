@@ -31,28 +31,10 @@ import jax.numpy as jnp
 from repro.core.graph import Dataflow
 from repro.ops import EVENT_WIDTH, Operator, operator_for_task
 
+from .backend import SegmentSpec, compute_batches  # noqa: F401 — canonical home
 from .broker import topic_for
 
 PyTree = Any
-
-
-@dataclass
-class SegmentSpec:
-    """Static description of a segment before compilation."""
-
-    name: str
-    dag_name: str  # running DAG this segment belongs to
-    task_ids: List[str]  # topological order within the segment
-    # task id -> parent ids in canonical (signature-sorted) order; parents may
-    # live outside the segment (boundary inputs fetched from the broker).
-    parents: Dict[str, List[str]]
-    # tasks initially forwarding their output to the broker (boundary streams
-    # known at deploy time). The executor can extend this set at runtime —
-    # the paper's control-topic "forward" signal — without recompiling,
-    # because the compiled step returns every task's output.
-    publish: Set[str]
-    batch_of: Dict[str, int]  # per-task output batch size
-    created_at: int = 0  # launch sequence number (segments step in this order)
 
 
 @dataclass
@@ -63,6 +45,7 @@ class Segment:
     states: Dict[str, PyTree]
     active: Dict[str, jnp.ndarray]
     boundary_topics: List[str]  # topics fetched from the broker each step
+    cost_of: Dict[str, float] = field(default_factory=dict)  # per-task cost_weight
     steps_run: int = 0
 
     @property
@@ -81,22 +64,6 @@ class Segment:
         for tid in task_ids:
             if tid in self.active:
                 self.active[tid] = jnp.ones((), jnp.bool_)
-
-
-def compute_batches(
-    order: List[str],
-    parents: Dict[str, List[str]],
-    known: Dict[str, int],
-    base_batch: int,
-) -> Dict[str, int]:
-    """Static per-task batch sizes: sources B₀, else Σ parent batches."""
-    out = dict(known)
-    for tid in order:
-        if tid in out:
-            continue
-        ps = parents[tid]
-        out[tid] = base_batch if not ps else sum(out[p] for p in ps)
-    return out
 
 
 def build_segment(
@@ -188,4 +155,5 @@ def build_segment(
         states=states,
         active=active,
         boundary_topics=boundary_topics,
+        cost_of={tid: operators[tid].cost_weight for tid in spec.task_ids},
     )

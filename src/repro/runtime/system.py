@@ -1,8 +1,8 @@
-"""StreamSystem — the full Reusable Dataflow Manager with data-plane bindings.
+"""StreamSystem — the Reusable Dataflow Manager bound to a pluggable data plane.
 
-Glues the control plane (:class:`repro.core.ReuseManager`) to the data plane
-(:class:`repro.runtime.Executor`) exactly as the paper's §4.3 Manager binds
-to Storm:
+Glues the control plane (:class:`repro.core.ReuseManager`) to any
+:class:`repro.runtime.backend.ExecutionBackend` exactly as the paper's §4.3
+Manager binds to Storm:
 
   * ``submit`` — run the merge algorithm; launch one new segment holding the
     created tasks ``T_x``; signal reused boundary tasks (``S_x⁺`` upstream
@@ -15,7 +15,10 @@ to Storm:
     paused tasks and broker hops.
 
 ``strategy="none"`` is the paper's Default: no reuse, one segment per
-submission, kill on removal.
+submission, kill on removal. ``backend`` picks the data plane from the
+registry (``"inprocess"`` jit, ``"sharded"`` multi-device, ``"dryrun"``
+pure cost model) or accepts an :class:`ExecutionBackend` instance; the
+policy layer here is backend-agnostic and JAX-free.
 """
 from __future__ import annotations
 
@@ -26,9 +29,14 @@ from repro.core.defrag import canonical_parents, plan_defrag
 from repro.core.graph import Dataflow
 from repro.core.manager import RemovalReceipt, SubmissionReceipt
 
-from .executor import Executor, StepReport
+from .backend import (
+    ExecutionBackend,
+    SegmentSpec,
+    StepReport,
+    compute_batches,
+    resolve_backend,
+)
 from .scheduler import Placement, place_round_robin
-from .segment import SegmentSpec, compute_batches
 
 
 class StreamSystem:
@@ -38,15 +46,21 @@ class StreamSystem:
         base_batch: int = 32,
         check_invariants: bool = False,
         journal_path: Optional[str] = None,
+        backend: Union[str, ExecutionBackend] = "inprocess",
     ):
         self.manager = ReuseManager(
             strategy=strategy, check_invariants=check_invariants, journal_path=journal_path
         )
-        self.executor = Executor()
+        self.backend = resolve_backend(backend)
         self.base_batch = base_batch
         self.task_batch: Dict[str, int] = {}  # running task id -> output batch size
         self._seg_counter = 0
         self._segments_of: Dict[str, List[str]] = {}  # submission -> segment names
+
+    @property
+    def executor(self) -> ExecutionBackend:
+        """Backwards-compatible alias for the data plane (pre-API-redesign name)."""
+        return self.backend
 
     @property
     def strategy(self) -> str:
@@ -70,7 +84,7 @@ class StreamSystem:
         """Batch submit: one batch-aware control-plane pass, then one segment
         per member's created tasks, deployed in batch order (so boundary
         streams between batch members flow older segment → newer, keeping the
-        executor's launch-order invariant)."""
+        backend's launch-order invariant)."""
         receipts = self.manager.submit_many(dfs)
         for receipt in receipts:
             self._deploy(receipt)
@@ -92,7 +106,7 @@ class StreamSystem:
         # Control signal: reused upstream ends of boundary streams forward
         # their derived stream to the broker (paper's control topic).
         for up_id, _down in receipt.plan.new_streams_boundary:
-            self.executor.forward(up_id)
+            self.backend.forward(up_id)
 
         spec = SegmentSpec(
             name=self._mint_segment(),
@@ -102,7 +116,7 @@ class StreamSystem:
             publish=set(),
             batch_of={t: self.task_batch[t] for t in order},
         )
-        self.executor.deploy(spec, run_df)
+        self.backend.deploy(spec, run_df)
         self._segments_of[receipt.name] = [spec.name]
 
     def remove(self, name: str) -> RemovalReceipt:
@@ -111,31 +125,35 @@ class StreamSystem:
         if not self.reuses:
             # Default: the submission owns its topologies — kill them.
             for seg_name in own_segments:
-                if seg_name in self.executor.segments:
-                    self.executor.kill(seg_name)
-            for tid in receipt.terminated_tasks:
-                self.task_batch.pop(tid, None)
+                if seg_name in self.backend.segments:
+                    self.backend.kill(seg_name)
         else:
             # Reuse: Storm can't kill a subset of a topology — pause instead.
-            self.executor.pause(set(receipt.terminated_tasks))
+            self.backend.pause(set(receipt.terminated_tasks))
+        # Terminated running-task ids are never re-minted, so their batch
+        # entries are dead either way (paused tasks keep the batch copied
+        # into their SegmentSpec). Without this, churn grows the dict
+        # without bound.
+        for tid in receipt.terminated_tasks:
+            self.task_batch.pop(tid, None)
         return receipt
 
     def defragment(self) -> int:
         """Relaunch one fused segment per running DAG; returns segments killed."""
         plan = plan_defrag(self.manager.running)
-        killed = len(self.executor.segments)
+        killed = len(self.backend.segments)
         # Carry live task states across the relaunch (beyond-paper:
         # state-preserving defrag — Storm would restart cold).
         carried: Dict[str, Any] = {}
         live: Set[str] = set()
         for fused in plan.fused:
             live |= set(fused.order)
-        for seg in list(self.executor.segments.values()):
+        for seg in list(self.backend.segments.values()):
             for tid in seg.spec.task_ids:
                 if tid in live:
                     carried[tid] = seg.states[tid]
-        for seg_name in list(self.executor.segments):
-            self.executor.kill(seg_name)
+        for seg_name in list(self.backend.segments):
+            self.backend.kill(seg_name)
         for fused in plan.fused:
             run_df = self.manager.running[fused.dag_name]
             spec = SegmentSpec(
@@ -146,9 +164,12 @@ class StreamSystem:
                 publish=set(),
                 batch_of={t: self.task_batch[t] for t in fused.order},
             )
-            self.executor.deploy(
+            self.backend.deploy(
                 spec, run_df, init_states={t: carried[t] for t in fused.order if t in carried}
             )
+        # Dropped paused tasks are no longer deployed anywhere — their batch
+        # entries go with them (the churn-leak fix, see tests).
+        self.task_batch = {t: b for t, b in self.task_batch.items() if t in live}
         # Segment ownership bookkeeping: after defrag, segments are shared —
         # submissions no longer own segments (only meaningful for Default,
         # which never defragments).
@@ -158,20 +179,21 @@ class StreamSystem:
 
     # -- execution -----------------------------------------------------------------
     def step(self) -> StepReport:
-        return self.executor.step()
+        return self.backend.step()
 
     def run(self, steps: int) -> List[StepReport]:
-        return self.executor.run(steps)
+        return self.backend.run(steps)
 
     # -- observability ----------------------------------------------------------------
     def sink_digests(self, sub_name: str) -> Dict[str, Dict[str, Any]]:
         """Per submitted sink: count/checksum state — the output stream
-        identity used to verify Default ≡ Reuse (paper's §3.3 guarantee)."""
+        identity used to verify Default ≡ Reuse (paper's §3.3 guarantee).
+        Checksums are jit-only; the dry-run backend reports 0.0."""
         sub_df = self.manager.submitted[sub_name]
         task_map = self.manager.task_maps[sub_name]
         out: Dict[str, Dict[str, Any]] = {}
         for sink_id in sub_df.sink_ids:
-            st = self.executor.sink_state(task_map[sink_id])
+            st = self.backend.sink_state(task_map[sink_id])
             out[sink_id] = {
                 "count": int(st["count"]),
                 "checksum": float(st["checksum"]),
@@ -180,7 +202,7 @@ class StreamSystem:
 
     def placement(self) -> Placement:
         return place_round_robin(
-            {name: len(seg.spec.task_ids) for name, seg in self.executor.segments.items()}
+            {name: len(seg.spec.task_ids) for name, seg in self.backend.segments.items()}
         )
 
     @property
@@ -189,4 +211,4 @@ class StreamSystem:
 
     @property
     def deployed_task_count(self) -> int:
-        return sum(len(s.spec.task_ids) for s in self.executor.segments.values())
+        return self.backend.deployed_task_count

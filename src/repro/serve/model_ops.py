@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.ops.base import EVENT_WIDTH, Operator, register
+from repro.ops.costs import LM_EMBED_COST, LM_HEAD_COST, LM_STAGE_COST_PER_BLOCK
 
 
 def _seed(*parts: Any) -> int:
@@ -54,7 +55,7 @@ def lm_embed(cfg: Dict[str, Any]) -> Operator:
     def apply(state, x):
         return state, _rms(jnp.tanh(x @ w))
 
-    return Operator("lm_embed", init_state, apply, cost_weight=0.2)
+    return Operator("lm_embed", init_state, apply, cost_weight=LM_EMBED_COST)
 
 
 @register("lm_stage")
@@ -77,7 +78,9 @@ def lm_stage(cfg: Dict[str, Any]) -> Operator:
             h = h + jax.nn.silu(_rms(h) @ w1) @ w2
         return state, h
 
-    return Operator("lm_stage", init_state, apply, cost_weight=1.0 * len(blocks))
+    return Operator(
+        "lm_stage", init_state, apply, cost_weight=LM_STAGE_COST_PER_BLOCK * len(blocks)
+    )
 
 
 @register("lm_head")
@@ -95,4 +98,4 @@ def lm_head(cfg: Dict[str, Any]) -> Operator:
         h = x + jax.nn.silu(_rms(x) @ wa)
         return state, _rms(h) @ wo
 
-    return Operator("lm_head", init_state, apply, cost_weight=0.4)
+    return Operator("lm_head", init_state, apply, cost_weight=LM_HEAD_COST)

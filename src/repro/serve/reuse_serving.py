@@ -80,10 +80,19 @@ def backbone_pipeline(tenant: str, **kw) -> TenantPipeline:
 
 
 class ReuseServing:
-    """StreamSystem wrapper speaking tenants instead of raw dataflows."""
+    """StreamSystem wrapper speaking tenants instead of raw dataflows.
 
-    def __init__(self, strategy: str = "signature", base_batch: int = 8):
-        self.system = StreamSystem(strategy=strategy, base_batch=base_batch)
+    ``backend`` picks the data plane from the ExecutionBackend registry:
+    ``"inprocess"`` (default) serves real batches through the jit plane;
+    ``"dryrun"`` gives capacity-planning answers (tenant counts, deployed
+    cost) without touching JAX; ``"sharded"`` spreads tenant segments over
+    ``jax.devices()``.
+    """
+
+    def __init__(
+        self, strategy: str = "signature", base_batch: int = 8, backend: str = "inprocess"
+    ):
+        self.system = StreamSystem(strategy=strategy, base_batch=base_batch, backend=backend)
         self.tenants: Dict[str, TenantPipeline] = {}
 
     def add_tenant(self, pipe: TenantPipeline):
@@ -110,9 +119,9 @@ class ReuseServing:
 
     def stats(self) -> Dict[str, float]:
         deployed_cost = 0.0
-        for seg in self.system.executor.segments.values():
+        for seg in self.system.backend.segments.values():
             for tid in seg.live_task_ids():
-                deployed_cost += seg.operators[tid].cost_weight
+                deployed_cost += seg.cost_of[tid]
         return {
             "tenants": len(self.tenants),
             "running_tasks": self.system.running_task_count,

@@ -68,7 +68,9 @@ def rw_trace(
             present.add(n)
             events.append(TraceEvent("add", n))
         elif present:
-            n = list(present)[int(rng.integers(len(present)))]
+            # sorted() so the draw is a pure function of the seed — set
+            # iteration order varies with PYTHONHASHSEED across processes.
+            n = sorted(present)[int(rng.integers(len(present)))]
             present.discard(n)
             absent.append(n)
             events.append(TraceEvent("remove", n))

@@ -1,0 +1,448 @@
+"""ExecutionBackend API tests.
+
+Four layers:
+  * a shared conformance suite every backend (inprocess jit / sharded /
+    dryrun) must pass — deploy/kill/forward/pause/resume/step/snapshot/
+    sink_state/account semantics through StreamSystem;
+  * the dry-run ≡ jit contract: identical live/paused/cost trajectories
+    for the same OPMW trace (the cost model is the contract; checksums
+    are jit-only);
+  * reproduction of the stored Fig. 2 running-task series
+    (results/benchmarks/fig2_3_4_opmw_rw1.json) on the dry-run backend,
+    plus the ≥10× wall-clock advantage over the jit backend;
+  * state-preserving defrag edge cases and the churn-leak regression
+    (no stale task_batch/ewma_ms/paused entries after submit/remove/
+    defrag churn).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.api import ReuseSession, available_backends
+from repro.runtime.backend import resolve_backend
+from repro.runtime.system import StreamSystem
+
+from helpers import chain_df, fig1
+
+BACKENDS = ["inprocess", "sharded", "dryrun"]
+JIT_BACKENDS = ["inprocess", "sharded"]
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks")
+
+
+def _system(backend, strategy="signature", **kw):
+    return StreamSystem(strategy=strategy, backend=backend, **kw)
+
+
+def _opmw_subset(n=6):
+    from repro.workloads import opmw_workload
+
+    return opmw_workload()[:n]
+
+
+# -- registry ------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_builtins_available(self):
+        assert {"inprocess", "sharded", "dryrun"} <= set(available_backends())
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            resolve_backend("no-such-backend")
+        with pytest.raises(TypeError):
+            resolve_backend(42)
+
+    def test_instance_passthrough_and_custom_class(self):
+        from repro.runtime.backend import ExecutionBackend, register_backend
+        from repro.runtime.dryrun import DryRunBackend
+
+        inst = DryRunBackend()
+        assert resolve_backend(inst) is inst
+
+        class MyBackend(DryRunBackend):
+            name = "test-custom"
+
+        register_backend(MyBackend)
+        try:
+            assert "test-custom" in available_backends()
+            sys_ = StreamSystem(backend="test-custom")
+            assert isinstance(sys_.backend, MyBackend)
+            assert isinstance(sys_.backend, ExecutionBackend)
+        finally:
+            from repro.runtime import backend as backend_mod
+
+            backend_mod._BACKENDS.pop("test-custom", None)
+
+    def test_session_backend_name(self):
+        s = ReuseSession(execute=True, backend="dryrun")
+        assert s.backend_name == "dryrun"
+        assert s.stats().backend == "dryrun"
+        assert ReuseSession().backend_name is None
+
+
+# -- shared conformance suite ---------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestBackendConformance:
+    def test_deploy_step_account(self, backend):
+        A, B, C, D = fig1()
+        sys_ = _system(backend)
+        for df in (A, B, C, D):
+            sys_.submit(df.copy())
+        assert sys_.deployed_task_count == 12
+        rep = sys_.step()
+        assert rep.live_tasks == 12
+        assert rep.paused_tasks == 0
+        assert rep.cost > 0
+        live, paused, cost = sys_.backend.account()
+        assert (live, paused) == (12, 0)
+        assert cost == pytest.approx(rep.cost)
+
+    def test_remove_pauses_and_resume(self, backend):
+        A, B, C, D = fig1()
+        sys_ = _system(backend)
+        for df in (A, B, C, D):
+            sys_.submit(df.copy())
+        before = sys_.step()
+        receipt = sys_.remove("D")  # D runs alone: all 4 of its tasks pause
+        after = sys_.step()
+        assert after.live_tasks == before.live_tasks - 4
+        assert after.paused_tasks == 4
+        assert after.cost < before.cost
+        assert sys_.deployed_task_count == 12  # Storm can't kill a subset
+        # ε residue: paused tasks still cost something (drain-phase overhead)
+        only_live_cost = sum(
+            seg.cost_of[t] * seg.spec.batch_of[t]
+            for seg in sys_.backend.segments.values()
+            for t in seg.spec.task_ids
+            if bool(seg.active[t])
+        ) / 320.0
+        assert after.cost > only_live_cost
+        # resume is the inverse control signal
+        sys_.backend.resume(set(receipt.terminated_tasks))
+        rep = sys_.step()
+        assert rep.live_tasks == before.live_tasks
+        assert rep.paused_tasks == 0
+
+    def test_default_kills_topologies(self, backend):
+        A, B, *_ = fig1()
+        sys_ = _system(backend, strategy="none")
+        sys_.submit(A.copy())
+        sys_.submit(B.copy())
+        assert sys_.deployed_task_count == 9
+        sys_.remove("A")
+        rep = sys_.step()
+        assert sys_.deployed_task_count == 5
+        assert rep.paused_tasks == 0  # kill, not pause
+
+    def test_defrag_drops_paused_and_preserves_counts(self, backend):
+        A, B, C, D = fig1()
+        sys_ = _system(backend)
+        for df in (A, B, C, D):
+            sys_.submit(df.copy())
+        sys_.run(3)
+        sys_.remove("B")
+        counts_before = {
+            name: {s: d["count"] for s, d in sys_.sink_digests(name).items()}
+            for name in "ACD"
+        }
+        sys_.defragment()
+        rep = sys_.step()
+        assert rep.paused_tasks == 0
+        assert sys_.deployed_task_count == 11  # paused task dropped
+        for name in "ACD":
+            for sink, d in sys_.sink_digests(name).items():
+                assert d["count"] == counts_before[name][sink] + 1
+
+    def test_forward_unknown_task_raises(self, backend):
+        sys_ = _system(backend)
+        with pytest.raises(KeyError):
+            sys_.backend.forward("never-deployed")
+        with pytest.raises(KeyError):
+            sys_.backend.sink_state("never-deployed")
+
+    def test_owner_index_consistent_across_lifecycle(self, backend):
+        A, B, C, D = fig1()
+        sys_ = _system(backend)
+        for df in (A, B, C, D):
+            sys_.submit(df.copy())
+        sys_.remove("B")
+        sys_.defragment()
+
+        backend_obj = sys_.backend
+        expected = {
+            tid: name
+            for name, seg in backend_obj.segments.items()
+            for tid in seg.spec.task_ids
+        }
+        assert backend_obj._owner_of == expected
+        for tid, owner in expected.items():
+            assert backend_obj._owner(tid) == owner
+
+    def test_snapshot(self, backend):
+        A, *_ = fig1()
+        sys_ = _system(backend)
+        sys_.submit(A.copy())
+        sys_.step()
+        snap = sys_.backend.snapshot()
+        assert snap.backend == backend
+        assert snap.step_count == 1
+        assert snap.live_tasks == 4
+        assert sorted(t for ts in snap.segments.values() for t in ts) == sorted(
+            t for seg in sys_.backend.segments.values() for t in seg.spec.task_ids
+        )
+
+    def test_session_on_step_hook(self, backend):
+        A, *_ = fig1()
+        session = ReuseSession(execute=True, backend=backend)
+        seen = []
+        session.on_step(lambda ev: seen.append((ev.step, ev.live_tasks)))
+        session.submit(A.copy())
+        session.run(2)
+        session.step()
+        assert seen == [(1, 4), (2, 4), (3, 4)]
+
+
+# -- sharded specifics ----------------------------------------------------------
+
+
+class TestShardedPlacement:
+    def test_round_robin_and_least_loaded(self):
+        from repro.runtime.backend import SegmentSpec
+        from repro.runtime.scheduler import resolve_placement
+
+        def spec(name, n):
+            ids = [f"{name}.t{i}" for i in range(n)]
+            return SegmentSpec(
+                name=name, dag_name="d", task_ids=ids,
+                parents={t: [] for t in ids}, publish=set(),
+                batch_of={t: 1 for t in ids},
+            )
+
+        rr = resolve_placement("round_robin")
+        assert [rr.assign(spec(f"s{i}", 1), 3, {}) for i in range(5)] == [0, 1, 2, 0, 1]
+        ll = resolve_placement("least_loaded")
+        assert ll.assign(spec("a", 2), 2, {0: 10, 1: 3}) == 1
+        assert ll.assign(spec("b", 2), 2, {}) == 0
+
+    def test_sharded_tracks_device_assignments(self):
+        A, B, *_ = fig1()
+        sys_ = _system("sharded")
+        sys_.submit(A.copy())
+        sys_.submit(B.copy())
+        backend = sys_.backend
+        assert set(backend.device_of) == set(backend.segments)
+        assert all(0 <= i < len(backend.devices) for i in backend.device_of.values())
+        load = backend.device_load()
+        assert sum(load.values()) == sys_.deployed_task_count
+        snap = backend.snapshot()
+        assert snap.device_of == backend.device_of
+
+    def test_sharded_outputs_match_inprocess(self):
+        A, B, C, D = fig1()
+        plain = _system("inprocess")
+        shard = _system("sharded")
+        for df in (A, B, C, D):
+            plain.submit(df.copy())
+            shard.submit(df.copy())
+        plain.run(5)
+        shard.run(5)
+        for name in "ABCD":
+            assert plain.sink_digests(name) == shard.sink_digests(name)
+
+
+# -- the dry-run ≡ jit contract -------------------------------------------------
+
+
+class TestDryRunContract:
+    def test_trajectories_match_inprocess_on_opmw_trace(self):
+        """live/paused/cost identical event-by-event on an OPMW trace with
+        removals (pause accounting) and a defrag (drop accounting)."""
+        from repro.workloads import seq_trace
+
+        dags = _opmw_subset(6)
+        events = seq_trace(dags, seed=5)
+        jit = _system("inprocess")
+        dry = _system("dryrun")
+        for i, ev in enumerate(events):
+            for s in (jit, dry):
+                if ev.op == "add":
+                    s.submit(next(d for d in dags if d.name == ev.name).copy())
+                else:
+                    s.remove(ev.name)
+            jr, dr = jit.step(), dry.step()
+            assert (jr.live_tasks, jr.paused_tasks) == (dr.live_tasks, dr.paused_tasks)
+            assert jr.cost == pytest.approx(dr.cost, rel=1e-9)
+            if i == len(dags) + 2:  # mid-drain: exercise defrag on both
+                jit.defragment()
+                dry.defragment()
+
+    def test_sink_counts_match_inprocess(self):
+        A, B, *_ = fig1()
+        jit = _system("inprocess")
+        dry = _system("dryrun")
+        for s in (jit, dry):
+            s.submit(A.copy())
+            s.run(3)
+            s.submit(B.copy())
+            s.run(4)
+        for name in "AB":
+            j = jit.sink_digests(name)
+            d = dry.sink_digests(name)
+            assert set(j) == set(d)
+            for sink in j:
+                assert j[sink]["count"] == d[sink]["count"]
+                assert d[sink]["checksum"] == 0.0  # checksums are jit-only
+
+    def test_dryrun_reproduces_fig2_running_tasks(self):
+        """The acceptance contract: DryRunBackend on the OPMW rw1 trace
+        reproduces the stored Fig. 2 running-task series exactly."""
+        from repro.workloads import opmw_workload, replay, rw_trace
+
+        with open(os.path.join(RESULTS, "fig2_3_4_opmw_rw1.json")) as f:
+            stored = json.load(f)["series"]
+
+        dags = opmw_workload()
+        events = rw_trace(dags, seed=11)
+        session = ReuseSession(strategy="signature", execute=True, backend="dryrun")
+        live = []
+        for _ in replay(session, dags, events):
+            live.append(session._system.backend.account()[0])
+        assert live == stored["reuse_tasks"]
+
+    @pytest.mark.slow
+    def test_dryrun_at_least_10x_faster_than_jit(self):
+        """Same trace prefix on both backends; dry-run must win ≥10×
+        (in practice it wins by orders of magnitude — no jit compiles)."""
+        from repro.workloads import rw_trace
+
+        dags = _opmw_subset(8)
+        events = rw_trace(dags, seed=11)[:10]
+
+        def run(backend):
+            sys_ = _system(backend)
+            t0 = time.perf_counter()
+            for ev in events:
+                if ev.op == "add":
+                    sys_.submit(next(d for d in dags if d.name == ev.name).copy())
+                else:
+                    sys_.remove(ev.name)
+                sys_.step()
+            return time.perf_counter() - t0
+
+        dry_s = run("dryrun")
+        jit_s = run("inprocess")
+        assert jit_s >= 10 * dry_s, f"dryrun {dry_s:.3f}s vs jit {jit_s:.3f}s"
+
+    def test_dryrun_data_plane_never_imports_jax(self):
+        """backend="dryrun" is a JAX-free path end to end (lazy registries)."""
+        code = (
+            "import sys\n"
+            "from repro.api import ReuseSession, flow\n"
+            "s = ReuseSession(strategy='signature', execute=True, backend='dryrun')\n"
+            "a = flow('A').source('urban').then('senml_parse').then('kalman', q=0.1)"
+            ".sink('store').build()\n"
+            "b = flow('B').source('urban').then('senml_parse').then('kalman', q=0.1)"
+            ".then('avg').sink('store').build()\n"
+            "s.submit(a); s.submit(b); s.run(3)\n"
+            "s.remove('A'); s.step(); s.defragment(); s.step()\n"
+            "assert s.sink_digests('B')\n"
+            "assert 'jax' not in sys.modules, 'dryrun path imported jax'\n"
+        )
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = src + os.pathsep * bool(env.get("PYTHONPATH")) + env.get(
+            "PYTHONPATH", ""
+        )
+        proc = subprocess.run(
+            [sys.executable, "-c", code], env=env, capture_output=True, text=True
+        )
+        assert proc.returncode == 0, proc.stderr
+
+
+# -- defrag edge cases and the churn leak ---------------------------------------
+
+
+class TestDefragEdgeCases:
+    def test_paused_tasks_dropped_during_defrag(self):
+        A, B, C, D = fig1()
+        sys_ = _system("inprocess")
+        for df in (A, B, C, D):
+            sys_.submit(df.copy())
+        r = sys_.remove("B")
+        paused_ids = set(r.terminated_tasks)
+        assert paused_ids <= sys_.backend.paused
+        sys_.defragment()
+        deployed = {
+            t for seg in sys_.backend.segments.values() for t in seg.spec.task_ids
+        }
+        assert not (paused_ids & deployed)
+        assert not sys_.backend.paused
+
+    def test_sink_digests_identical_across_defrag(self):
+        """Same submissions/removals/steps, with and without a defrag in the
+        middle — the jit digests (count AND checksum) must be identical."""
+        A, B, C, D = fig1()
+
+        def run(defrag):
+            sys_ = _system("inprocess")
+            for df in (A, B, C, D):
+                sys_.submit(df.copy())
+            sys_.run(4)
+            sys_.remove("B")
+            if defrag:
+                sys_.defragment()
+            sys_.run(4)
+            return {name: sys_.sink_digests(name) for name in "ACD"}
+
+        assert run(defrag=False) == run(defrag=True)
+
+    @pytest.mark.parametrize("backend", ["dryrun", "inprocess"])
+    def test_churn_leaves_no_stale_entries(self, backend):
+        """submit/remove/defrag churn ×20: task_batch, ewma_ms, paused and
+        the owner index must stay bounded by what is actually deployed."""
+        n_rounds = 20 if backend == "dryrun" else 4
+        sys_ = _system(backend)
+        keep = chain_df("keep", "urban", [("parse", {}), ("kalman", {"q": 0.1})])
+        sys_.submit(keep)
+        for i in range(n_rounds):
+            name = f"churn{i}"
+            df = chain_df(
+                name,
+                "urban",
+                [("parse", {}), ("kalman", {"q": 0.1}), (f"uniq{i}", {"round": i})],
+            )
+            sys_.submit(df)
+            sys_.run(2)
+            sys_.remove(name)
+            if i % 2 == 1:
+                sys_.defragment()
+            sys_.run(1)
+
+        backend_obj = sys_.backend
+        deployed = {
+            t for seg in backend_obj.segments.values() for t in seg.spec.task_ids
+        }
+        running = {
+            t for df in sys_.manager.running.values() for t in df.tasks
+        }
+        # task_batch: exactly the running (live) tasks — no terminated ids
+        assert set(sys_.task_batch) == running
+        # paused ⊆ deployed, and after a final defrag nothing is paused
+        assert backend_obj.paused <= deployed
+        sys_.defragment()
+        assert not sys_.backend.paused
+        # ewma entries only for live segments
+        assert set(backend_obj.ewma_ms) <= set(backend_obj.segments)
+        # owner index exactly mirrors deployment
+        assert set(backend_obj._owner_of) == {
+            t for seg in backend_obj.segments.values() for t in seg.spec.task_ids
+        }
