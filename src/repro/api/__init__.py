@@ -51,6 +51,11 @@ from repro.runtime.backend import (
     register_backend,
     resolve_backend,
 )
+from repro.runtime.checkpoint import (
+    CHECKPOINT_FORMAT_VERSION,
+    CheckpointError,
+    CheckpointStore,
+)
 
 from .builder import DataflowBuilder, flow
 from .events import (
@@ -65,6 +70,9 @@ from .session import ReuseSession
 
 __all__ = [
     "BatchSubmitReceipt",
+    "CHECKPOINT_FORMAT_VERSION",
+    "CheckpointError",
+    "CheckpointStore",
     "Dataflow",
     "DataflowBuilder",
     "DataflowError",

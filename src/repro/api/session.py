@@ -18,6 +18,12 @@ milliseconds).
     batch = session.submit_many([flow_b, flow_c])
     session.run(5)
     print(session.stats().task_reduction)
+
+Durability: ``checkpoint_dir=`` (plus ``checkpoint_every=N`` steps for an
+automatic cadence) makes the whole system crash-recoverable —
+``ReuseSession.restore(checkpoint_dir)`` rebuilds control plane *and* data
+plane from the newest valid checkpoint and resumes exactly where the
+crashed process stopped (see :mod:`repro.runtime.checkpoint`).
 """
 from __future__ import annotations
 
@@ -53,13 +59,21 @@ class ReuseSession:
         base_batch: int = 32,
         check_invariants: bool = False,
         journal_path: Optional[str] = None,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: Optional[int] = None,
+        system: Optional[Any] = None,
         on_merge: Optional[Hook] = None,
         on_unmerge: Optional[Hook] = None,
         on_defrag: Optional[Hook] = None,
         on_step: Optional[Hook] = None,
     ):
         self._system = None
-        if execute:
+        if system is not None:
+            # Wrap an existing StreamSystem (the restore() path) — hooks
+            # passed alongside attach to the restored planes as usual.
+            self._system = system
+            self.manager = system.manager
+        elif execute:
             # Deferred import keeps control-plane sessions light; the
             # runtime package itself resolves backends lazily, so a
             # backend="dryrun" session never imports JAX either.
@@ -71,9 +85,17 @@ class ReuseSession:
                 check_invariants=check_invariants,
                 journal_path=journal_path,
                 backend=backend,
+                checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every,
             )
             self.manager: ReuseManager = self._system.manager
         else:
+            if checkpoint_dir or checkpoint_every:
+                raise DataflowError(
+                    "checkpoint_dir/checkpoint_every need a data plane — "
+                    "create the session with execute=True (the control plane "
+                    "is journaled via journal_path)"
+                )
             self.manager = ReuseManager(
                 strategy=strategy,
                 check_invariants=check_invariants,
@@ -96,17 +118,51 @@ class ReuseSession:
 
     # -- construction helpers ------------------------------------------------
     @classmethod
-    def restore(cls, journal_path: str, **kwargs: Any) -> "ReuseSession":
-        """Rebuild a control-plane session from a durable operation journal."""
+    def restore(cls, path: str, **kwargs: Any) -> "ReuseSession":
+        """Rebuild a session from durable state.
+
+        Two flavors, dispatched on what ``path`` holds:
+
+        * a **checkpoint directory** (or one ``ckpt-*.json`` file) — full
+          crash recovery: replay the control-plane journal, redeploy every
+          data-plane segment on the checkpointed backend (or ``backend=``
+          for a cross-backend restore), re-pause, re-attach any
+          ``on_merge``/``on_step``/... hooks passed here, and resume
+          stepping with trajectories identical to an uninterrupted run.
+          The restored session keeps checkpointing into the same directory
+          at the checkpointed cadence unless overridden.
+        * a **journal file** — the legacy control-plane-only restore
+          (``execute=False``).
+        """
+        import os
+
+        from repro.runtime.checkpoint import is_checkpoint_path
+
+        if os.path.isdir(path) or is_checkpoint_path(path):
+            from repro.runtime.system import StreamSystem
+
+            hooks = {
+                k: kwargs.pop(k, None)
+                for k in ("on_merge", "on_unmerge", "on_defrag", "on_step")
+            }
+            system = StreamSystem.restore(path, **kwargs)
+            return cls(system=system, **{k: v for k, v in hooks.items() if v})
         session = cls(**kwargs)
         if session._system is not None:
-            raise DataflowError("restore() rebuilds the control plane only (execute=False)")
+            raise DataflowError(
+                "restore() from a journal rebuilds the control plane only "
+                "(execute=False); restore from a checkpoint directory for the data plane"
+            )
         session.manager = ReuseManager.restore(
-            journal_path,
+            path,
             strategy=session.manager._strategy,
             check_invariants=session.manager.check_invariants,
         )
         return session
+
+    def checkpoint(self, checkpoint_dir: Optional[str] = None) -> str:
+        """Write one durable full-system checkpoint; returns its path."""
+        return self._require_system("checkpoint").checkpoint(checkpoint_dir)
 
     # -- properties -----------------------------------------------------------
     @property

@@ -31,6 +31,19 @@ compile cells:
 
     PYTHONPATH=src python -m repro.launch.dryrun --trace opmw/rw1 \
         [--backend dryrun] [--steps-per-event 1] [--json out.json]
+
+Trace mode is crash-recoverable: ``--checkpoint-dir DIR`` writes one
+durable checkpoint every ``--checkpoint-every`` events (default 1), and
+``--restore`` resumes an interrupted trace from the newest valid
+checkpoint — the control-plane journal length tells the CLI how many
+events were already applied, so the replay continues exactly where the
+crashed run stopped (``--max-events`` truncates a run, which is also how
+the recovery tests simulate the crash):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --trace opmw/rw1 \
+        --checkpoint-dir /tmp/ckpts --max-events 40
+    PYTHONPATH=src python -m repro.launch.dryrun --trace opmw/rw1 \
+        --checkpoint-dir /tmp/ckpts --restore
 """
 import argparse
 import json
@@ -120,11 +133,22 @@ def run_cell(
 
 def run_dataflow_trace(
     spec: str,
-    backend: str = "dryrun",
+    backend: Optional[str] = None,
     strategy: str = "signature",
     steps_per_event: int = 1,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
+    restore: bool = False,
+    max_events: Optional[int] = None,
 ) -> Dict[str, Any]:
-    """Replay ``workload/trace`` (e.g. ``opmw/rw1``) on an ExecutionBackend."""
+    """Replay ``workload/trace`` (e.g. ``opmw/rw1``) on an ExecutionBackend.
+
+    With ``checkpoint_dir`` the session checkpoints durably every
+    ``checkpoint_every`` events; ``restore=True`` resumes from the newest
+    valid checkpoint, skipping the events the crashed run already applied
+    (one journal op per trace event, so the journal length *is* the resume
+    offset). ``max_events`` truncates the replay — the crash simulator.
+    """
     from repro.api import ReuseSession
     from repro.workloads import (
         opmw_workload,
@@ -146,10 +170,27 @@ def run_dataflow_trace(
         else rw_trace(dags, seed=seeds[trace])
     )
 
-    session = ReuseSession(strategy=strategy, execute=True, backend=backend)
+    resumed_at = 0
+    if restore:
+        if not checkpoint_dir:
+            raise SystemExit("--restore needs --checkpoint-dir")
+        # backend=None honors the checkpointed backend; an explicit
+        # --backend requests a cross-backend restore (inprocess ⇄ dryrun).
+        session = ReuseSession.restore(checkpoint_dir, backend=backend)
+        resumed_at = len(session.manager.journal)  # events already applied
+    else:
+        session = ReuseSession(
+            strategy=strategy,
+            execute=True,
+            backend=backend or "dryrun",
+            checkpoint_dir=checkpoint_dir,
+        )
+    todo = events[resumed_at:]
+    if max_events is not None:
+        todo = todo[: max(0, max_events - resumed_at)]
     live, paused, cost = [], [], []
     t0 = time.time()
-    for _ in replay(session, dags, events):
+    for i, _ in enumerate(replay(session, dags, todo)):
         report = None
         for _ in range(steps_per_event):
             report = session.step()
@@ -160,15 +201,21 @@ def run_dataflow_trace(
         live.append(l)
         paused.append(p)
         cost.append(round(c, 4))
+        # Checkpoint on event boundaries (not raw steps) so a restore
+        # resumes exactly at the next un-applied trace event.
+        if checkpoint_dir and (i + 1) % max(1, checkpoint_every) == 0:
+            session.checkpoint()
     return {
         "trace": spec,
-        "backend": backend,
-        "strategy": strategy,
+        "backend": session.backend_name,
+        "strategy": session.strategy,
         "events": len(events),
+        "events_applied": resumed_at + len(todo),
+        "resumed_at_event": resumed_at,
         "wall_s": round(time.time() - t0, 3),
-        "peak_live_tasks": max(live),
-        "peak_paused_tasks": max(paused),
-        "peak_cores": max(cost),
+        "peak_live_tasks": max(live) if live else 0,
+        "peak_paused_tasks": max(paused) if paused else 0,
+        "peak_cores": max(cost) if cost else 0.0,
         "series": {"live_tasks": live, "paused_tasks": paused, "cores": cost},
     }
 
@@ -178,9 +225,26 @@ def main(argv=None) -> int:
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--trace", help="dataflow-trace mode: {opmw,riot}/{seq,rw1,rw2}")
-    ap.add_argument("--backend", default="dryrun", help="ExecutionBackend for --trace")
+    ap.add_argument(
+        "--backend", default=None,
+        help="ExecutionBackend for --trace (default: dryrun; with --restore, "
+        "the checkpointed backend unless set explicitly)",
+    )
     ap.add_argument("--strategy", default="signature", help="merge strategy for --trace")
     ap.add_argument("--steps-per-event", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", help="durable checkpoints for --trace mode")
+    ap.add_argument(
+        "--checkpoint-every", type=int, default=1,
+        help="checkpoint cadence in trace events (with --checkpoint-dir)",
+    )
+    ap.add_argument(
+        "--restore", action="store_true",
+        help="resume the trace from the newest valid checkpoint in --checkpoint-dir",
+    )
+    ap.add_argument(
+        "--max-events", type=int, default=None,
+        help="stop the trace after N events (crash simulation / smoke)",
+    )
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--experiment", help="named §Perf override set (launch/experiments.py)")
     ap.add_argument("--top-sites", type=int, default=0, help="report top-N HBM sites")
@@ -197,6 +261,10 @@ def main(argv=None) -> int:
             backend=args.backend,
             strategy=args.strategy,
             steps_per_event=args.steps_per_event,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
+            restore=args.restore,
+            max_events=args.max_events,
         )
         summary = {k: v for k, v in rec.items() if k != "series"}
         print(json.dumps(summary, indent=2))

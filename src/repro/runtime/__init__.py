@@ -13,6 +13,14 @@ import importlib
 from typing import TYPE_CHECKING
 
 # JAX-free eagerly-imported surface.
+from .checkpoint import (
+    CHECKPOINT_FORMAT_VERSION,
+    CheckpointError,
+    CheckpointStore,
+    decode_pytree,
+    encode_pytree,
+    is_checkpoint_path,
+)
 from .backend import (
     CORE_CALIBRATION,
     PAUSE_EPSILON,
@@ -61,7 +69,10 @@ if TYPE_CHECKING:  # pragma: no cover - static imports for type checkers
 __all__ = [
     "BackendSnapshot",
     "Broker",
+    "CHECKPOINT_FORMAT_VERSION",
     "CORE_CALIBRATION",
+    "CheckpointError",
+    "CheckpointStore",
     "DryRunBackend",
     "ExecutionBackend",
     "Executor",
@@ -81,6 +92,9 @@ __all__ = [
     "available_placements",
     "build_segment",
     "compute_batches",
+    "decode_pytree",
+    "encode_pytree",
+    "is_checkpoint_path",
     "place_round_robin",
     "register_backend",
     "register_placement",

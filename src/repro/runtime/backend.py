@@ -6,7 +6,7 @@ concrete runtime (Storm). This module makes that binding an API instead:
 :class:`ExecutionBackend` through a fixed verb set —
 
   ``deploy / kill / forward / pause / resume / step / snapshot /
-  sink_state / account``
+  sink_state / account / dump_state / restore_state``
 
 — and backends plug in by name through a registry that mirrors the
 ``MergeStrategy`` registry in :mod:`repro.core.strategies`. Three ship
@@ -36,7 +36,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple, Type, Union
 
-from repro.core.graph import Dataflow
+from repro.core.graph import Dataflow, Task
+
+from .checkpoint import decode_pytree, encode_pytree
 
 # Fraction of a task's cost still consumed while paused (deployed-but-idle
 # Storm bolt). Calibrated so the paper's drain-phase crossover reproduces.
@@ -142,6 +144,9 @@ class ExecutionBackend:
         # O(1) reverse index: task id -> owning segment name, maintained
         # across deploy/kill/defragment (was an O(segments·tasks) scan).
         self._owner_of: Dict[str, str] = {}
+        # task id -> ⟨type, config⟩ definition, kept so checkpoints can
+        # redeploy paused tasks whose running DAGs are long gone.
+        self.task_defs: Dict[str, Task] = {}
         # straggler tracking
         self.straggler_factor = straggler_factor
         self.ewma_alpha = ewma_alpha
@@ -178,6 +183,7 @@ class ExecutionBackend:
         self.forwarding[spec.name] = set(spec.publish)
         for tid in spec.task_ids:
             self._owner_of[tid] = spec.name
+            self.task_defs[tid] = dataflow.tasks[tid]
         return seg
 
     def kill(self, segment_name: str) -> None:
@@ -189,6 +195,7 @@ class ExecutionBackend:
             self.paused.discard(tid)
             if self._owner_of.get(tid) == segment_name:
                 del self._owner_of[tid]
+                self.task_defs.pop(tid, None)
 
     # -- control signals (paper §4.3 control topic) -----------------------------
     def forward(self, task_id: str) -> None:
@@ -276,6 +283,109 @@ class ExecutionBackend:
             cost=cost,
             device_of=dict(getattr(self, "device_of", {})),
         )
+
+    # -- durability (checkpoint/restore verbs) ------------------------------------
+    def dump_state(self) -> Dict[str, Any]:
+        """Serialize everything a restore needs to resume stepping exactly.
+
+        The payload is backend-portable: segment specs carry each task's
+        ⟨type, config⟩ so a restoring backend can rebuild operators (or cost
+        entries) without the original running DAGs — deployed-but-paused
+        tasks may no longer exist in any running DAG. Backend-specific
+        extras (broker buffers, device maps) ride in ``extra`` via
+        :meth:`_dump_extra` and are ignored by backends that don't know
+        them, which is what makes inprocess ↔ dryrun cross-restores work.
+        """
+        segments: List[Dict[str, Any]] = []
+        for name, seg in sorted(
+            self.segments.items(), key=lambda kv: kv[1].spec.created_at
+        ):
+            spec = seg.spec
+            segments.append(
+                {
+                    "name": name,
+                    "dag_name": spec.dag_name,
+                    "task_ids": list(spec.task_ids),
+                    "parents": {t: list(ps) for t, ps in spec.parents.items()},
+                    # the *current* forwarding set, so runtime forward()
+                    # signals survive the restore as the new publish set
+                    "publish": sorted(self.forwarding.get(name, set())),
+                    "batch_of": {t: int(b) for t, b in spec.batch_of.items()},
+                    "created_at": int(spec.created_at),
+                    "tasks": {
+                        t: {"type": self.task_defs[t].type, "config": self.task_defs[t].config}
+                        for t in spec.task_ids
+                    },
+                    "states": {
+                        t: encode_pytree(seg.states[t]) for t in spec.task_ids
+                    },
+                    "steps_run": int(getattr(seg, "steps_run", 0)),
+                }
+            )
+        return {
+            "step_count": int(self.step_count),
+            "launch_seq": int(self._launch_seq),
+            "paused": sorted(self.paused),
+            "ewma_ms": {k: float(v) for k, v in self.ewma_ms.items()},
+            "redispatches": [[int(s), n] for s, n in self.redispatches],
+            "segments": segments,
+            "extra": self._dump_extra(),
+        }
+
+    def restore_state(self, state: Dict[str, Any]) -> None:
+        """Redeploy every checkpointed segment and resume the counters.
+
+        Must be called on a *fresh* backend. Segments re-deploy in their
+        original launch order (so the launch-order-is-topological invariant
+        survives), with task states decoded through the backend-specific
+        :meth:`_decode_init_states` hook — that hook is where cross-backend
+        restores coerce states (jit ⇄ dry-run). Sharded backends re-place
+        segments through their PlacementPolicy as a side effect of
+        ``deploy``; device pinning is *not* restored verbatim.
+        """
+        if self.segments:
+            raise ValueError("restore_state() needs a fresh backend (segments deployed)")
+        for rec in sorted(state["segments"], key=lambda r: r["created_at"]):
+            spec = SegmentSpec(
+                name=rec["name"],
+                dag_name=rec["dag_name"],
+                task_ids=list(rec["task_ids"]),
+                parents={t: list(ps) for t, ps in rec["parents"].items()},
+                publish=set(rec["publish"]),
+                batch_of={t: int(b) for t, b in rec["batch_of"].items()},
+            )
+            # Synthetic task-definition container: deploy only reads
+            # dataflow.tasks[tid] (operator/cost construction), so the
+            # checkpointed ⟨type, config⟩ records are sufficient.
+            df = Dataflow(rec["dag_name"])
+            for tid in spec.task_ids:
+                t = rec["tasks"][tid]
+                df.add_task(Task.make(tid, t["type"], t["config"]))
+            init_states = self._decode_init_states(spec, df, rec["states"])
+            self._launch_seq = int(rec["created_at"])
+            seg = self.deploy(spec, df, init_states=init_states)
+            seg.steps_run = int(rec.get("steps_run", 0))
+        self._launch_seq = int(state["launch_seq"])
+        paused = set(state.get("paused", ()))
+        if paused:
+            self.pause(paused)
+        self.step_count = int(state["step_count"])
+        self.ewma_ms = {k: float(v) for k, v in state.get("ewma_ms", {}).items()}
+        self.redispatches = [(int(s), n) for s, n in state.get("redispatches", ())]
+        self._restore_extra(state.get("extra", {}))
+
+    def _decode_init_states(
+        self, spec: SegmentSpec, dataflow: Dataflow, states_enc: Dict[str, Any]
+    ) -> Dict[str, PyTree]:
+        """Decode checkpointed states into this backend's native form."""
+        return {tid: decode_pytree(enc) for tid, enc in states_enc.items()}
+
+    def _dump_extra(self) -> Dict[str, Any]:
+        """Backend-specific durable extras (broker buffers, device maps)."""
+        return {}
+
+    def _restore_extra(self, extra: Dict[str, Any]) -> None:
+        """Consume :meth:`_dump_extra` output; unknown keys must be ignored."""
 
     # -- straggler mitigation -----------------------------------------------------
     def _update_stragglers(self, seg_ms: Dict[str, float]) -> List[str]:

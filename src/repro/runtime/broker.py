@@ -41,6 +41,10 @@ class Broker:
     def has(self, topic: str) -> bool:
         return topic in self._topics
 
+    def topics(self) -> Dict[str, jnp.ndarray]:
+        """Snapshot view of the live topic buffers (checkpointing)."""
+        return dict(self._topics)
+
     def drop(self, topic: str) -> None:
         self._topics.pop(topic, None)
 

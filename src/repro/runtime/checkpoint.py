@@ -1,0 +1,249 @@
+"""Durable data-plane checkpoints — versioned, atomic, torn-write tolerant.
+
+The ReuseManager journal already makes the *control plane* durable: replay
+reconstructs 𝔻/𝔻̄/Δ/Φ byte-identically. This module adds the missing data
+plane half. A checkpoint is one JSON file holding
+
+  * the control-plane operation journal (so restore can replay it), and
+  * the backend's :meth:`~repro.runtime.backend.ExecutionBackend.dump_state`
+    payload — deployed segment specs, task ⟨type, config⟩ definitions,
+    per-task state pytrees, forwarding/pause flags, broker buffers and
+    straggler EWMAs —
+
+wrapped in an integrity envelope (format version, monotonic checkpoint id,
+sha256 of the canonical payload). Crash consistency comes from three
+mechanics:
+
+  * **atomic write** — serialize to ``<file>.tmp`` in the same directory,
+    fsync, then :func:`os.replace` onto the final name, so a checkpoint is
+    either fully present or absent;
+  * **monotonic ids** — files are named ``ckpt-<id>.json`` with ids that
+    only grow (corrupt files still advance the counter, so a re-written
+    checkpoint never reuses a torn file's id);
+  * **torn-last tolerance** — :meth:`CheckpointStore.latest` walks ids
+    newest-first and returns the first envelope that parses, carries a
+    supported format version and matches its sha256, so a crash mid-write
+    falls back to the previous durable checkpoint instead of failing.
+
+The module is deliberately JAX-free (numpy only) so that a
+``backend="dryrun"`` session can checkpoint and restore without ever
+importing JAX. Array leaves in task-state pytrees are encoded as
+base64-packed bytes with dtype/shape, which round-trips jit states
+bit-exactly and costs nothing for the dry-run backend's scalar states.
+"""
+from __future__ import annotations
+
+import base64
+import hashlib
+import json
+import os
+import re
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+# Format history (see README "Crash recovery" for the compatibility table):
+#   1 — initial format: envelope {checkpoint_format, checkpoint_id,
+#       created_at, sha256, payload}; payload {backend, strategy, journal,
+#       base_batch, seg_counter, task_batch, segments_of, checkpoint_every,
+#       data:{step_count, launch_seq, paused, ewma_ms, redispatches,
+#       segments:[...], extra:{...}}}.
+CHECKPOINT_FORMAT_VERSION = 1
+SUPPORTED_FORMATS = {1}
+
+_CKPT_RE = re.compile(r"^ckpt-(\d{8})\.json$")
+
+
+class CheckpointError(ValueError):
+    """A checkpoint file is missing, torn, or of an unsupported format."""
+
+
+# -- pytree codec ---------------------------------------------------------------
+
+
+def encode_pytree(x: Any) -> Any:
+    """JSON-safe encoding of a task-state pytree.
+
+    Scalars pass through; dict/tuple/list nodes are tagged so decode can
+    rebuild the exact container types; array-likes (numpy or jax — anything
+    with dtype/shape/tobytes) become base64 bytes + dtype + shape, which is
+    bit-exact and needs no JAX import on either side.
+    """
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return x
+    if isinstance(x, dict):
+        return {"__kind__": "dict", "items": {k: encode_pytree(v) for k, v in x.items()}}
+    if isinstance(x, tuple):
+        return {"__kind__": "tuple", "items": [encode_pytree(v) for v in x]}
+    if isinstance(x, list):
+        return {"__kind__": "list", "items": [encode_pytree(v) for v in x]}
+    if hasattr(x, "dtype") and hasattr(x, "shape"):
+        # device → host for jax arrays; order="C" (not ascontiguousarray,
+        # which promotes 0-d scalars to shape (1,)) for stable tobytes()
+        arr = np.asarray(x, order="C")
+        return {
+            "__kind__": "ndarray",
+            "dtype": arr.dtype.str,
+            "shape": list(arr.shape),
+            "data": base64.b64encode(arr.tobytes()).decode("ascii"),
+        }
+    raise TypeError(f"cannot checkpoint state leaf of type {type(x).__name__}")
+
+
+def decode_pytree(x: Any) -> Any:
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return x
+    if isinstance(x, dict):
+        kind = x.get("__kind__")
+        if kind == "dict":
+            return {k: decode_pytree(v) for k, v in x["items"].items()}
+        if kind == "tuple":
+            return tuple(decode_pytree(v) for v in x["items"])
+        if kind == "list":
+            return [decode_pytree(v) for v in x["items"]]
+        if kind == "ndarray":
+            arr = np.frombuffer(
+                base64.b64decode(x["data"]), dtype=np.dtype(x["dtype"])
+            ).reshape(x["shape"])
+            return arr.copy()  # frombuffer views are read-only
+        raise CheckpointError(f"unknown pytree node kind {kind!r}")
+    raise CheckpointError(f"cannot decode state node of type {type(x).__name__}")
+
+
+def _canonical_json(payload: Dict[str, Any]) -> str:
+    return json.dumps(payload, sort_keys=True, separators=(",", ":"))
+
+
+def payload_digest(payload: Dict[str, Any]) -> str:
+    return hashlib.sha256(_canonical_json(payload).encode("utf-8")).hexdigest()
+
+
+# -- the on-disk store ----------------------------------------------------------
+
+
+class CheckpointStore:
+    """A directory of versioned checkpoints with atomic, monotonic writes."""
+
+    def __init__(self, root: str):
+        self.root = str(root)
+
+    # -- naming ---------------------------------------------------------------
+    @staticmethod
+    def filename(checkpoint_id: int) -> str:
+        return f"ckpt-{checkpoint_id:08d}.json"
+
+    def path_of(self, checkpoint_id: int) -> str:
+        return os.path.join(self.root, self.filename(checkpoint_id))
+
+    def list_ids(self) -> List[int]:
+        """All checkpoint ids present on disk (valid or torn), ascending."""
+        if not os.path.isdir(self.root):
+            return []
+        ids = []
+        for name in os.listdir(self.root):
+            m = _CKPT_RE.match(name)
+            if m:
+                ids.append(int(m.group(1)))
+        return sorted(ids)
+
+    # -- write ----------------------------------------------------------------
+    def save(self, payload: Dict[str, Any]) -> str:
+        """Write the next checkpoint atomically; returns its path.
+
+        The id is one past the highest id on disk — torn files included, so
+        a checkpoint that failed mid-write is never overwritten in place.
+        """
+        os.makedirs(self.root, exist_ok=True)
+        ids = self.list_ids()
+        checkpoint_id = (ids[-1] + 1) if ids else 1
+        # Serialize the payload exactly once: the canonical string is both
+        # the digest input and the bytes written (load() re-canonicalizes
+        # the parsed payload, which reproduces this string — sorted keys).
+        payload_json = _canonical_json(payload)
+        header = json.dumps(
+            {
+                "checkpoint_format": CHECKPOINT_FORMAT_VERSION,
+                "checkpoint_id": checkpoint_id,
+                "created_at": time.time(),
+                "sha256": hashlib.sha256(payload_json.encode("utf-8")).hexdigest(),
+            }
+        )
+        final = self.path_of(checkpoint_id)
+        tmp = final + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(header[:-1] + ', "payload": ' + payload_json + "}")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+        try:  # best-effort directory fsync so the rename itself is durable
+            dirfd = os.open(self.root, os.O_RDONLY)
+            try:
+                os.fsync(dirfd)
+            finally:
+                os.close(dirfd)
+        except OSError:  # pragma: no cover - platform-dependent
+            pass
+        return final
+
+    # -- read -----------------------------------------------------------------
+    def load(self, path_or_id: Any) -> Dict[str, Any]:
+        """Load + validate one checkpoint envelope (raises CheckpointError)."""
+        path = self.path_of(path_or_id) if isinstance(path_or_id, int) else str(path_or_id)
+        try:
+            with open(path) as f:
+                envelope = json.load(f)
+        except FileNotFoundError:
+            raise CheckpointError(f"checkpoint {path!r} does not exist")
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise CheckpointError(f"checkpoint {path!r} is torn or not JSON: {e}")
+        if not isinstance(envelope, dict) or "payload" not in envelope:
+            raise CheckpointError(f"checkpoint {path!r} has no payload envelope")
+        fmt = envelope.get("checkpoint_format")
+        if fmt not in SUPPORTED_FORMATS:
+            raise CheckpointError(
+                f"checkpoint {path!r} has unsupported format {fmt!r} "
+                f"(supported: {sorted(SUPPORTED_FORMATS)})"
+            )
+        digest = payload_digest(envelope["payload"])
+        if digest != envelope.get("sha256"):
+            raise CheckpointError(f"checkpoint {path!r} failed its sha256 integrity check")
+        return envelope
+
+    def latest(self) -> Optional[Tuple[int, Dict[str, Any]]]:
+        """Newest *valid* checkpoint as ``(id, envelope)``.
+
+        Walks ids newest-first, skipping torn/corrupt/unsupported files —
+        the crash-consistency contract: a crash mid-``save`` loses at most
+        the checkpoint being written.
+        """
+        for checkpoint_id in reversed(self.list_ids()):
+            try:
+                return checkpoint_id, self.load(checkpoint_id)
+            except CheckpointError:
+                continue
+        return None
+
+    def latest_payload(self) -> Dict[str, Any]:
+        found = self.latest()
+        if found is None:
+            raise CheckpointError(f"no valid checkpoint under {self.root!r}")
+        return found[1]["payload"]
+
+
+def is_checkpoint_path(path: str) -> bool:
+    """True if ``path`` names a checkpoint directory or a single checkpoint
+    file — used by ``ReuseSession.restore`` to dispatch between full-system
+    restore and the legacy control-plane journal restore."""
+    if os.path.isdir(path):
+        return True
+    if _CKPT_RE.match(os.path.basename(path)):
+        return True
+    if os.path.isfile(path):
+        try:
+            with open(path) as f:
+                head = f.read(512).lstrip()
+            return head.startswith("{") and '"checkpoint_format"' in head
+        except OSError:
+            return False
+    return False

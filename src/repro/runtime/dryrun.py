@@ -27,6 +27,7 @@ from repro.core.graph import Dataflow
 from repro.ops.costs import cost_weight_for_task
 
 from .backend import ExecutionBackend, SegmentSpec
+from .checkpoint import decode_pytree
 
 
 @dataclass
@@ -88,6 +89,29 @@ class DryRunBackend(ExecutionBackend):
             cost_of=cost_of,
             sink_ids=sink_ids,
         )
+
+    def _decode_init_states(
+        self, spec: SegmentSpec, dataflow: Dataflow, states_enc: Dict[str, Any]
+    ) -> Dict[str, Any]:
+        """Coerce checkpointed states to the cost-model's native form.
+
+        Only sink counters matter here: a jit checkpoint's sink state
+        (device arrays for count/checksum/last) collapses to
+        ``{"count": int, "checksum": 0.0}`` — checksums are jit-only and
+        read as 0.0 on this backend — and every non-sink state collapses
+        to ``()``. This is the inprocess → dryrun half of the cross-backend
+        restore contract: sink counts and Fig. 2 trajectories continue
+        exactly; jit-internal operator state is deliberately dropped.
+        """
+        out: Dict[str, Any] = {}
+        for tid, enc in states_enc.items():
+            if not dataflow.tasks[tid].is_sink:
+                out[tid] = ()
+                continue
+            value = decode_pytree(enc)
+            count = value.get("count", 0) if isinstance(value, dict) else 0
+            out[tid] = {"count": int(count), "checksum": 0.0}
+        return out
 
     def _step_segments(self) -> Dict[str, float]:
         seg_ms: Dict[str, float] = {}

@@ -18,16 +18,20 @@ from __future__ import annotations
 import time
 from typing import Any, Dict, Optional, Tuple
 
+import numpy as np
+
 from repro.core.graph import Dataflow
 
 from .backend import (
     CORE_CALIBRATION,
     PAUSE_EPSILON,
     ExecutionBackend,
+    PyTree,
     SegmentSpec,
     StepReport,
 )
 from .broker import Broker, topic_for
+from .checkpoint import decode_pytree, encode_pytree
 from .segment import Segment, build_segment
 
 __all__ = [
@@ -80,6 +84,85 @@ class InProcessJitBackend(ExecutionBackend):
             seg.steps_run += 1
             seg_ms[seg.name] = (time.perf_counter() - s0) * 1e3
         return seg_ms
+
+    # -- durability hooks ---------------------------------------------------------
+    def _decode_init_states(
+        self, spec: SegmentSpec, dataflow: Dataflow, states_enc: Dict[str, Any]
+    ) -> Dict[str, PyTree]:
+        """Conform checkpointed states to this backend's operator templates.
+
+        Same-backend restores round-trip bit-exactly (arrays decode to the
+        original bytes). Cross-backend restores from the dry-run backend
+        carry only sink counters and ``()`` placeholders; leaves that don't
+        structurally match the operator's ``init_state`` template fall back
+        to the template — so e.g. a dry-run sink state ``{count, checksum}``
+        seeds the jit sink's ``count`` while ``last`` re-initializes to
+        zeros, keeping sink *counts* exactly continuous (checksums are
+        jit-only state and restart from the template in that direction).
+        """
+        from repro.ops import operator_for_task
+
+        out: Dict[str, PyTree] = {}
+        for tid, enc in states_enc.items():
+            value = decode_pytree(enc)
+            op = operator_for_task(dataflow.tasks[tid], batch=spec.batch_of[tid])
+            out[tid] = _conform_state(value, op.init_state(spec.batch_of[tid]))
+        return out
+
+    def _dump_extra(self) -> Dict[str, Any]:
+        """Broker topic buffers + publish counters.
+
+        Strictly, buffers are reconstructible (launch order is topological,
+        so every boundary topic is re-published upstream within the first
+        post-restore step before its consumer fetches it) — but persisting
+        them keeps a restored broker observable-identical, including for
+        tooling that reads topics between steps.
+        """
+        return {
+            "broker": {
+                topic: encode_pytree(batch)
+                for topic, batch in sorted(self.broker.topics().items())
+            },
+            "broker_bytes_published": int(self.broker.bytes_published),
+            "broker_publishes": int(self.broker.publishes),
+        }
+
+    def _restore_extra(self, extra: Dict[str, Any]) -> None:
+        for topic, enc in extra.get("broker", {}).items():
+            self.broker.publish(topic, decode_pytree(enc))
+        # publish() above bumped the counters; restore the checkpointed view
+        self.broker.bytes_published = int(extra.get("broker_bytes_published", 0))
+        self.broker.publishes = int(extra.get("broker_publishes", 0))
+
+
+def _conform_state(value: Any, template: Any) -> Any:
+    """Merge a decoded state pytree onto an operator's init-state template.
+
+    Matching leaves adopt the checkpointed value (cast to the template's
+    dtype); structural mismatches — missing dict keys, wrong tuple arity,
+    wrong array shape, ``()`` placeholders from a dry-run checkpoint —
+    resolve to the template, leaf by leaf."""
+    if isinstance(template, dict):
+        if not isinstance(value, dict):
+            return template
+        return {k: _conform_state(value.get(k, _MISSING), t) for k, t in template.items()}
+    if isinstance(template, (tuple, list)):
+        if not isinstance(value, (tuple, list)) or len(value) != len(template):
+            return template
+        return type(template)(_conform_state(v, t) for v, t in zip(value, template))
+    if value is _MISSING or value is None:
+        return template
+    tmpl = np.asarray(template)
+    try:
+        arr = np.asarray(value)
+    except Exception:
+        return template
+    if arr.shape != tmpl.shape:
+        return template
+    return arr.astype(tmpl.dtype)
+
+
+_MISSING = object()
 
 
 # Backwards-compatible name: the pre-API-redesign data plane class.

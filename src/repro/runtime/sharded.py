@@ -43,6 +43,10 @@ class ShardedBackend(InProcessJitBackend):
             raise ValueError("ShardedBackend needs at least one device")
         self.policy = resolve_placement(placement)
         self.device_of: Dict[str, int] = {}  # segment name -> device index
+        # checkpoint-time placement of the backend we restored from (if any);
+        # informational — restore re-places via the PlacementPolicy, since
+        # the restoring host may have a different device pool.
+        self.device_of_at_checkpoint: Dict[str, int] = {}
 
     # -- placement --------------------------------------------------------------
     def device_load(self) -> Dict[int, int]:
@@ -77,4 +81,16 @@ class ShardedBackend(InProcessJitBackend):
         dev = self.devices[self.device_of[seg.spec.name]]
         return {
             t: jax.device_put(self.broker.fetch(t), dev) for t in seg.boundary_topics
+        }
+
+    # -- durability hooks ---------------------------------------------------------
+    def _dump_extra(self) -> Dict[str, Any]:
+        extra = super()._dump_extra()
+        extra["device_of"] = {name: int(i) for name, i in self.device_of.items()}
+        return extra
+
+    def _restore_extra(self, extra: Dict[str, Any]) -> None:
+        super()._restore_extra(extra)
+        self.device_of_at_checkpoint = {
+            name: int(i) for name, i in extra.get("device_of", {}).items()
         }

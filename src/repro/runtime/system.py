@@ -19,9 +19,18 @@ submission, kill on removal. ``backend`` picks the data plane from the
 registry (``"inprocess"`` jit, ``"sharded"`` multi-device, ``"dryrun"``
 pure cost model) or accepts an :class:`ExecutionBackend` instance; the
 policy layer here is backend-agnostic and JAX-free.
+
+Durability: with ``checkpoint_dir=`` (and optionally ``checkpoint_every=N``
+steps) the system writes versioned on-disk checkpoints — control-plane
+journal + the backend's full ``dump_state`` — and
+:meth:`StreamSystem.restore` rebuilds the whole system from the newest
+valid one: replay the journal, redeploy every segment (on the checkpointed
+backend or a different one), re-pause, and resume stepping with
+trajectories identical to an uninterrupted run.
 """
 from __future__ import annotations
 
+import os
 from typing import Any, Dict, List, Optional, Sequence, Set, Union
 
 from repro.core import MergeStrategy, ReuseManager
@@ -36,6 +45,7 @@ from .backend import (
     compute_batches,
     resolve_backend,
 )
+from .checkpoint import CheckpointStore
 from .scheduler import Placement, place_round_robin
 
 
@@ -47,6 +57,8 @@ class StreamSystem:
         check_invariants: bool = False,
         journal_path: Optional[str] = None,
         backend: Union[str, ExecutionBackend] = "inprocess",
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: Optional[int] = None,
     ):
         self.manager = ReuseManager(
             strategy=strategy, check_invariants=check_invariants, journal_path=journal_path
@@ -56,6 +68,10 @@ class StreamSystem:
         self.task_batch: Dict[str, int] = {}  # running task id -> output batch size
         self._seg_counter = 0
         self._segments_of: Dict[str, List[str]] = {}  # submission -> segment names
+        self.checkpoint_store = CheckpointStore(checkpoint_dir) if checkpoint_dir else None
+        self.checkpoint_every = checkpoint_every
+        if checkpoint_every and not checkpoint_dir:
+            raise ValueError("checkpoint_every needs a checkpoint_dir")
 
     @property
     def executor(self) -> ExecutionBackend:
@@ -179,10 +195,125 @@ class StreamSystem:
 
     # -- execution -----------------------------------------------------------------
     def step(self) -> StepReport:
-        return self.backend.step()
+        report = self.backend.step()
+        if (
+            self.checkpoint_every
+            and self.checkpoint_store is not None
+            and self.backend.step_count % self.checkpoint_every == 0
+        ):
+            self.checkpoint()
+        return report
 
     def run(self, steps: int) -> List[StepReport]:
-        return self.backend.run(steps)
+        # Route through step() so the auto-checkpoint cadence applies.
+        return [self.step() for _ in range(steps)]
+
+    # -- durability (full-system checkpoint/restore) --------------------------------
+    def checkpoint_payload(self) -> Dict[str, Any]:
+        """The full durable state: control-plane journal + data-plane dump.
+
+        Deterministic for a given system state (no wall-clock stamps — the
+        envelope written by :class:`CheckpointStore` carries those), which
+        is what makes ``payload → restore → payload`` a fixed point."""
+        return {
+            "backend": self.backend.name or type(self.backend).__name__,
+            "strategy": self.manager.strategy,
+            "journal": list(self.manager.journal),
+            "base_batch": int(self.base_batch),
+            "seg_counter": int(self._seg_counter),
+            "task_batch": {t: int(b) for t, b in self.task_batch.items()},
+            "segments_of": {n: list(segs) for n, segs in self._segments_of.items()},
+            "checkpoint_every": self.checkpoint_every,
+            "data": self.backend.dump_state(),
+        }
+
+    def checkpoint(self, checkpoint_dir: Optional[str] = None) -> str:
+        """Write one durable checkpoint; returns its path."""
+        store = (
+            CheckpointStore(checkpoint_dir) if checkpoint_dir else self.checkpoint_store
+        )
+        if store is None:
+            raise ValueError(
+                "no checkpoint_dir configured — pass one to checkpoint() or the constructor"
+            )
+        return store.save(self.checkpoint_payload())
+
+    @classmethod
+    def from_payload(
+        cls,
+        payload: Dict[str, Any],
+        backend: Optional[Union[str, ExecutionBackend]] = None,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: Optional[int] = None,
+        journal_path: Optional[str] = None,
+        check_invariants: bool = False,
+    ) -> "StreamSystem":
+        """Reconstruct a full system from a checkpoint payload.
+
+        Replays the control-plane journal (minting the exact same running
+        task ids and DAG names), then redeploys every checkpointed segment
+        on the target backend — by default the checkpointed one, or any
+        other registered backend for a cross-backend restore
+        (``inprocess`` ⇄ ``dryrun``; see the backend decode hooks for what
+        carries across)."""
+        mgr = ReuseManager.replay(
+            payload["journal"],
+            strategy=payload["strategy"],
+            journal_path=journal_path,
+        )
+        mgr.check_invariants = check_invariants
+        system = cls(
+            strategy=payload["strategy"],
+            base_batch=int(payload["base_batch"]),
+            backend=backend if backend is not None else payload["backend"],
+            checkpoint_dir=checkpoint_dir,
+        )
+        # The cadence survives the restore even when no checkpoint_dir is
+        # configured yet (step() only auto-checkpoints once a store exists),
+        # so payload → restore → payload stays a fixed point.
+        system.checkpoint_every = (
+            checkpoint_every if checkpoint_every is not None
+            else payload.get("checkpoint_every")
+        )
+        system.manager = mgr
+        system.task_batch = {t: int(b) for t, b in payload["task_batch"].items()}
+        system._seg_counter = int(payload["seg_counter"])
+        system._segments_of = {n: list(s) for n, s in payload["segments_of"].items()}
+        system.backend.restore_state(payload["data"])
+        if check_invariants:
+            system.manager.verify()
+        return system
+
+    @classmethod
+    def restore(
+        cls,
+        path: str,
+        backend: Optional[Union[str, ExecutionBackend]] = None,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: Optional[int] = None,
+        journal_path: Optional[str] = None,
+        check_invariants: bool = False,
+    ) -> "StreamSystem":
+        """Restore from ``path`` — a checkpoint directory (newest valid
+        checkpoint wins; torn last checkpoints are skipped) or one concrete
+        ``ckpt-*.json`` file. The restored system keeps checkpointing into
+        the same directory unless ``checkpoint_dir`` says otherwise."""
+        if os.path.isdir(path):
+            store = CheckpointStore(path)
+            payload = store.latest_payload()
+            default_dir = path
+        else:
+            store = CheckpointStore(os.path.dirname(path) or ".")
+            payload = store.load(path)["payload"]
+            default_dir = os.path.dirname(path) or "."
+        return cls.from_payload(
+            payload,
+            backend=backend,
+            checkpoint_dir=checkpoint_dir or default_dir,
+            checkpoint_every=checkpoint_every,
+            journal_path=journal_path,
+            check_invariants=check_invariants,
+        )
 
     # -- observability ----------------------------------------------------------------
     def sink_digests(self, sub_name: str) -> Dict[str, Dict[str, Any]]:

@@ -367,6 +367,39 @@ class TestDryRunContract:
         )
         assert proc.returncode == 0, proc.stderr
 
+    def test_dryrun_checkpoint_restore_never_imports_jax(self, tmp_path):
+        """Durable checkpoint + full-system restore on backend="dryrun"
+        stays a JAX-free path end to end (checkpoint codec is numpy-only)."""
+        ckpt_dir = str(tmp_path / "ckpts")
+        code = (
+            "import sys\n"
+            "from repro.api import ReuseSession, flow\n"
+            f"s = ReuseSession(strategy='signature', execute=True, backend='dryrun',\n"
+            f"                 checkpoint_dir={ckpt_dir!r}, checkpoint_every=1)\n"
+            "a = flow('A').source('urban').then('senml_parse').then('kalman', q=0.1)"
+            ".sink('store').build()\n"
+            "b = flow('B').source('urban').then('senml_parse').then('kalman', q=0.1)"
+            ".then('avg').sink('store').build()\n"
+            "s.submit(a); s.submit(b); s.run(3)\n"
+            "before = s.sink_digests('B')\n"
+            "del s  # crash\n"
+            f"r = ReuseSession.restore({ckpt_dir!r})\n"
+            "assert r.sink_digests('B') == before\n"
+            "r.remove('A'); r.step(); r.defragment(); r.run(2)\n"
+            "assert all(d['count'] == 6 for d in r.sink_digests('B').values())\n"
+            "assert r.stats().steps_run == 6\n"
+            "assert 'jax' not in sys.modules, 'dryrun checkpoint/restore imported jax'\n"
+        )
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = src + os.pathsep * bool(env.get("PYTHONPATH")) + env.get(
+            "PYTHONPATH", ""
+        )
+        proc = subprocess.run(
+            [sys.executable, "-c", code], env=env, capture_output=True, text=True
+        )
+        assert proc.returncode == 0, proc.stderr
+
 
 # -- defrag edge cases and the churn leak ---------------------------------------
 

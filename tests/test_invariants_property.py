@@ -138,6 +138,46 @@ def test_full_drain_empties_running_set(seq):
     assert not mgr.running
 
 
+@settings(max_examples=20, deadline=None, suppress_health_check=list(HealthCheck))
+@given(op_sequence())
+def test_checkpoint_roundtrip_is_fixed_point(seq):
+    """snapshot → serialize → restore → snapshot is a fixed point for
+    arbitrary submit/remove/defragment sequences (durable data plane).
+
+    Drives a full StreamSystem (dry-run data plane — JAX-free, so
+    hypothesis can afford whole-system examples) through the interleaved
+    op sequence with a step after every op and a defrag every third op,
+    then requires: the checkpoint payload survives a JSON round trip into
+    a fresh system unchanged, the BackendSnapshot is equal, and both
+    systems keep stepping identically afterwards."""
+    import json
+
+    from repro.runtime.system import StreamSystem
+
+    dags, ops = seq
+    system = StreamSystem(strategy="signature", backend="dryrun")
+    for i, (op, arg) in enumerate(ops):
+        if op == "add":
+            system.submit(dags[arg].copy())
+        else:
+            system.remove(arg)
+        system.step()
+        if i % 3 == 2:
+            system.defragment()
+
+    payload = system.checkpoint_payload()
+    blob = json.dumps(payload, sort_keys=True)  # "serialize"
+    restored = StreamSystem.from_payload(json.loads(blob))
+    assert restored.checkpoint_payload() == payload  # fixed point
+    assert restored.backend.snapshot() == system.backend.snapshot()
+    # and the restored system is behaviorally the same system going forward
+    for _ in range(2):
+        a, b = system.step(), restored.step()
+        assert (a.live_tasks, a.paused_tasks) == (b.live_tasks, b.paused_tasks)
+        assert a.cost == b.cost
+    assert restored.backend.snapshot() == system.backend.snapshot()
+
+
 @settings(max_examples=25, deadline=None, suppress_health_check=list(HealthCheck))
 @given(op_sequence())
 def test_signature_bijection_oracle(seq):
