@@ -153,7 +153,10 @@ def summarize(series: Dict[str, List], drain_start: int | None = None) -> Dict[s
     }
 
 
-def run_trace_on_backend(dags, events, backend: str) -> Dict[str, List]:
+def run_trace_on_backend(
+    dags, events, backend: str, step_mode: Optional[str] = None,
+    max_workers: Optional[int] = None,
+) -> Dict[str, List]:
     """Drive one trace through a real ExecutionBackend data plane.
 
     Default (no reuse) and Reuse (signature) sessions replay the trace in
@@ -161,10 +164,19 @@ def run_trace_on_backend(dags, events, backend: str) -> Dict[str, List]:
     record the *backend's own* live/paused/cost accounting — the same
     counters for every backend (the ExecutionBackend contract), which is
     what makes ``--backend dryrun`` a faithful millisecond-scale stand-in
-    for the jit planes.
+    for the jit planes. ``step_mode="concurrent"`` routes every step
+    through the dependency-aware wave pipeline; the counters are
+    mode-invariant by contract (tests/test_concurrent.py asserts it on
+    this exact trace), so a concurrent run reproduces the sync series.
     """
-    default = ReuseSession(strategy="none", execute=True, backend=backend)
-    reuse = ReuseSession(strategy="signature", execute=True, backend=backend)
+    default = ReuseSession(
+        strategy="none", execute=True, backend=backend,
+        step_mode=step_mode, max_workers=max_workers,
+    )
+    reuse = ReuseSession(
+        strategy="signature", execute=True, backend=backend,
+        step_mode=step_mode, max_workers=max_workers,
+    )
     series: Dict[str, List] = {
         "default_tasks": [], "reuse_tasks": [],
         "default_paused": [], "reuse_paused": [],
@@ -180,6 +192,8 @@ def run_trace_on_backend(dags, events, backend: str) -> Dict[str, List]:
         series["reuse_paused"].append(r.paused_tasks)
         series["default_cores"].append(round(d.cost, 4))
         series["reuse_cores"].append(round(r.cost, 4))
+    default.close()  # release the concurrent dispatch pools
+    reuse.close()
     return series
 
 
@@ -201,6 +215,8 @@ def main(
     backend: Optional[str] = None,
     workloads_filter: Optional[List[str]] = None,
     traces_filter: Optional[List[str]] = None,
+    step_mode: Optional[str] = None,
+    max_workers: Optional[int] = None,
 ) -> Dict[str, Dict]:
     os.makedirs(out_dir, exist_ok=True)
     if workloads_filter and (bad := set(workloads_filter) - {"opmw", "riot"}):
@@ -222,12 +238,18 @@ def main(
         for tname, events in traces.items():
             t0 = time.time()
             if backend:
-                series = run_trace_on_backend(dags, events, backend)
+                series = run_trace_on_backend(
+                    dags, events, backend, step_mode=step_mode, max_workers=max_workers
+                )
                 s = summarize_backend(series)
                 s["backend"] = backend
+                s["step_mode"] = step_mode or "sync"
                 s["wall_s"] = round(time.time() - t0, 3)
                 out[f"{wname}_{tname}"] = s
-                path = os.path.join(out_dir, f"backend_{backend}_{wname}_{tname}.json")
+                suffix = "" if (step_mode or "sync") == "sync" else f"_{step_mode}"
+                path = os.path.join(
+                    out_dir, f"backend_{backend}_{wname}_{tname}{suffix}.json"
+                )
                 with open(path, "w") as f:
                     json.dump({"series": series, "summary": s}, f, indent=1)
                 print(
@@ -267,6 +289,11 @@ if __name__ == "__main__":
     )
     ap.add_argument("--workloads", help="comma list, e.g. opmw,riot")
     ap.add_argument("--traces", help="comma list, e.g. seq,rw1,rw2")
+    ap.add_argument(
+        "--step-mode", choices=("sync", "concurrent"), default=None,
+        help="stepping pipeline for --backend runs (counters are mode-invariant)",
+    )
+    ap.add_argument("--max-workers", type=int, default=None)
     ap.add_argument("--out-dir", default="results/benchmarks")
     args = ap.parse_args()
     main(
@@ -274,4 +301,6 @@ if __name__ == "__main__":
         backend=args.backend,
         workloads_filter=args.workloads.split(",") if args.workloads else None,
         traces_filter=args.traces.split(",") if args.traces else None,
+        step_mode=args.step_mode,
+        max_workers=args.max_workers,
     )

@@ -65,6 +65,7 @@ from .events import (
     SessionStats,
     StepEvent,
     UnmergeEvent,
+    WaveEvent,
 )
 from .session import ReuseSession
 
@@ -88,6 +89,7 @@ __all__ = [
     "SubmissionReceipt",
     "Task",
     "UnmergeEvent",
+    "WaveEvent",
     "available_backends",
     "available_strategies",
     "flow",

@@ -12,6 +12,20 @@ from typing import Any, Dict, List, Set, Tuple
 
 from repro.core.manager import RemovalReceipt, SubmissionReceipt
 
+# The wave event is minted where waves are scheduled (JAX-free module);
+# re-exported here so session users import every event type from one place.
+from repro.runtime.scheduler import WaveEvent
+
+__all__ = [
+    "BatchSubmitReceipt",
+    "DefragEvent",
+    "MergeEvent",
+    "SessionStats",
+    "StepEvent",
+    "UnmergeEvent",
+    "WaveEvent",
+]
+
 
 @dataclass(frozen=True)
 class MergeEvent:
@@ -54,6 +68,11 @@ class StepEvent:
     cost: float  # core-equivalents this step
     wall_ms: float
     report: Any  # the backend's full StepReport
+
+    @property
+    def makespan_ms(self) -> float:
+        """Dependency-DAG modelled step latency (wave max in concurrent mode)."""
+        return self.report.makespan_ms
 
 
 @dataclass(frozen=True)

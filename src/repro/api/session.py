@@ -43,6 +43,7 @@ from .events import (
     SessionStats,
     StepEvent,
     UnmergeEvent,
+    WaveEvent,
 )
 
 Submittable = Union[Dataflow, DataflowBuilder]
@@ -61,18 +62,60 @@ class ReuseSession:
         journal_path: Optional[str] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: Optional[int] = None,
+        checkpoint_keep_last: Optional[int] = None,
+        step_mode: Optional[str] = None,
+        max_workers: Optional[int] = None,
+        report_history: Optional[int] = None,
         system: Optional[Any] = None,
         on_merge: Optional[Hook] = None,
         on_unmerge: Optional[Hook] = None,
         on_defrag: Optional[Hook] = None,
         on_step: Optional[Hook] = None,
+        on_wave: Optional[Hook] = None,
     ):
+        self._hooks: Dict[str, List[Hook]] = {
+            "merge": [],
+            "unmerge": [],
+            "defrag": [],
+            "step": [],
+            "wave": [],
+        }
+        if on_merge:
+            self._hooks["merge"].append(on_merge)
+        if on_unmerge:
+            self._hooks["unmerge"].append(on_unmerge)
+        if on_defrag:
+            self._hooks["defrag"].append(on_defrag)
+        if on_step:
+            self._hooks["step"].append(on_step)
+        if on_wave:
+            self._hooks["wave"].append(on_wave)
         self._system = None
         if system is not None:
             # Wrap an existing StreamSystem (the restore() path) — hooks
-            # passed alongside attach to the restored planes as usual.
+            # and stepping knobs passed alongside apply to the wrapped
+            # planes; checkpoint wiring is the system's own and cannot be
+            # changed here (pass it to StreamSystem/restore instead).
+            rebind = {
+                "checkpoint_dir": checkpoint_dir,
+                "checkpoint_every": checkpoint_every,
+                "checkpoint_keep_last": checkpoint_keep_last,
+            }
+            if any(v is not None for v in rebind.values()):
+                names = ", ".join(k for k, v in rebind.items() if v is not None)
+                raise DataflowError(
+                    f"{names} cannot be changed when wrapping an existing "
+                    "StreamSystem — configure them on the system (or pass "
+                    "them to ReuseSession.restore / StreamSystem.restore)"
+                )
             self._system = system
             self.manager = system.manager
+            system.backend.configure_stepping(
+                step_mode=step_mode,
+                max_workers=max_workers,
+                on_wave=self._dispatch_wave,
+                report_history=report_history,
+            )
         elif execute:
             # Deferred import keeps control-plane sessions light; the
             # runtime package itself resolves backends lazily, so a
@@ -87,34 +130,38 @@ class ReuseSession:
                 backend=backend,
                 checkpoint_dir=checkpoint_dir,
                 checkpoint_every=checkpoint_every,
+                checkpoint_keep_last=checkpoint_keep_last,
+                step_mode=step_mode,
+                max_workers=max_workers,
+                on_wave=self._dispatch_wave,
+                report_history=report_history,
             )
             self.manager: ReuseManager = self._system.manager
         else:
-            if checkpoint_dir or checkpoint_every:
+            bad = {
+                "checkpoint_dir": checkpoint_dir,
+                "checkpoint_every": checkpoint_every,
+                "checkpoint_keep_last": checkpoint_keep_last,
+                "step_mode": step_mode,
+                "max_workers": max_workers,
+                "report_history": report_history,
+            }
+            if any(v is not None for v in bad.values()):
+                names = ", ".join(k for k, v in bad.items() if v is not None)
                 raise DataflowError(
-                    "checkpoint_dir/checkpoint_every need a data plane — "
-                    "create the session with execute=True (the control plane "
-                    "is journaled via journal_path)"
+                    f"{names} need a data plane — create the session with "
+                    "execute=True (the control plane is journaled via "
+                    "journal_path)"
                 )
             self.manager = ReuseManager(
                 strategy=strategy,
                 check_invariants=check_invariants,
                 journal_path=journal_path,
             )
-        self._hooks: Dict[str, List[Hook]] = {
-            "merge": [],
-            "unmerge": [],
-            "defrag": [],
-            "step": [],
-        }
-        if on_merge:
-            self._hooks["merge"].append(on_merge)
-        if on_unmerge:
-            self._hooks["unmerge"].append(on_unmerge)
-        if on_defrag:
-            self._hooks["defrag"].append(on_defrag)
-        if on_step:
-            self._hooks["step"].append(on_step)
+
+    def _dispatch_wave(self, event: WaveEvent) -> None:
+        if self._hooks["wave"]:
+            self._emit("wave", event)
 
     # -- construction helpers ------------------------------------------------
     @classmethod
@@ -143,7 +190,7 @@ class ReuseSession:
 
             hooks = {
                 k: kwargs.pop(k, None)
-                for k in ("on_merge", "on_unmerge", "on_defrag", "on_step")
+                for k in ("on_merge", "on_unmerge", "on_defrag", "on_step", "on_wave")
             }
             system = StreamSystem.restore(path, **kwargs)
             return cls(system=system, **{k: v for k, v in hooks.items() if v})
@@ -211,6 +258,13 @@ class ReuseSession:
     def on_step(self, fn: Hook) -> Hook:
         """Register a per-step observer (fires on ``step()`` and ``run()``)."""
         self._hooks["step"].append(fn)
+        return fn
+
+    def on_wave(self, fn: Hook) -> Hook:
+        """Register a wave observer: one :class:`WaveEvent` per dependency
+        wave per step (which segments stepped together, and the wave's
+        contribution to the step makespan)."""
+        self._hooks["wave"].append(fn)
         return fn
 
     def _emit(self, kind: str, event: Any) -> None:
@@ -317,6 +371,20 @@ class ReuseSession:
     def sink_digests(self, name: str) -> Dict[str, Dict[str, Any]]:
         """Per-sink count/checksum for a submission (output identity check)."""
         return self._require_system("sink_digests").sink_digests(name)
+
+    def close(self) -> None:
+        """Release data-plane resources (the concurrent dispatch pool).
+
+        Idempotent and non-destructive — control-plane state survives and
+        stepping after close() re-creates the pool lazily."""
+        if self._system is not None:
+            self._system.close()
+
+    def __enter__(self) -> "ReuseSession":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
 
     def _require_system(self, op: str):
         if self._system is None:

@@ -138,16 +138,24 @@ def run_dataflow_trace(
     steps_per_event: int = 1,
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 1,
+    checkpoint_keep_last: Optional[int] = None,
     restore: bool = False,
     max_events: Optional[int] = None,
+    step_mode: Optional[str] = None,
+    max_workers: Optional[int] = None,
 ) -> Dict[str, Any]:
     """Replay ``workload/trace`` (e.g. ``opmw/rw1``) on an ExecutionBackend.
 
     With ``checkpoint_dir`` the session checkpoints durably every
-    ``checkpoint_every`` events; ``restore=True`` resumes from the newest
-    valid checkpoint, skipping the events the crashed run already applied
-    (one journal op per trace event, so the journal length *is* the resume
-    offset). ``max_events`` truncates the replay — the crash simulator.
+    ``checkpoint_every`` events (pruned to the newest
+    ``checkpoint_keep_last`` valid ones when set); ``restore=True`` resumes
+    from the newest valid checkpoint, skipping the events the crashed run
+    already applied (one journal op per trace event, so the journal length
+    *is* the resume offset). ``max_events`` truncates the replay — the
+    crash simulator. ``step_mode="concurrent"`` steps the deployment
+    through the dependency-aware wave pipeline (on the dry-run backend the
+    per-step ``makespan_ms`` then models concurrent wall-clock: wave max,
+    not wave sum).
     """
     from repro.api import ReuseSession
     from repro.workloads import (
@@ -176,7 +184,16 @@ def run_dataflow_trace(
             raise SystemExit("--restore needs --checkpoint-dir")
         # backend=None honors the checkpointed backend; an explicit
         # --backend requests a cross-backend restore (inprocess ⇄ dryrun).
-        session = ReuseSession.restore(checkpoint_dir, backend=backend)
+        # Likewise step_mode=None resumes in the checkpointed mode and an
+        # explicit --step-mode restores a sync checkpoint into the
+        # concurrent pipeline (or back) — the dependency DAG is rebuilt.
+        session = ReuseSession.restore(
+            checkpoint_dir,
+            backend=backend,
+            step_mode=step_mode,
+            max_workers=max_workers,
+            checkpoint_keep_last=checkpoint_keep_last,
+        )
         resumed_at = len(session.manager.journal)  # events already applied
     else:
         session = ReuseSession(
@@ -184,11 +201,14 @@ def run_dataflow_trace(
             execute=True,
             backend=backend or "dryrun",
             checkpoint_dir=checkpoint_dir,
+            checkpoint_keep_last=checkpoint_keep_last if checkpoint_dir else None,
+            step_mode=step_mode,
+            max_workers=max_workers,
         )
     todo = events[resumed_at:]
     if max_events is not None:
         todo = todo[: max(0, max_events - resumed_at)]
-    live, paused, cost = [], [], []
+    live, paused, cost, makespan = [], [], [], []
     t0 = time.time()
     for i, _ in enumerate(replay(session, dags, todo)):
         report = None
@@ -196,11 +216,14 @@ def run_dataflow_trace(
             report = session.step()
         if report is None:  # steps_per_event=0: account without stepping
             l, p, c = session._system.backend.account()
+            m = 0.0
         else:
             l, p, c = report.live_tasks, report.paused_tasks, report.cost
+            m = report.makespan_ms
         live.append(l)
         paused.append(p)
         cost.append(round(c, 4))
+        makespan.append(round(m, 4))
         # Checkpoint on event boundaries (not raw steps) so a restore
         # resumes exactly at the next un-applied trace event.
         if checkpoint_dir and (i + 1) % max(1, checkpoint_every) == 0:
@@ -209,6 +232,7 @@ def run_dataflow_trace(
         "trace": spec,
         "backend": session.backend_name,
         "strategy": session.strategy,
+        "step_mode": session._system.backend.step_mode,
         "events": len(events),
         "events_applied": resumed_at + len(todo),
         "resumed_at_event": resumed_at,
@@ -216,7 +240,13 @@ def run_dataflow_trace(
         "peak_live_tasks": max(live) if live else 0,
         "peak_paused_tasks": max(paused) if paused else 0,
         "peak_cores": max(cost) if cost else 0.0,
-        "series": {"live_tasks": live, "paused_tasks": paused, "cores": cost},
+        "peak_makespan_ms": max(makespan) if makespan else 0.0,
+        "series": {
+            "live_tasks": live,
+            "paused_tasks": paused,
+            "cores": cost,
+            "makespan_ms": makespan,
+        },
     }
 
 
@@ -238,8 +268,21 @@ def main(argv=None) -> int:
         help="checkpoint cadence in trace events (with --checkpoint-dir)",
     )
     ap.add_argument(
+        "--checkpoint-keep-last", type=int, default=None,
+        help="retain only the newest N valid checkpoints (GC; torn files reaped)",
+    )
+    ap.add_argument(
         "--restore", action="store_true",
         help="resume the trace from the newest valid checkpoint in --checkpoint-dir",
+    )
+    ap.add_argument(
+        "--step-mode", choices=("sync", "concurrent"), default=None,
+        help="data-plane stepping pipeline for --trace (default: sync; "
+        "with --restore, the checkpointed mode unless set explicitly)",
+    )
+    ap.add_argument(
+        "--max-workers", type=int, default=None,
+        help="thread-pool width for --step-mode concurrent on jit backends",
     )
     ap.add_argument(
         "--max-events", type=int, default=None,
@@ -263,8 +306,11 @@ def main(argv=None) -> int:
             steps_per_event=args.steps_per_event,
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=args.checkpoint_every,
+            checkpoint_keep_last=args.checkpoint_keep_last,
             restore=args.restore,
             max_events=args.max_events,
+            step_mode=args.step_mode,
+            max_workers=args.max_workers,
         )
         summary = {k: v for k, v in rec.items() if k != "series"}
         print(json.dumps(summary, indent=2))

@@ -14,7 +14,8 @@ This module must therefore stay free of JAX imports.
 from __future__ import annotations
 
 import json
-from typing import Any, Dict, Mapping
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping, Sequence, Tuple
 
 SOURCE_COST = 0.3
 SINK_COST = 0.3
@@ -112,3 +113,55 @@ def cost_weight_for_task(task: Any) -> float:
     return cost_weight_for(
         task.type, task.config, is_source=task.is_source, is_sink=task.is_sink
     )
+
+
+# -- dry-run latency calibration ------------------------------------------------
+#
+# cost_weight is a *relative* per-event CPU cost; it says nothing about
+# milliseconds. The LatencyModel closes that gap: fit per-task-type
+# ms-per-work-unit coefficients (work unit = cost_weight × batch) from
+# segment wall-times a jit backend actually measured
+# (ExecutionBackend.latency_samples), and the DryRunBackend then reports
+# realistic segment_ms — which is what makes its concurrent-mode makespan
+# model (per-wave max) a meaningful wall-clock predictor.
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    """Per-task-type wall-time model: ``ms ≈ Σ_type coef[type] · units``."""
+
+    ms_per_unit: Dict[str, float]
+    default_ms_per_unit: float = 0.0  # fallback for task types never observed
+
+    def segment_ms(self, units: Mapping[str, float]) -> float:
+        """Predicted step wall-time of a segment from its per-type work units."""
+        return sum(
+            self.ms_per_unit.get(t, self.default_ms_per_unit) * u
+            for t, u in units.items()
+        )
+
+
+def fit_latency_model(
+    samples: Sequence[Tuple[Mapping[str, float], float]],
+) -> LatencyModel:
+    """Least-squares fit of per-task-type latency coefficients.
+
+    ``samples`` are ⟨per-type work units, measured segment ms⟩ pairs (the
+    output of :meth:`ExecutionBackend.latency_samples`). Solves the
+    minimum-norm least-squares system, clips negative coefficients to 0
+    (a type can't speed a segment up), and keeps the global mean
+    ms-per-unit as the fallback for types never observed.
+    """
+    import numpy as np
+
+    samples = [(dict(u), float(ms)) for u, ms in samples if u]
+    if not samples:
+        return LatencyModel({})
+    types = sorted({t for units, _ in samples for t in units})
+    a = np.array([[units.get(t, 0.0) for t in types] for units, _ in samples])
+    y = np.array([ms for _, ms in samples])
+    coef, *_ = np.linalg.lstsq(a, y, rcond=None)
+    coef = np.clip(coef, 0.0, None)
+    total_units = float(a.sum())
+    default = float(y.sum() / total_units) if total_units > 0 else 0.0
+    return LatencyModel(dict(zip(types, coef.tolist())), default_ms_per_unit=default)

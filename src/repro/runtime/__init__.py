@@ -39,10 +39,13 @@ from .scheduler import (
     Placement,
     PlacementPolicy,
     StragglerPolicy,
+    WaveEvent,
     available_placements,
+    compute_waves,
     place_round_robin,
     register_placement,
     resolve_placement,
+    run_ready_queue,
 )
 
 # name -> (module, attribute); resolved on first access to keep JAX lazy.
@@ -88,10 +91,12 @@ __all__ = [
     "StreamSystem",
     "TASKS_PER_WORKER",
     "WORKERS_PER_NODE",
+    "WaveEvent",
     "available_backends",
     "available_placements",
     "build_segment",
     "compute_batches",
+    "compute_waves",
     "decode_pytree",
     "encode_pytree",
     "is_checkpoint_path",
@@ -100,6 +105,7 @@ __all__ = [
     "register_placement",
     "resolve_backend",
     "resolve_placement",
+    "run_ready_queue",
     "topic_for",
 ]
 

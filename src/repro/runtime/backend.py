@@ -33,12 +33,16 @@ from __future__ import annotations
 
 import importlib
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple, Type, Union
 
 from repro.core.graph import Dataflow, Task
 
 from .checkpoint import decode_pytree, encode_pytree
+from .scheduler import WaveEvent, compute_waves, run_ready_queue
+
+STEP_MODES = ("sync", "concurrent")
 
 # Fraction of a task's cost still consumed while paused (deployed-but-idle
 # Storm bolt). Calibrated so the paper's drain-phase crossover reproduces.
@@ -82,6 +86,38 @@ class StepReport:
     wall_ms: float
     segment_ms: Dict[str, float] = field(default_factory=dict)
     stragglers: List[str] = field(default_factory=list)
+    # Modelled step latency from the segment dependency DAG: Σ over waves of
+    # the wave max in concurrent mode (independent segments overlap), Σ of
+    # all segment_ms in sync mode (one serial sweep). For the dry-run
+    # backend this *is* the predicted wall-clock of a concurrent deployment.
+    makespan_ms: float = 0.0
+
+
+def _encode_report(r: StepReport) -> Dict[str, Any]:
+    """JSON-safe StepReport for the opt-in checkpoint ring buffer."""
+    return {
+        "step": int(r.step),
+        "live_tasks": int(r.live_tasks),
+        "paused_tasks": int(r.paused_tasks),
+        "cost": float(r.cost),
+        "wall_ms": float(r.wall_ms),
+        "segment_ms": {k: float(v) for k, v in r.segment_ms.items()},
+        "stragglers": list(r.stragglers),
+        "makespan_ms": float(r.makespan_ms),
+    }
+
+
+def _decode_report(rec: Dict[str, Any]) -> StepReport:
+    return StepReport(
+        step=int(rec["step"]),
+        live_tasks=int(rec["live_tasks"]),
+        paused_tasks=int(rec["paused_tasks"]),
+        cost=float(rec["cost"]),
+        wall_ms=float(rec["wall_ms"]),
+        segment_ms={k: float(v) for k, v in rec.get("segment_ms", {}).items()},
+        stragglers=list(rec.get("stragglers", ())),
+        makespan_ms=float(rec.get("makespan_ms", 0.0)),
+    )
 
 
 @dataclass
@@ -122,20 +158,40 @@ class ExecutionBackend:
       * :meth:`_build` — turn a :class:`SegmentSpec` into a segment object
         exposing ``spec``, ``states``, ``active``, ``cost_of``,
         ``pause``/``resume`` and ``live_task_ids``;
-      * :meth:`_step_segments` — advance every segment one step, returning
-        per-segment wall-times in ms.
+      * :meth:`_step_one` — advance one segment one step (returning a
+        simulated duration in ms, or ``None`` to use the measured one).
 
     Everything else — the O(1) task→segment reverse index (replacing the
-    old linear scans in ``forward``/``_owner``), pause/resume flags, the
-    cost accounting that reproduces the paper's Fig. 2/3 counters,
-    straggler EWMAs and state-preserving defragmentation — is shared here,
-    so every backend reports identical control-plane trajectories by
-    construction.
+    old linear scans in ``forward``/``_owner``), the segment dependency
+    DAG driving the sync/concurrent stepping pipeline, pause/resume
+    flags, the cost accounting that reproduces the paper's Fig. 2/3
+    counters, straggler EWMAs and state-preserving defragmentation — is
+    shared here, so every backend reports identical control-plane
+    trajectories by construction.
+
+    Stepping runs in one of two modes (:meth:`configure_stepping`):
+    ``"sync"`` — the original single-thread sweep in launch order — or
+    ``"concurrent"`` — a dependency-aware ready-queue dispatch where every
+    segment whose boundary producers have finished steps immediately on a
+    thread pool (simulated clock on the dry-run backend). Both modes
+    produce identical sink counts: concurrent dispatch respects the same
+    producer-before-consumer order the launch-order sweep implies, and the
+    broker's per-topic sequencing enforces it on the data path.
     """
 
     name: str = ""
+    # Whether concurrent mode actually uses threads. The dry-run backend
+    # flips this off: it keeps the dependency-DAG *makespan model* (wave
+    # max, not wave sum) but steps on the caller's thread.
+    concurrent_dispatch: bool = True
 
-    def __init__(self, straggler_factor: float = 3.0, ewma_alpha: float = 0.3):
+    def __init__(
+        self,
+        straggler_factor: float = 3.0,
+        ewma_alpha: float = 0.3,
+        step_mode: str = "sync",
+        max_workers: Optional[int] = None,
+    ):
         self.segments: Dict[str, Any] = {}
         self.forwarding: Dict[str, Set[str]] = {}  # segment -> task ids forwarded
         self.paused: Set[str] = set()  # running task ids paused (global view)
@@ -147,12 +203,62 @@ class ExecutionBackend:
         # task id -> ⟨type, config⟩ definition, kept so checkpoints can
         # redeploy paused tasks whose running DAGs are long gone.
         self.task_defs: Dict[str, Task] = {}
+        # Segment dependency DAG: segment -> upstream segments producing its
+        # boundary inputs. Maintained incrementally across deploy/kill (and
+        # therefore merge/unmerge/defragment/restore, which compose them);
+        # derived state — never checkpointed, always rebuilt by redeploy.
+        self.seg_deps: Dict[str, Set[str]] = {}
+        self._waves_cache: Optional[List[List[str]]] = None
+        # stepping pipeline knobs (see configure_stepping)
+        if step_mode not in STEP_MODES:
+            raise ValueError(f"step_mode must be one of {STEP_MODES}, got {step_mode!r}")
+        self.step_mode = step_mode
+        self.max_workers = max_workers
+        # Persistent dispatch pool for concurrent stepping, created lazily
+        # on the first concurrent step and reused across steps (pool
+        # spin-up costs more than a small step); dropped when max_workers
+        # changes and on close().
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self.on_wave: Optional[Callable[[WaveEvent], None]] = None
+        # opt-in StepReport ring buffer: bounds self.reports in memory AND
+        # persists the tail in checkpoints (None = unbounded, not persisted)
+        self.history_limit: Optional[int] = None
         # straggler tracking
         self.straggler_factor = straggler_factor
         self.ewma_alpha = ewma_alpha
         self.ewma_ms: Dict[str, float] = {}
         self.redispatches: List[Tuple[int, str]] = []
         self.reports: List[StepReport] = []
+
+    def configure_stepping(
+        self,
+        step_mode: Optional[str] = None,
+        max_workers: Optional[int] = None,
+        on_wave: Optional[Callable[[WaveEvent], None]] = None,
+        report_history: Optional[int] = None,
+    ) -> "ExecutionBackend":
+        """Set the stepping-pipeline knobs (None leaves a knob unchanged).
+
+        Safe between steps at any point in the lifecycle — switching
+        ``step_mode`` mid-run changes only the dispatch schedule, never
+        the results.
+        """
+        if step_mode is not None:
+            if step_mode not in STEP_MODES:
+                raise ValueError(
+                    f"step_mode must be one of {STEP_MODES}, got {step_mode!r}"
+                )
+            self.step_mode = step_mode
+        if max_workers is not None and max_workers != self.max_workers:
+            self.max_workers = max_workers
+            self.close()  # resize on next concurrent step
+        if on_wave is not None:
+            self.on_wave = on_wave
+        if report_history is not None:
+            if report_history < 1:
+                raise ValueError("report_history must be >= 1")
+            self.history_limit = report_history
+        return self
 
     # -- hooks for concrete backends ------------------------------------------
     def _build(
@@ -163,11 +269,25 @@ class ExecutionBackend:
     ) -> Any:
         raise NotImplementedError
 
-    def _step_segments(self) -> Dict[str, float]:
+    def _step_one(self, seg: Any) -> Optional[float]:
+        """Advance one segment one step.
+
+        Returns a simulated duration in ms (dry-run latency model) or
+        ``None`` to report the measured wall-time. In concurrent mode this
+        runs on a worker thread; it may touch only its own segment plus
+        thread-safe transports (the broker).
+        """
         raise NotImplementedError
 
     def _drop_streams(self, seg: Any) -> None:
         """Release any transport resources of a killed segment (broker topics)."""
+
+    def _begin_concurrent_step(self) -> None:
+        """Hook before a concurrent dispatch (jit backends snapshot per-topic
+        sequence targets here so boundary reads sync on their producers)."""
+
+    def _end_concurrent_step(self) -> None:
+        """Hook after a concurrent dispatch completes or fails."""
 
     # -- deployment -----------------------------------------------------------
     def deploy(
@@ -181,15 +301,33 @@ class ExecutionBackend:
         seg = self._build(spec, dataflow, init_states)
         self.segments[spec.name] = seg
         self.forwarding[spec.name] = set(spec.publish)
+        # Dependency DAG: boundary parents resolve to their owning segments.
+        # Merges only add segments *downstream* of existing ones (launch
+        # order is topological), so deploying never changes the deps of
+        # already-deployed segments — the edge set grows incrementally.
+        in_segment = set(spec.task_ids)
+        deps = {
+            self._owner_of[p]
+            for tid in spec.task_ids
+            for p in spec.parents.get(tid, ())
+            if p not in in_segment and p in self._owner_of
+        }
         for tid in spec.task_ids:
             self._owner_of[tid] = spec.name
             self.task_defs[tid] = dataflow.tasks[tid]
+        deps.discard(spec.name)
+        self.seg_deps[spec.name] = deps
+        self._waves_cache = None
         return seg
 
     def kill(self, segment_name: str) -> None:
         seg = self.segments.pop(segment_name)
         self.forwarding.pop(segment_name, None)
         self.ewma_ms.pop(segment_name, None)
+        self.seg_deps.pop(segment_name, None)
+        for deps in self.seg_deps.values():
+            deps.discard(segment_name)
+        self._waves_cache = None
         self._drop_streams(seg)
         for tid in seg.spec.task_ids:
             self.paused.discard(tid)
@@ -218,13 +356,79 @@ class ExecutionBackend:
     def _owner(self, task_id: str) -> Optional[str]:
         return self._owner_of.get(task_id)
 
-    # -- stepping ----------------------------------------------------------------
+    # -- stepping pipeline --------------------------------------------------------
+    def segment_waves(self) -> List[List[str]]:
+        """Topological levels of the segment dependency DAG (cached; segments
+        in one wave are independent and step concurrently)."""
+        if self._waves_cache is None:
+            order = {n: s.spec.created_at for n, s in self.segments.items()}
+            self._waves_cache = compute_waves(self.seg_deps, order)
+        return self._waves_cache
+
+    def _step_named(self, name: str) -> float:
+        seg = self.segments[name]
+        s0 = time.perf_counter()
+        simulated = self._step_one(seg)
+        return simulated if simulated is not None else (time.perf_counter() - s0) * 1e3
+
+    def _step_segments(self) -> Dict[str, float]:
+        """The sync sweep: every segment once, in launch order (topological)."""
+        ordered = sorted(self.segments, key=lambda n: self.segments[n].spec.created_at)
+        return {name: self._step_named(name) for name in ordered}
+
+    def _step_segments_concurrent(self) -> Dict[str, float]:
+        """Dependency-aware concurrent dispatch (ready-queue over a thread
+        pool); falls back to the caller's thread when the backend models
+        time instead of spending it (``concurrent_dispatch = False``)."""
+        if not self.concurrent_dispatch:
+            return self._step_segments()
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.max_workers, thread_name_prefix="repro-step"
+            )
+        self._begin_concurrent_step()
+        try:
+            order = {n: s.spec.created_at for n, s in self.segments.items()}
+            return run_ready_queue(
+                self.seg_deps, self._step_named, self.max_workers, order,
+                pool=self._pool,
+            )
+        finally:
+            self._end_concurrent_step()
+
+    def close(self) -> None:
+        """Release stepping resources (the persistent dispatch pool).
+
+        Idempotent; stepping after close() lazily recreates the pool."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
     def step(self) -> StepReport:
         t0 = time.perf_counter()
-        seg_ms = self._step_segments()
+        if self.step_mode == "concurrent":
+            seg_ms = self._step_segments_concurrent()
+        else:
+            seg_ms = self._step_segments()
+        waves = self.segment_waves()
+        concurrent = self.step_mode == "concurrent"
+        wave_ms = [
+            (max if concurrent else sum)([seg_ms[n] for n in wave if n in seg_ms] or [0.0])
+            for wave in waves
+        ]
         live, paused_n, cost = self.account()
         stragglers = self._update_stragglers(seg_ms)
         self.step_count += 1
+        if self.on_wave is not None:
+            for i, wave in enumerate(waves):
+                self.on_wave(
+                    WaveEvent(
+                        step=self.step_count,
+                        index=i,
+                        segments=tuple(wave),
+                        wave_ms=wave_ms[i],
+                    )
+                )
         report = StepReport(
             step=self.step_count,
             live_tasks=live,
@@ -233,8 +437,11 @@ class ExecutionBackend:
             wall_ms=(time.perf_counter() - t0) * 1e3,
             segment_ms=seg_ms,
             stragglers=stragglers,
+            makespan_ms=sum(wave_ms),
         )
         self.reports.append(report)
+        if self.history_limit is not None and len(self.reports) > self.history_limit:
+            del self.reports[: len(self.reports) - self.history_limit]
         return report
 
     def run(self, steps: int) -> List[StepReport]:
@@ -322,7 +529,7 @@ class ExecutionBackend:
                     "steps_run": int(getattr(seg, "steps_run", 0)),
                 }
             )
-        return {
+        state = {
             "step_count": int(self.step_count),
             "launch_seq": int(self._launch_seq),
             "paused": sorted(self.paused),
@@ -331,6 +538,12 @@ class ExecutionBackend:
             "segments": segments,
             "extra": self._dump_extra(),
         }
+        if self.history_limit is not None:
+            # opt-in monitoring history: the StepReport ring buffer survives
+            # restarts (dashboards resume with the pre-crash trajectory)
+            state["history_limit"] = int(self.history_limit)
+            state["reports"] = [_encode_report(r) for r in self.reports]
+        return state
 
     def restore_state(self, state: Dict[str, Any]) -> None:
         """Redeploy every checkpointed segment and resume the counters.
@@ -372,6 +585,9 @@ class ExecutionBackend:
         self.step_count = int(state["step_count"])
         self.ewma_ms = {k: float(v) for k, v in state.get("ewma_ms", {}).items()}
         self.redispatches = [(int(s), n) for s, n in state.get("redispatches", ())]
+        if state.get("history_limit") is not None:
+            self.history_limit = int(state["history_limit"])
+            self.reports = [_decode_report(r) for r in state.get("reports", ())]
         self._restore_extra(state.get("extra", {}))
 
     def _decode_init_states(
@@ -386,6 +602,30 @@ class ExecutionBackend:
 
     def _restore_extra(self, extra: Dict[str, Any]) -> None:
         """Consume :meth:`_dump_extra` output; unknown keys must be ignored."""
+
+    # -- dry-run latency calibration feed ----------------------------------------
+    def latency_samples(self) -> List[Tuple[Dict[str, float], float]]:
+        """⟨per-task-type work units, measured segment ms⟩ calibration pairs.
+
+        Joins every recorded ``StepReport.segment_ms`` entry with the
+        deployed segment's per-task ``cost_weight × batch`` work units,
+        grouped by task type — the observations
+        :func:`repro.ops.costs.fit_latency_model` fits so the dry-run
+        backend can report realistic ``segment_ms`` instead of ~0.
+        """
+        samples: List[Tuple[Dict[str, float], float]] = []
+        for report in self.reports:
+            for name, ms in report.segment_ms.items():
+                seg = self.segments.get(name)
+                if seg is None:  # segment killed since — spec no longer known
+                    continue
+                units: Dict[str, float] = {}
+                for tid in seg.spec.task_ids:
+                    ttype = self.task_defs[tid].type
+                    work = seg.cost_of[tid] * seg.spec.batch_of[tid]
+                    units[ttype] = units.get(ttype, 0.0) + work
+                samples.append((units, float(ms)))
+        return samples
 
     # -- straggler mitigation -----------------------------------------------------
     def _update_stragglers(self, seg_ms: Dict[str, float]) -> List[str]:

@@ -7,14 +7,28 @@ upstream task's segment; downstream segments fetch it at the start of their
 step. Duplicate semantics (fan-out) are free: multiple subscribers read the
 same buffer (zero-copy on device).
 
+Topic granularity: every topic carries its own lock, **sequence number**
+(count of publishes since creation) and condition variable, so boundary
+reads synchronize only on their producers — never on a broker-wide
+barrier. This is what lets the concurrent stepping pipeline dispatch
+independent segments from different threads:
+
+  * ``publish``/``fetch`` are thread-safe per topic;
+  * ``fetch_synced(topic, min_seq)`` blocks until that topic's sequence
+    reaches ``min_seq`` — the per-topic ordering guarantee the wave
+    scheduler relies on for deterministic sink counts (each forwarding
+    task publishes exactly once per step, so "producer stepped" ≡
+    "sequence advanced by one");
+  * ``drop`` is safe under in-flight dispatch: a dropped topic wakes any
+    blocked ``fetch_synced`` with a ``KeyError`` instead of deadlocking.
+
 The broker counts published bytes per topic — the indirection overhead the
 paper observes (and that defragmentation removes) is thus measurable.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
-
-import jax.numpy as jnp
+import threading
+from typing import Any, Dict
 
 
 def topic_for(task_id: str) -> str:
@@ -22,35 +36,110 @@ def topic_for(task_id: str) -> str:
     return f"stream/{task_id}"
 
 
+class _Topic:
+    """Per-topic state: latest buffer, publish sequence, waiter wake-up."""
+
+    __slots__ = ("cond", "buffer", "seq", "dropped")
+
+    def __init__(self) -> None:
+        self.cond = threading.Condition()
+        self.buffer: Any = None
+        self.seq = 0  # publishes on this topic since creation
+        self.dropped = False
+
+
 class Broker:
     def __init__(self) -> None:
-        self._topics: Dict[str, jnp.ndarray] = {}
+        self._topics: Dict[str, _Topic] = {}
+        # Guards the topic registry and the byte/publish counters; never
+        # held while waiting — waits happen on the per-topic condition.
+        self._lock = threading.Lock()
         self.bytes_published: int = 0
         self.publishes: int = 0
 
-    def publish(self, topic: str, batch: jnp.ndarray) -> None:
-        self._topics[topic] = batch
-        self.bytes_published += batch.size * batch.dtype.itemsize
-        self.publishes += 1
+    def _state(self, topic: str, create: bool = False) -> _Topic | None:
+        with self._lock:
+            st = self._topics.get(topic)
+            if st is None and create:
+                st = self._topics[topic] = _Topic()
+            return st
 
-    def fetch(self, topic: str) -> jnp.ndarray:
-        if topic not in self._topics:
+    def publish(self, topic: str, batch: Any) -> None:
+        st = self._state(topic, create=True)
+        with st.cond:
+            st.buffer = batch
+            st.dropped = False
+            st.seq += 1
+            st.cond.notify_all()
+        with self._lock:
+            self.bytes_published += batch.size * batch.dtype.itemsize
+            self.publishes += 1
+
+    def fetch(self, topic: str) -> Any:
+        st = self._state(topic)
+        if st is None:
             raise KeyError(f"no data published on topic {topic!r}")
-        return self._topics[topic]
+        with st.cond:
+            if st.buffer is None:
+                raise KeyError(f"no data published on topic {topic!r}")
+            return st.buffer
+
+    def fetch_synced(self, topic: str, min_seq: int, timeout: float = 60.0) -> Any:
+        """Fetch once the topic's sequence reaches ``min_seq``.
+
+        The per-producer synchronization point of concurrent stepping: the
+        consumer waits for *its* producer's publish of this step, not for a
+        global barrier. Dropping the topic while a fetch is in flight wakes
+        the waiter with a ``KeyError`` (kill/unmerge stay safe mid-step);
+        the timeout guards against scheduler bugs turning into hangs.
+        """
+        st = self._state(topic, create=True)
+        with st.cond:
+            ok = st.cond.wait_for(lambda: st.dropped or st.seq >= min_seq, timeout)
+            if st.dropped or st.buffer is None:
+                raise KeyError(f"topic {topic!r} dropped while awaited")
+            if not ok:  # pragma: no cover - defensive
+                raise TimeoutError(
+                    f"topic {topic!r} never reached sequence {min_seq} "
+                    f"(at {st.seq}) within {timeout}s"
+                )
+            return st.buffer
+
+    def seq(self, topic: str) -> int:
+        """Publish count of ``topic`` (0 if it never existed)."""
+        st = self._state(topic)
+        return 0 if st is None else st.seq
+
+    def sequences(self) -> Dict[str, int]:
+        """Snapshot of every live topic's sequence number (observability)."""
+        with self._lock:
+            items = list(self._topics.items())
+        return {t: st.seq for t, st in items if st.buffer is not None}
 
     def has(self, topic: str) -> bool:
-        return topic in self._topics
+        st = self._state(topic)
+        return st is not None and st.buffer is not None
 
-    def topics(self) -> Dict[str, jnp.ndarray]:
+    def topics(self) -> Dict[str, Any]:
         """Snapshot view of the live topic buffers (checkpointing)."""
-        return dict(self._topics)
+        with self._lock:
+            items = list(self._topics.items())
+        return {t: st.buffer for t, st in items if st.buffer is not None}
 
     def drop(self, topic: str) -> None:
-        self._topics.pop(topic, None)
+        with self._lock:
+            st = self._topics.pop(topic, None)
+        if st is not None:
+            with st.cond:
+                st.dropped = True
+                st.buffer = None
+                st.cond.notify_all()
 
     def reset_counters(self) -> None:
-        self.bytes_published = 0
-        self.publishes = 0
+        with self._lock:
+            self.bytes_published = 0
+            self.publishes = 0
 
     def __len__(self) -> int:
-        return len(self._topics)
+        with self._lock:
+            return sum(1 for st in self._topics.values() if st.buffer is not None)

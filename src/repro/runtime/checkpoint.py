@@ -59,6 +59,13 @@ class CheckpointError(ValueError):
     """A checkpoint file is missing, torn, or of an unsupported format."""
 
 
+class UnsupportedFormatError(CheckpointError):
+    """A structurally intact checkpoint written in a format this binary
+    does not speak (version skew). Restore skips it like any other
+    CheckpointError, but retention must never reap it — a newer/older
+    binary sharing the directory can still restore from it."""
+
+
 # -- pytree codec ---------------------------------------------------------------
 
 
@@ -123,10 +130,29 @@ def payload_digest(payload: Dict[str, Any]) -> str:
 
 
 class CheckpointStore:
-    """A directory of versioned checkpoints with atomic, monotonic writes."""
+    """A directory of versioned checkpoints with atomic, monotonic writes.
 
-    def __init__(self, root: str):
+    ``keep_last=N`` turns on retention: after every :meth:`save` the store
+    prunes down to the newest N *valid* checkpoints (the newest valid one
+    is never pruned — N must be ≥ 1) and reaps torn/corrupt files, which
+    can never be restored anyway. Intact checkpoints in an *unsupported
+    format* (version skew) are never reaped — see :meth:`prune`. Without
+    ``keep_last`` the store only ever appends (long-lived sessions should
+    set it).
+    """
+
+    def __init__(self, root: str, keep_last: Optional[int] = None):
+        if keep_last is not None and keep_last < 1:
+            raise ValueError(
+                f"keep_last must be >= 1 (the newest valid checkpoint "
+                f"is never pruned), got {keep_last}"
+            )
         self.root = str(root)
+        self.keep_last = keep_last
+        # ids whose files this instance already validated end-to-end —
+        # checkpoint files are immutable once renamed into place, so prune
+        # never has to re-read them (retention stays O(1) per save).
+        self._validated_ids: set = set()
 
     # -- naming ---------------------------------------------------------------
     @staticmethod
@@ -184,7 +210,63 @@ class CheckpointStore:
                 os.close(dirfd)
         except OSError:  # pragma: no cover - platform-dependent
             pass
+        self._validated_ids.add(checkpoint_id)  # valid by construction
+        if self.keep_last is not None:
+            self.prune()
         return final
+
+    # -- retention ------------------------------------------------------------
+    def prune(self, keep_last: Optional[int] = None) -> List[str]:
+        """Apply the retention policy; returns the paths removed.
+
+        Torn/corrupt files are always reaped (they can never be restored,
+        and their ids were already consumed — a later save never reuses
+        them while they exist). Unsupported-*format* files are left alone:
+        they are intact checkpoints from a different software version, and
+        a binary that speaks that format can still restore them. Valid
+        checkpoints keep the newest ``keep_last`` (defaults to the store's
+        policy; ``None`` with no store policy reaps torn files only). The
+        newest valid checkpoint is never pruned.
+
+        Checkpoint files are immutable once renamed into place, so each
+        file is fully validated at most once per store instance — steady
+        state is one validation per prune (the newly saved checkpoint),
+        not a re-read of the whole directory.
+        """
+        keep = keep_last if keep_last is not None else self.keep_last
+        if keep is not None and keep < 1:
+            raise ValueError(f"keep_last must be >= 1, got {keep}")
+        valid: List[int] = []
+        removed: List[str] = []
+        for checkpoint_id in self.list_ids():
+            if checkpoint_id in self._validated_ids:
+                valid.append(checkpoint_id)
+                continue
+            try:
+                self.load(checkpoint_id)
+            except UnsupportedFormatError:
+                continue  # version skew: not ours to restore, not ours to reap
+            except CheckpointError:
+                path = self.path_of(checkpoint_id)
+                try:
+                    os.remove(path)
+                    removed.append(path)
+                except OSError:  # pragma: no cover - concurrent reaper
+                    pass
+            else:
+                self._validated_ids.add(checkpoint_id)
+                valid.append(checkpoint_id)
+        if keep is not None:
+            for checkpoint_id in valid[:-keep]:
+                path = self.path_of(checkpoint_id)
+                try:
+                    os.remove(path)
+                except OSError:  # pragma: no cover - concurrent reaper
+                    pass
+                else:
+                    removed.append(path)
+                    self._validated_ids.discard(checkpoint_id)
+        return removed
 
     # -- read -----------------------------------------------------------------
     def load(self, path_or_id: Any) -> Dict[str, Any]:
@@ -201,7 +283,7 @@ class CheckpointStore:
             raise CheckpointError(f"checkpoint {path!r} has no payload envelope")
         fmt = envelope.get("checkpoint_format")
         if fmt not in SUPPORTED_FORMATS:
-            raise CheckpointError(
+            raise UnsupportedFormatError(
                 f"checkpoint {path!r} has unsupported format {fmt!r} "
                 f"(supported: {sorted(SUPPORTED_FORMATS)})"
             )

@@ -16,15 +16,23 @@ The contract with the jit backends: identical ``live_tasks`` /
 weights come from the shared jax-free :mod:`repro.ops.costs` model) and
 identical sink event *counts*; checksums are jit-only and read as 0.0
 here.
+
+Latency is *modelled*, not spent: with a calibrated
+:class:`~repro.ops.costs.LatencyModel` (fit from recorded jit
+``StepReport``s via :meth:`ExecutionBackend.latency_samples`) every
+segment reports the wall-time a jit backend would have measured, and
+``step_mode="concurrent"`` turns into a simulated-clock makespan study —
+per-wave ``segment_ms = max`` (independent segments overlap), summed
+across dependency waves — so straggler/defrag/placement scheduling
+questions answer entirely in dry-run.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Set
+from typing import Any, Dict, List, Optional, Set, Union
 
 from repro.core.graph import Dataflow
-from repro.ops.costs import cost_weight_for_task
+from repro.ops.costs import LatencyModel, cost_weight_for_task
 
 from .backend import ExecutionBackend, SegmentSpec
 from .checkpoint import decode_pytree
@@ -61,6 +69,36 @@ class DrySegment:
 
 class DryRunBackend(ExecutionBackend):
     name = "dryrun"
+    # Concurrency is simulated, not spent: stepping stays on the caller's
+    # thread and the dependency-DAG makespan model (wave max) does the rest.
+    concurrent_dispatch = False
+
+    def __init__(
+        self,
+        straggler_factor: float = 3.0,
+        ewma_alpha: float = 0.3,
+        step_mode: str = "sync",
+        max_workers: Optional[int] = None,
+        latency_model: Optional[LatencyModel] = None,
+    ):
+        super().__init__(
+            straggler_factor=straggler_factor,
+            ewma_alpha=ewma_alpha,
+            step_mode=step_mode,
+            max_workers=max_workers,
+        )
+        self.latency_model = latency_model
+
+    def calibrate(self, samples_or_model: Union[LatencyModel, list]) -> LatencyModel:
+        """Install a latency model (or fit one from jit calibration samples —
+        the output of :meth:`ExecutionBackend.latency_samples`)."""
+        if isinstance(samples_or_model, LatencyModel):
+            self.latency_model = samples_or_model
+        else:
+            from repro.ops.costs import fit_latency_model
+
+            self.latency_model = fit_latency_model(samples_or_model)
+        return self.latency_model
 
     # -- ExecutionBackend hooks -------------------------------------------------
     def _build(
@@ -113,15 +151,18 @@ class DryRunBackend(ExecutionBackend):
             out[tid] = {"count": int(count), "checksum": 0.0}
         return out
 
-    def _step_segments(self) -> Dict[str, float]:
-        seg_ms: Dict[str, float] = {}
-        ordered = sorted(self.segments.values(), key=lambda s: s.spec.created_at)
-        for seg in ordered:
-            s0 = time.perf_counter()
-            for tid in seg.sink_ids:
-                if seg.active[tid]:
-                    st = seg.states[tid]
-                    seg.states[tid] = {"count": st["count"] + 1, "checksum": 0.0}
-            seg.steps_run += 1
-            seg_ms[seg.name] = (time.perf_counter() - s0) * 1e3
-        return seg_ms
+    def _step_one(self, seg: DrySegment) -> Optional[float]:
+        for tid in seg.sink_ids:
+            if seg.active[tid]:
+                st = seg.states[tid]
+                seg.states[tid] = {"count": st["count"] + 1, "checksum": 0.0}
+        seg.steps_run += 1
+        if self.latency_model is None:
+            return None  # measured (~µs) — the uncalibrated legacy behavior
+        units: Dict[str, float] = {}
+        for tid in seg.spec.task_ids:
+            if not seg.active[tid]:
+                continue  # paused tasks are skipped by the jit lax.cond too
+            ttype = self.task_defs[tid].type
+            units[ttype] = units.get(ttype, 0.0) + seg.cost_of[tid] * seg.spec.batch_of[tid]
+        return self.latency_model.segment_ms(units)

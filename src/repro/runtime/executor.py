@@ -15,9 +15,9 @@ broker transport, and real device buffers for task states.
 """
 from __future__ import annotations
 
-import time
 from typing import Any, Dict, Optional, Tuple
 
+import jax
 import numpy as np
 
 from repro.core.graph import Dataflow
@@ -49,9 +49,25 @@ class InProcessJitBackend(ExecutionBackend):
 
     name = "inprocess"
 
-    def __init__(self, straggler_factor: float = 3.0, ewma_alpha: float = 0.3):
-        super().__init__(straggler_factor=straggler_factor, ewma_alpha=ewma_alpha)
+    def __init__(
+        self,
+        straggler_factor: float = 3.0,
+        ewma_alpha: float = 0.3,
+        step_mode: str = "sync",
+        max_workers: Optional[int] = None,
+    ):
+        super().__init__(
+            straggler_factor=straggler_factor,
+            ewma_alpha=ewma_alpha,
+            step_mode=step_mode,
+            max_workers=max_workers,
+        )
         self.broker = Broker()
+        # Per-topic sequence targets for the concurrent step in flight
+        # (None outside one): each forwarding task publishes exactly once
+        # per step, so a boundary read of this step must observe sequence
+        # start+1 on its producer's topic — and only on that topic.
+        self._topic_target: Optional[Dict[str, int]] = None
 
     # -- ExecutionBackend hooks -------------------------------------------------
     def _build(
@@ -67,23 +83,50 @@ class InProcessJitBackend(ExecutionBackend):
             self.broker.drop(topic_for(tid))
 
     def _fetch_inputs(self, seg: Segment) -> Dict[str, Any]:
-        """Boundary inputs for one segment (hook — sharded moves them on-device)."""
-        return {t: self.broker.fetch(t) for t in seg.boundary_topics}
+        """Boundary inputs for one segment (hook — sharded moves them on-device).
 
-    def _step_segments(self) -> Dict[str, float]:
-        seg_ms: Dict[str, float] = {}
-        ordered = sorted(self.segments.values(), key=lambda s: s.spec.created_at)
-        for seg in ordered:
-            s0 = time.perf_counter()
-            inputs = self._fetch_inputs(seg)
-            new_states, outputs = seg.step_fn(seg.states, seg.active, inputs)
-            seg.states = new_states
-            for tid in self.forwarding[seg.name]:
-                if tid in outputs:
-                    self.broker.publish(topic_for(tid), outputs[tid])
-            seg.steps_run += 1
-            seg_ms[seg.name] = (time.perf_counter() - s0) * 1e3
-        return seg_ms
+        During a concurrent step each topic read synchronizes on *its*
+        producer's publish of this step (per-topic sequencing) — the
+        ready-queue already dispatched producers first, so the wait is a
+        cheap verification, but it hard-guarantees deterministic inputs
+        even for custom backends with looser dispatch.
+        """
+        targets = self._topic_target
+        if targets is None:
+            return {t: self.broker.fetch(t) for t in seg.boundary_topics}
+        return {
+            t: self.broker.fetch_synced(t, targets[t]) if t in targets
+            else self.broker.fetch(t)
+            for t in seg.boundary_topics
+        }
+
+    def _begin_concurrent_step(self) -> None:
+        self._topic_target = {
+            topic_for(tid): self.broker.seq(topic_for(tid)) + 1
+            for name, tids in self.forwarding.items()
+            if name in self.segments
+            for tid in tids
+        }
+
+    def _end_concurrent_step(self) -> None:
+        self._topic_target = None
+
+    def _step_one(self, seg: Segment) -> Optional[float]:
+        inputs = self._fetch_inputs(seg)
+        new_states, outputs = seg.step_fn(seg.states, seg.active, inputs)
+        seg.states = new_states
+        for tid in self.forwarding[seg.name]:
+            if tid in outputs:
+                self.broker.publish(topic_for(tid), outputs[tid])
+        # Block on the segment's computation (the Storm worker finishes its
+        # batch before acking). JAX dispatch is async — without this,
+        # segment_ms measures dispatch (~µs), the straggler EWMAs are
+        # noise, and the sync/concurrent distinction evaporates. Blocking
+        # here is what lets concurrent dispatch genuinely overlap devices:
+        # each worker thread waits on *its* device while the others run.
+        jax.block_until_ready(new_states)
+        seg.steps_run += 1
+        return None  # report measured wall-time
 
     # -- durability hooks ---------------------------------------------------------
     def _decode_init_states(

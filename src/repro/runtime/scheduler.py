@@ -1,30 +1,178 @@
-"""Placement policies + worker-pool model + straggler policy — the Storm
+"""Wave scheduling + placement policies + straggler policy — the Storm
 scheduler analogue.
 
-Two layers of placement live here:
+Three layers of scheduling live here:
 
+  * the **wave / ready-queue scheduler** used by concurrent stepping —
+    :func:`compute_waves` partitions the segment dependency DAG into
+    topological levels (independent segments share a wave) and
+    :func:`run_ready_queue` dispatches segments to a thread pool the
+    moment their upstream segments finish, so devices genuinely overlap
+    and a straggler only delays its own consumers;
   * :class:`PlacementPolicy` — the pluggable segment→device assignment API
     used by :class:`repro.runtime.sharded.ShardedBackend`. It generalizes
     :func:`place_round_robin` from the fixed worker-slot model to any pool
     of execution slots (``jax.devices()``, worker JVMs, hosts). Policies
-    register by name, mirroring the strategy/backend registries.
+    register by name, mirroring the strategy/backend registries, and may
+    consult the straggler tracker's per-segment EWMA step-times (the
+    ``ewma_aware`` policy closes the measurement→placement feedback loop);
   * :func:`place_round_robin` — the paper's setup: each node runs one
     Worker JVM per core (8/node), up to 8 tasks per Worker without
     interference, and a Worker hosts tasks from only one topology
     (segment). Storm places tasks round-robin. This model converts a set
     of deployed segments into the node count a real cluster would need —
     benchmarks report it alongside task counts and core usage.
+
+This module is deliberately JAX-free.
 """
 from __future__ import annotations
 
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Dict, List, Tuple, Type, Union
+from typing import (
+    TYPE_CHECKING,
+    AbstractSet,
+    Callable,
+    Dict,
+    List,
+    Mapping,
+    Optional,
+    Tuple,
+    Type,
+    Union,
+)
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .backend import SegmentSpec
 
 WORKERS_PER_NODE = 8
 TASKS_PER_WORKER = 8
+
+
+# -- wave / ready-queue scheduling (concurrent stepping) ------------------------
+
+
+@dataclass(frozen=True)
+class WaveEvent:
+    """One wave of a step, delivered to ``on_wave`` observers.
+
+    ``wave_ms`` is the wave's contribution to the step makespan: the *max*
+    segment time in concurrent mode (segments overlap), the *sum* in sync
+    mode (segments serialize).
+    """
+
+    step: int
+    index: int
+    segments: Tuple[str, ...]
+    wave_ms: float
+
+
+def _ordered(names, order: Optional[Mapping[str, int]]) -> List[str]:
+    key = (order or {}).get
+    return sorted(names, key=lambda n: (key(n, 0), n))
+
+
+def compute_waves(
+    deps: Mapping[str, AbstractSet[str]],
+    order: Optional[Mapping[str, int]] = None,
+) -> List[List[str]]:
+    """Partition the segment dependency DAG into topological levels.
+
+    ``deps`` maps segment → upstream segments (boundary-input producers).
+    Segments in the same wave are mutually independent and may step
+    concurrently; wave *k+1* reads only topics published by waves ≤ *k*.
+    Within a wave, segments sort by ``order`` (launch sequence) so sync
+    and concurrent stepping enumerate segments identically.
+    """
+    remaining = {n: len(ds) for n, ds in deps.items()}
+    dependents: Dict[str, List[str]] = {n: [] for n in deps}
+    for n, ds in deps.items():
+        for d in ds:
+            dependents[d].append(n)
+    wave = _ordered([n for n, r in remaining.items() if r == 0], order)
+    waves: List[List[str]] = []
+    seen = 0
+    while wave:
+        waves.append(wave)
+        seen += len(wave)
+        nxt = []
+        for n in wave:
+            for m in dependents[n]:
+                remaining[m] -= 1
+                if remaining[m] == 0:
+                    nxt.append(m)
+        wave = _ordered(nxt, order)
+    if seen < len(deps):
+        stuck = sorted(n for n, r in remaining.items() if r > 0)
+        raise ValueError(f"cycle in segment dependency graph: {stuck}")
+    return waves
+
+
+def run_ready_queue(
+    deps: Mapping[str, AbstractSet[str]],
+    runner: Callable[[str], float],
+    max_workers: Optional[int] = None,
+    order: Optional[Mapping[str, int]] = None,
+    pool: Optional[ThreadPoolExecutor] = None,
+) -> Dict[str, float]:
+    """Dependency-aware concurrent dispatch over a thread pool.
+
+    Every segment whose upstream segments have completed is dispatched
+    immediately (no wave barrier — item-level readiness), so a straggler
+    in one branch never delays independent branches. Returns the
+    per-segment ``runner`` results (step wall-times in ms). The first
+    runner exception is re-raised after in-flight work drains; no new
+    segments are dispatched past an error.
+
+    Callers on a hot path pass a persistent ``pool`` (backends keep one
+    across steps — pool spin-up costs more than a small step); without
+    one a throwaway pool of ``max_workers`` is created and torn down.
+    """
+    names = list(deps)
+    if not names:
+        return {}
+    remaining = {n: len(deps[n]) for n in names}
+    dependents: Dict[str, List[str]] = {n: [] for n in names}
+    for n, ds in deps.items():
+        for d in ds:
+            dependents[d].append(n)
+    results: Dict[str, float] = {}
+    errors: List[BaseException] = []
+    owned = pool is None
+    if pool is None:
+        pool = ThreadPoolExecutor(max_workers=max_workers)
+    try:
+        futures = {
+            pool.submit(runner, n): n
+            for n in _ordered([n for n in names if remaining[n] == 0], order)
+        }
+        while futures:
+            done, _ = wait(futures, return_when=FIRST_COMPLETED)
+            newly: List[str] = []
+            for fut in done:
+                n = futures.pop(fut)
+                try:
+                    results[n] = fut.result()
+                except BaseException as e:  # noqa: BLE001 - re-raised below
+                    errors.append(e)
+                    continue
+                for m in dependents[n]:
+                    remaining[m] -= 1
+                    if remaining[m] == 0:
+                        newly.append(m)
+            if errors:
+                continue  # drain in-flight work, dispatch nothing new
+            for m in _ordered(newly, order):
+                futures[pool.submit(runner, m)] = m
+    finally:
+        if owned:
+            pool.shutdown(wait=True)
+    if errors:
+        raise errors[0]
+    if len(results) < len(names):
+        stuck = sorted(n for n in names if n not in results)
+        raise RuntimeError(f"cycle in segment dependency graph: {stuck}")
+    return results
 
 
 # -- segment → device placement (ShardedBackend) -------------------------------
@@ -35,12 +183,34 @@ class PlacementPolicy:
 
     ``load`` maps device index → number of tasks currently placed there;
     policies may ignore it (round-robin) or balance on it (least-loaded).
+    ``ewma`` maps device index → summed EWMA step-time (ms) of the
+    segments currently placed there — the straggler tracker's view of how
+    slow each device actually is. Static policies ignore it; the
+    ``ewma_aware`` policy balances on it and migrates segments off slow
+    devices via :meth:`redispatch`.
     """
 
     name: str = ""
 
-    def assign(self, spec: "SegmentSpec", n_devices: int, load: Dict[int, int]) -> int:
+    def assign(
+        self,
+        spec: "SegmentSpec",
+        n_devices: int,
+        load: Dict[int, int],
+        ewma: Optional[Dict[int, float]] = None,
+    ) -> int:
         raise NotImplementedError
+
+    def redispatch(
+        self,
+        spec: "SegmentSpec",
+        current: int,
+        n_devices: int,
+        load: Dict[int, int],
+        ewma: Optional[Dict[int, float]] = None,
+    ) -> int:
+        """Pick a new device for a straggling segment (default: stay put)."""
+        return current
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"<{type(self).__name__} {self.name!r}>"
@@ -86,7 +256,13 @@ class RoundRobinPlacement(PlacementPolicy):
     def __init__(self) -> None:
         self._next = 0
 
-    def assign(self, spec: "SegmentSpec", n_devices: int, load: Dict[int, int]) -> int:
+    def assign(
+        self,
+        spec: "SegmentSpec",
+        n_devices: int,
+        load: Dict[int, int],
+        ewma: Optional[Dict[int, float]] = None,
+    ) -> int:
         idx = self._next % n_devices
         self._next += 1
         return idx
@@ -98,8 +274,58 @@ class LeastLoadedPlacement(PlacementPolicy):
 
     name = "least_loaded"
 
-    def assign(self, spec: "SegmentSpec", n_devices: int, load: Dict[int, int]) -> int:
+    def assign(
+        self,
+        spec: "SegmentSpec",
+        n_devices: int,
+        load: Dict[int, int],
+        ewma: Optional[Dict[int, float]] = None,
+    ) -> int:
         return min(range(n_devices), key=lambda i: (load.get(i, 0), i))
+
+
+@register_placement
+class EwmaAwarePlacement(PlacementPolicy):
+    """Feedback placement: balance on *measured* per-device step-time EWMAs.
+
+    Static policies see specs and task counts; this one consumes the
+    straggler tracker's per-segment EWMA step-times aggregated per device
+    (ROADMAP: backend-aware placement). New segments land on the device
+    with the least observed work, and :meth:`redispatch` migrates a
+    flagged straggler to the lightest *other* device — hot segments move
+    off slow devices instead of being re-queued in place.
+    """
+
+    name = "ewma_aware"
+
+    @staticmethod
+    def _pressure(i: int, load: Dict[int, int], ewma: Optional[Dict[int, float]]):
+        e = ewma or {}
+        return (e.get(i, 0.0), load.get(i, 0), i)
+
+    def assign(
+        self,
+        spec: "SegmentSpec",
+        n_devices: int,
+        load: Dict[int, int],
+        ewma: Optional[Dict[int, float]] = None,
+    ) -> int:
+        return min(range(n_devices), key=lambda i: self._pressure(i, load, ewma))
+
+    def redispatch(
+        self,
+        spec: "SegmentSpec",
+        current: int,
+        n_devices: int,
+        load: Dict[int, int],
+        ewma: Optional[Dict[int, float]] = None,
+    ) -> int:
+        if n_devices < 2:
+            return current
+        return min(
+            (i for i in range(n_devices) if i != current),
+            key=lambda i: self._pressure(i, load, ewma),
+        )
 
 
 @dataclass

@@ -36,8 +36,15 @@ class ShardedBackend(InProcessJitBackend):
         devices: Optional[Sequence[Any]] = None,
         straggler_factor: float = 3.0,
         ewma_alpha: float = 0.3,
+        step_mode: str = "sync",
+        max_workers: Optional[int] = None,
     ):
-        super().__init__(straggler_factor=straggler_factor, ewma_alpha=ewma_alpha)
+        super().__init__(
+            straggler_factor=straggler_factor,
+            ewma_alpha=ewma_alpha,
+            step_mode=step_mode,
+            max_workers=max_workers,
+        )
         self.devices: List[Any] = list(devices) if devices is not None else list(jax.devices())
         if not self.devices:
             raise ValueError("ShardedBackend needs at least one device")
@@ -57,6 +64,17 @@ class ShardedBackend(InProcessJitBackend):
             load[idx] = load.get(idx, 0) + len(seg.spec.task_ids)
         return load
 
+    def device_ewma(self) -> Dict[int, float]:
+        """Device index → summed EWMA step-time (ms) of its segments — the
+        straggler tracker's measured view of device pressure, fed to the
+        placement policy on assign *and* redispatch."""
+        ewma: Dict[int, float] = {}
+        for name, ms in self.ewma_ms.items():
+            idx = self.device_of.get(name)
+            if idx is not None:
+                ewma[idx] = ewma.get(idx, 0.0) + ms
+        return ewma
+
     def _build(
         self,
         spec: SegmentSpec,
@@ -64,7 +82,9 @@ class ShardedBackend(InProcessJitBackend):
         init_states: Optional[Dict[str, Any]],
     ) -> Segment:
         seg = super()._build(spec, dataflow, init_states)
-        idx = self.policy.assign(spec, len(self.devices), self.device_load())
+        idx = self.policy.assign(
+            spec, len(self.devices), self.device_load(), ewma=self.device_ewma()
+        )
         self.device_of[spec.name] = idx
         dev = self.devices[idx]
         seg.states = jax.device_put(seg.states, dev)
@@ -75,12 +95,38 @@ class ShardedBackend(InProcessJitBackend):
         super().kill(segment_name)
         self.device_of.pop(segment_name, None)
 
+    def redispatch(self, segment_name: str) -> None:
+        """Straggler mitigation with teeth: consult the placement policy for
+        a new device and *migrate* the segment's states there (the compiled
+        executable is device-agnostic; only buffers move). Static policies
+        keep the old stay-put behavior via the default ``redispatch`` hook.
+        """
+        super().redispatch(segment_name)  # record + reset the EWMA
+        seg = self.segments.get(segment_name)
+        current = self.device_of.get(segment_name)
+        if seg is None or current is None:
+            return
+        new = self.policy.redispatch(
+            seg.spec,
+            current,
+            len(self.devices),
+            self.device_load(),
+            ewma=self.device_ewma(),
+        )
+        if new != current and 0 <= new < len(self.devices):
+            dev = self.devices[new]
+            seg.states = jax.device_put(seg.states, dev)
+            seg.active = jax.device_put(seg.active, dev)
+            self.device_of[segment_name] = new
+
     def _fetch_inputs(self, seg: Segment) -> Dict[str, Any]:
         """Move boundary batches onto the consuming segment's device (one
-        transfer per cross-segment hop)."""
+        transfer per cross-segment hop); per-topic synchronization comes
+        from the base fetch (concurrent steps sync on producers only)."""
         dev = self.devices[self.device_of[seg.spec.name]]
         return {
-            t: jax.device_put(self.broker.fetch(t), dev) for t in seg.boundary_topics
+            t: jax.device_put(batch, dev)
+            for t, batch in super()._fetch_inputs(seg).items()
         }
 
     # -- durability hooks ---------------------------------------------------------

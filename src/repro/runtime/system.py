@@ -59,19 +59,37 @@ class StreamSystem:
         backend: Union[str, ExecutionBackend] = "inprocess",
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: Optional[int] = None,
+        checkpoint_keep_last: Optional[int] = None,
+        step_mode: Optional[str] = None,
+        max_workers: Optional[int] = None,
+        on_wave: Optional[Any] = None,
+        report_history: Optional[int] = None,
     ):
         self.manager = ReuseManager(
             strategy=strategy, check_invariants=check_invariants, journal_path=journal_path
         )
         self.backend = resolve_backend(backend)
+        self.backend.configure_stepping(
+            step_mode=step_mode,
+            max_workers=max_workers,
+            on_wave=on_wave,
+            report_history=report_history,
+        )
         self.base_batch = base_batch
         self.task_batch: Dict[str, int] = {}  # running task id -> output batch size
         self._seg_counter = 0
         self._segments_of: Dict[str, List[str]] = {}  # submission -> segment names
-        self.checkpoint_store = CheckpointStore(checkpoint_dir) if checkpoint_dir else None
+        self.checkpoint_keep_last = checkpoint_keep_last
+        self.checkpoint_store = (
+            CheckpointStore(checkpoint_dir, keep_last=checkpoint_keep_last)
+            if checkpoint_dir
+            else None
+        )
         self.checkpoint_every = checkpoint_every
         if checkpoint_every and not checkpoint_dir:
             raise ValueError("checkpoint_every needs a checkpoint_dir")
+        if checkpoint_keep_last and not checkpoint_dir:
+            raise ValueError("checkpoint_keep_last needs a checkpoint_dir")
 
     @property
     def executor(self) -> ExecutionBackend:
@@ -224,13 +242,21 @@ class StreamSystem:
             "task_batch": {t: int(b) for t, b in self.task_batch.items()},
             "segments_of": {n: list(segs) for n, segs in self._segments_of.items()},
             "checkpoint_every": self.checkpoint_every,
+            "checkpoint_keep_last": self.checkpoint_keep_last,
+            # Stepping-pipeline config rides along so a restore lands in the
+            # same mode by default; the segment dependency DAG itself is
+            # derived state and is rebuilt by redeploy, never persisted.
+            "step_mode": self.backend.step_mode,
+            "max_workers": self.backend.max_workers,
             "data": self.backend.dump_state(),
         }
 
     def checkpoint(self, checkpoint_dir: Optional[str] = None) -> str:
         """Write one durable checkpoint; returns its path."""
         store = (
-            CheckpointStore(checkpoint_dir) if checkpoint_dir else self.checkpoint_store
+            CheckpointStore(checkpoint_dir, keep_last=self.checkpoint_keep_last)
+            if checkpoint_dir
+            else self.checkpoint_store
         )
         if store is None:
             raise ValueError(
@@ -245,6 +271,10 @@ class StreamSystem:
         backend: Optional[Union[str, ExecutionBackend]] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: Optional[int] = None,
+        checkpoint_keep_last: Optional[int] = None,
+        step_mode: Optional[str] = None,
+        max_workers: Optional[int] = None,
+        on_wave: Optional[Any] = None,
         journal_path: Optional[str] = None,
         check_invariants: bool = False,
     ) -> "StreamSystem":
@@ -255,7 +285,10 @@ class StreamSystem:
         on the target backend — by default the checkpointed one, or any
         other registered backend for a cross-backend restore
         (``inprocess`` ⇄ ``dryrun``; see the backend decode hooks for what
-        carries across)."""
+        carries across). ``step_mode``/``max_workers`` override the
+        checkpointed stepping config — a checkpoint taken in either mode
+        restores into either mode (the segment dependency DAG is derived
+        state, rebuilt by the redeploy)."""
         mgr = ReuseManager.replay(
             payload["journal"],
             strategy=payload["strategy"],
@@ -268,12 +301,26 @@ class StreamSystem:
             backend=backend if backend is not None else payload["backend"],
             checkpoint_dir=checkpoint_dir,
         )
-        # The cadence survives the restore even when no checkpoint_dir is
-        # configured yet (step() only auto-checkpoints once a store exists),
-        # so payload → restore → payload stays a fixed point.
+        # The cadence/retention survive the restore even when no
+        # checkpoint_dir is configured yet (step() only auto-checkpoints
+        # once a store exists), so payload → restore → payload stays a
+        # fixed point.
         system.checkpoint_every = (
             checkpoint_every if checkpoint_every is not None
             else payload.get("checkpoint_every")
+        )
+        system.checkpoint_keep_last = (
+            checkpoint_keep_last if checkpoint_keep_last is not None
+            else payload.get("checkpoint_keep_last")
+        )
+        if system.checkpoint_store is not None:
+            system.checkpoint_store.keep_last = system.checkpoint_keep_last
+        system.backend.configure_stepping(
+            step_mode=step_mode if step_mode is not None else payload.get("step_mode"),
+            max_workers=(
+                max_workers if max_workers is not None else payload.get("max_workers")
+            ),
+            on_wave=on_wave,
         )
         system.manager = mgr
         system.task_batch = {t: int(b) for t, b in payload["task_batch"].items()}
@@ -291,6 +338,10 @@ class StreamSystem:
         backend: Optional[Union[str, ExecutionBackend]] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: Optional[int] = None,
+        checkpoint_keep_last: Optional[int] = None,
+        step_mode: Optional[str] = None,
+        max_workers: Optional[int] = None,
+        on_wave: Optional[Any] = None,
         journal_path: Optional[str] = None,
         check_invariants: bool = False,
     ) -> "StreamSystem":
@@ -311,9 +362,20 @@ class StreamSystem:
             backend=backend,
             checkpoint_dir=checkpoint_dir or default_dir,
             checkpoint_every=checkpoint_every,
+            checkpoint_keep_last=checkpoint_keep_last,
+            step_mode=step_mode,
+            max_workers=max_workers,
+            on_wave=on_wave,
             journal_path=journal_path,
             check_invariants=check_invariants,
         )
+
+    def close(self) -> None:
+        """Release data-plane resources (the backend's dispatch pool).
+
+        Idempotent; the system remains usable — stepping recreates what
+        it needs lazily."""
+        self.backend.close()
 
     # -- observability ----------------------------------------------------------------
     def sink_digests(self, sub_name: str) -> Dict[str, Dict[str, Any]]:

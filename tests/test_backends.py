@@ -37,6 +37,12 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks")
 
 
 def _system(backend, strategy="signature", **kw):
+    # The CI concurrency-stress job re-runs this whole conformance suite
+    # through the concurrent stepping pipeline at several pool widths;
+    # results must be mode- and width-invariant.
+    kw.setdefault("step_mode", os.environ.get("REPRO_TEST_STEP_MODE"))
+    if "REPRO_TEST_MAX_WORKERS" in os.environ:
+        kw.setdefault("max_workers", int(os.environ["REPRO_TEST_MAX_WORKERS"]))
     return StreamSystem(strategy=strategy, backend=backend, **kw)
 
 

@@ -1,0 +1,924 @@
+"""Concurrent dependency-aware stepping pipeline tests.
+
+Five layers:
+  * wave / ready-queue scheduler units (``compute_waves`` /
+    ``run_ready_queue``): topological levels, launch-order tie-breaks,
+    genuine thread overlap, error draining, cycle detection and
+    persistent-pool reuse;
+  * the topic-granular Broker: per-topic sequencing (``fetch_synced``),
+    drop-safety under in-flight dispatch, and the no-leak topic lifecycle
+    across kill/unmerge/defragment under concurrent stepping;
+  * the determinism contract: for every backend ``step_mode="concurrent"``
+    yields per-DAG sink counts identical to ``"sync"`` — on the fig-1
+    churn scenario, on the OPMW rw1 trace (full trace on dryrun, a
+    truncated slice on the jit planes), and across a checkpoint/restore
+    boundary taken in either mode and restored into either mode;
+  * EWMA-fed adaptive placement: ``ewma_aware`` assigns new segments to
+    the least-pressured device and migrates an injected straggler off its
+    device on redispatch;
+  * the satellites: CheckpointStore ``keep_last`` retention GC, dry-run
+    latency calibration (``fit_latency_model`` → realistic ``segment_ms``
+    and a wave-max makespan), and the opt-in StepReport ring buffer
+    surviving checkpoint/restore.
+
+The CI concurrency-stress job runs this module at ``max_workers`` 1 and 4
+via ``REPRO_TEST_MAX_WORKERS`` (width must never change results).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.ops.costs import LatencyModel, fit_latency_model
+from repro.runtime.broker import Broker, topic_for
+from repro.runtime.checkpoint import CheckpointStore
+from repro.runtime.scheduler import (
+    EwmaAwarePlacement,
+    WaveEvent,
+    compute_waves,
+    resolve_placement,
+    run_ready_queue,
+)
+from repro.runtime.system import StreamSystem
+
+from helpers import chain_df, fig1
+
+BACKENDS = ["inprocess", "sharded", "dryrun"]
+JIT_BACKENDS = ["inprocess", "sharded"]
+
+# The CI stress job sweeps this (1 = serialized dispatch, 4 = real overlap);
+# results must be identical at any width.
+MAX_WORKERS = int(os.environ.get("REPRO_TEST_MAX_WORKERS", "4"))
+
+# (op, name) churn used by the cross-mode determinism tests; every event is
+# followed by one step, with a tail of extra steps after the last event.
+FIG1_OPS = [
+    ("add", "A"),
+    ("add", "B"),
+    ("add", "C"),
+    ("add", "D"),
+    ("remove", "B"),
+    ("defrag", ""),
+    ("remove", "A"),
+    ("add", "B"),
+]
+
+
+def _fig1_by_name():
+    return {d.name: d for d in fig1()}
+
+
+def _apply(system, dags_by_name, op, name):
+    if op == "add":
+        system.submit(dags_by_name[name].copy())
+    elif op == "remove":
+        system.remove(name)
+    elif op == "defrag":
+        system.defragment()
+    else:  # pragma: no cover - defensive
+        raise ValueError(op)
+
+
+def _sink_counts(system):
+    return {
+        name: {s: d["count"] for s, d in system.sink_digests(name).items()}
+        for name in system.manager.submitted
+    }
+
+
+def _run_ops(backend, dags_by_name, ops, step_mode, tail_steps=3, **kw):
+    system = StreamSystem(
+        strategy="signature",
+        backend=backend,
+        step_mode=step_mode,
+        max_workers=MAX_WORKERS,
+        **kw,
+    )
+    series = []
+    for op, name in ops:
+        _apply(system, dags_by_name, op, name)
+        rep = system.step()
+        series.append((rep.live_tasks, rep.paused_tasks, round(rep.cost, 6)))
+    for _ in range(tail_steps):
+        rep = system.step()
+        series.append((rep.live_tasks, rep.paused_tasks, round(rep.cost, 6)))
+    counts = _sink_counts(system)
+    system.close()
+    return series, counts, system
+
+
+def _opmw_dags():
+    from repro.workloads import opmw_workload
+
+    return {d.name: d for d in opmw_workload()}
+
+
+def _opmw_ops(truncate=None):
+    from repro.workloads import opmw_workload, rw_trace
+
+    dags = opmw_workload()
+    events = [(ev.op, ev.name) for ev in rw_trace(dags, seed=11)]
+    return events[:truncate] if truncate else events
+
+
+# -- wave scheduler units -------------------------------------------------------
+
+
+class TestComputeWaves:
+    def test_empty(self):
+        assert compute_waves({}) == []
+
+    def test_chain(self):
+        deps = {"a": set(), "b": {"a"}, "c": {"b"}}
+        assert compute_waves(deps) == [["a"], ["b"], ["c"]]
+
+    def test_diamond(self):
+        deps = {"a": set(), "b": {"a"}, "c": {"a"}, "d": {"b", "c"}}
+        assert compute_waves(deps) == [["a"], ["b", "c"], ["d"]]
+
+    def test_order_breaks_ties_within_wave(self):
+        deps = {"x": set(), "y": set(), "z": set()}
+        waves = compute_waves(deps, order={"x": 3, "y": 1, "z": 2})
+        assert waves == [["y", "z", "x"]]
+
+    def test_cycle_raises(self):
+        with pytest.raises(ValueError, match="cycle"):
+            compute_waves({"a": {"b"}, "b": {"a"}})
+
+
+class TestRunReadyQueue:
+    def test_respects_dependencies(self):
+        deps = {"a": set(), "b": {"a"}, "c": {"a"}, "d": {"b", "c"}}
+        done, lock = [], threading.Lock()
+
+        def runner(name):
+            time.sleep(0.005)
+            with lock:
+                done.append(name)
+            return 1.0
+
+        out = run_ready_queue(deps, runner, max_workers=MAX_WORKERS)
+        assert set(out) == set(deps)
+        assert done.index("a") < done.index("b")
+        assert done.index("a") < done.index("c")
+        assert done.index("d") == 3
+
+    def test_independent_segments_genuinely_overlap(self):
+        """Both runners must be in flight at once or the rendezvous hangs."""
+        ev_a, ev_b = threading.Event(), threading.Event()
+
+        def runner(name):
+            mine, theirs = (ev_a, ev_b) if name == "a" else (ev_b, ev_a)
+            mine.set()
+            assert theirs.wait(timeout=10.0), "independent segments serialized"
+            return 1.0
+
+        out = run_ready_queue({"a": set(), "b": set()}, runner, max_workers=2)
+        assert set(out) == {"a", "b"}
+
+    def test_error_propagates_and_halts_dependents(self):
+        ran = []
+
+        def runner(name):
+            ran.append(name)
+            if name == "a":
+                raise RuntimeError("boom")
+            return 1.0
+
+        deps = {"a": set(), "b": {"a"}, "c": set()}
+        with pytest.raises(RuntimeError, match="boom"):
+            run_ready_queue(deps, runner, max_workers=1)
+        assert "b" not in ran  # dependent of the failed segment never dispatched
+
+    def test_cycle_raises(self):
+        with pytest.raises(RuntimeError, match="cycle"):
+            run_ready_queue({"a": {"b"}, "b": {"a"}}, lambda n: 0.0)
+
+    def test_external_pool_reused_not_shut_down(self):
+        pool = ThreadPoolExecutor(max_workers=2)
+        try:
+            for _ in range(3):
+                out = run_ready_queue(
+                    {"a": set(), "b": {"a"}}, lambda n: 0.5, pool=pool
+                )
+                assert out == {"a": 0.5, "b": 0.5}
+            # still alive: the caller owns its lifecycle
+            assert pool.submit(lambda: 42).result() == 42
+        finally:
+            pool.shutdown()
+
+    def test_backend_keeps_persistent_pool(self):
+        from repro.runtime.backend import ExecutionBackend
+
+        sys_ = StreamSystem(
+            strategy="signature", backend="inprocess",
+            step_mode="concurrent", max_workers=2,
+        )
+        for df in fig1()[:2]:
+            sys_.submit(df.copy())
+        sys_.step()
+        pool = sys_.backend._pool
+        assert pool is not None
+        sys_.step()
+        assert sys_.backend._pool is pool  # reused, not re-created per step
+        sys_.backend.configure_stepping(max_workers=3)  # resize drops the pool
+        assert sys_.backend._pool is None
+        sys_.step()
+        assert sys_.backend._pool is not None
+        sys_.close()
+        assert sys_.backend._pool is None
+        assert isinstance(sys_.backend, ExecutionBackend)
+
+
+# -- topic-granular broker ------------------------------------------------------
+
+
+def _batch(fill=1.0, n=4):
+    return np.full((n, 8), fill, dtype=np.float32)
+
+
+class TestBrokerTopics:
+    def test_sequence_advances_per_publish(self):
+        b = Broker()
+        assert b.seq("t") == 0
+        b.publish("t", _batch())
+        b.publish("t", _batch(2.0))
+        assert b.seq("t") == 2
+        assert b.sequences() == {"t": 2}
+
+    def test_fetch_synced_returns_once_sequence_reached(self):
+        b = Broker()
+        b.publish("t", _batch(7.0))
+        out = b.fetch_synced("t", 1)
+        assert float(out[0, 0]) == 7.0
+
+    def test_fetch_synced_blocks_until_producer_publishes(self):
+        b = Broker()
+        got = []
+
+        def consumer():
+            got.append(b.fetch_synced("t", 1, timeout=10.0))
+
+        t = threading.Thread(target=consumer)
+        t.start()
+        time.sleep(0.02)
+        assert not got  # still waiting on the producer
+        b.publish("t", _batch(3.0))
+        t.join(timeout=10.0)
+        assert got and float(got[0][0, 0]) == 3.0
+
+    def test_drop_wakes_blocked_fetch_with_keyerror(self):
+        b = Broker()
+        b.publish("t", _batch())
+        errs = []
+
+        def consumer():
+            try:
+                b.fetch_synced("t", 2, timeout=10.0)
+            except KeyError as e:
+                errs.append(e)
+
+        t = threading.Thread(target=consumer)
+        t.start()
+        time.sleep(0.02)
+        b.drop("t")  # kill/unmerge mid-step: waiter must not deadlock
+        t.join(timeout=10.0)
+        assert len(errs) == 1
+
+    def test_drop_then_republish_resets_sequence(self):
+        b = Broker()
+        b.publish("t", _batch())
+        b.drop("t")
+        assert not b.has("t")
+        with pytest.raises(KeyError):
+            b.fetch("t")
+        b.publish("t", _batch())
+        assert b.seq("t") == 1  # fresh topic state after drop
+
+    def test_len_and_topics_count_only_published(self):
+        b = Broker()
+        b.publish("a", _batch())
+        b.publish("b", _batch())
+        b.drop("a")
+        assert len(b) == 1
+        assert set(b.topics()) == {"b"}
+
+    def test_publish_counters_thread_safe(self):
+        b = Broker()
+        batch = _batch()
+
+        def blast(topic):
+            for _ in range(200):
+                b.publish(topic, batch)
+
+        threads = [threading.Thread(target=blast, args=(f"t{i}",)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert b.publishes == 800
+        assert b.bytes_published == 800 * batch.size * batch.dtype.itemsize
+
+
+class TestTopicLifecycle:
+    """Regression-guard: per-topic state never leaks past its segment."""
+
+    def _live_task_topics(self, backend):
+        return {
+            topic_for(tid)
+            for seg in backend.segments.values()
+            for tid in seg.spec.task_ids
+        }
+
+    def test_no_topic_leaks_across_churn_concurrent(self):
+        dags = _fig1_by_name()
+        sys_ = StreamSystem(
+            strategy="signature", backend="inprocess",
+            step_mode="concurrent", max_workers=MAX_WORKERS,
+        )
+        for op, name in FIG1_OPS:
+            _apply(sys_, dags, op, name)
+            sys_.step()
+            # every registered topic belongs to a deployed task; nothing
+            # from killed segments (defrag/unmerge/kill) survives
+            assert set(sys_.backend.broker._topics) <= self._live_task_topics(
+                sys_.backend
+            )
+        sys_.close()
+
+    def test_defragment_drops_boundary_topics(self):
+        dags = _fig1_by_name()
+        sys_ = StreamSystem(
+            strategy="signature", backend="inprocess",
+            step_mode="concurrent", max_workers=MAX_WORKERS,
+        )
+        for name in ("A", "B", "C"):
+            sys_.submit(dags[name].copy())
+        sys_.run(2)
+        assert len(sys_.backend.broker) > 0  # incremental merge → boundaries
+        sys_.defragment()
+        # one fused segment per DAG: no cross-segment streams remain, and
+        # the killed segments' topics went with them
+        sys_.run(2)
+        assert len(sys_.backend.seg_deps) == len(sys_.backend.segments)
+        assert all(not d for d in sys_.backend.seg_deps.values())
+        assert set(sys_.backend.broker._topics) <= self._live_task_topics(
+            sys_.backend
+        )
+        sys_.close()
+
+    def test_remove_sole_submission_drops_all_topics(self):
+        dags = _fig1_by_name()
+        sys_ = StreamSystem(
+            strategy="none", backend="inprocess",
+            step_mode="concurrent", max_workers=MAX_WORKERS,
+        )
+        sys_.submit(dags["A"].copy())
+        sys_.step()
+        sys_.remove("A")  # no reuses → segments killed, topics dropped
+        assert len(sys_.backend.segments) == 0
+        assert len(sys_.backend.broker._topics) == 0
+        assert sys_.backend.seg_deps == {}
+        sys_.close()
+
+
+# -- cross-mode determinism (the tentpole contract) ------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestConcurrentDeterminism:
+    def test_fig1_churn_sink_counts_identical(self, backend):
+        dags = _fig1_by_name()
+        sync_series, sync_counts, _ = _run_ops(backend, dags, FIG1_OPS, "sync")
+        conc_series, conc_counts, _ = _run_ops(backend, dags, FIG1_OPS, "concurrent")
+        assert conc_counts == sync_counts
+        assert conc_series == sync_series  # live/paused/cost trajectories too
+
+    def test_restore_lands_in_either_mode(self, backend, tmp_path):
+        """Checkpoint taken in one mode restores into the other (and back),
+        finishing with the same sink counts as the uninterrupted run."""
+        dags = _fig1_by_name()
+        _, base_counts, _ = _run_ops(backend, dags, FIG1_OPS, "sync")
+        for ckpt_mode, restore_mode in (
+            ("sync", "concurrent"),
+            ("concurrent", "sync"),
+        ):
+            ckpt = str(tmp_path / f"ck-{backend}-{ckpt_mode}-{restore_mode}")
+            kill_at = 4
+            system = StreamSystem(
+                strategy="signature", backend=backend, checkpoint_dir=ckpt,
+                checkpoint_every=1, step_mode=ckpt_mode, max_workers=MAX_WORKERS,
+            )
+            for op, name in FIG1_OPS[: kill_at + 1]:
+                _apply(system, dags, op, name)
+                system.step()
+                system.checkpoint()
+            system.close()
+            del system  # crash
+
+            restored = StreamSystem.restore(ckpt, step_mode=restore_mode)
+            assert restored.backend.step_mode == restore_mode
+            for op, name in FIG1_OPS[kill_at + 1 :]:
+                _apply(restored, dags, op, name)
+                restored.step()
+            restored.run(3)
+            assert _sink_counts(restored) == base_counts
+            restored.close()
+
+    def test_restore_defaults_to_checkpointed_mode(self, backend, tmp_path):
+        dags = _fig1_by_name()
+        ckpt = str(tmp_path / "ck")
+        system = StreamSystem(
+            strategy="signature", backend=backend, checkpoint_dir=ckpt,
+            step_mode="concurrent", max_workers=MAX_WORKERS,
+        )
+        system.submit(dags["A"].copy())
+        system.step()
+        system.checkpoint()
+        system.close()
+        restored = StreamSystem.restore(ckpt)
+        assert restored.backend.step_mode == "concurrent"
+        assert restored.backend.max_workers == MAX_WORKERS
+        restored.close()
+
+
+class TestOpmwTraceDeterminism:
+    def test_rw1_full_trace_dryrun(self):
+        """The acceptance contract on the full 35-DAG OPMW rw1 trace."""
+        dags, ops = _opmw_dags(), _opmw_ops()
+        sync_series, sync_counts, _ = _run_ops("dryrun", dags, ops, "sync")
+        conc_series, conc_counts, _ = _run_ops("dryrun", dags, ops, "concurrent")
+        assert conc_counts == sync_counts
+        assert conc_series == sync_series
+
+    def test_rw1_full_trace_dryrun_restore_boundary(self, tmp_path):
+        dags, ops = _opmw_dags(), _opmw_ops()
+        _, base_counts, _ = _run_ops("dryrun", dags, ops, "sync", tail_steps=0)
+        kill_at = len(ops) // 2
+        ckpt = str(tmp_path / "ck")
+        system = StreamSystem(
+            strategy="signature", backend="dryrun", checkpoint_dir=ckpt,
+            checkpoint_every=1, step_mode="concurrent", max_workers=MAX_WORKERS,
+        )
+        for op, name in ops[: kill_at + 1]:
+            _apply(system, dags, op, name)
+            system.step()
+            system.checkpoint()
+        del system
+
+        restored = StreamSystem.restore(ckpt, step_mode="sync")
+        for op, name in ops[kill_at + 1 :]:
+            _apply(restored, dags, op, name)
+            restored.step()
+        assert _sink_counts(restored) == base_counts
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("backend", JIT_BACKENDS)
+    def test_rw1_slice_jit(self, backend):
+        """The jit planes on an rw1 slice (full trace lives in the dryrun
+        test above — jit compile cost per merge makes the full 100+-event
+        trace a multi-minute run per mode)."""
+        dags, ops = _opmw_dags(), _opmw_ops(truncate=20)
+        _, sync_counts, _ = _run_ops(backend, dags, ops, "sync", tail_steps=1)
+        _, conc_counts, _ = _run_ops(backend, dags, ops, "concurrent", tail_steps=1)
+        assert conc_counts == sync_counts
+
+
+@pytest.mark.parametrize("backend", JIT_BACKENDS)
+class TestJitDigestIdentity:
+    def test_checksums_bit_identical_across_modes(self, backend):
+        """Beyond counts: jit sink checksums are bit-identical, because
+        per-topic sequencing hands every consumer exactly its producer's
+        batch of the same step."""
+        dags = _fig1_by_name()
+        out = {}
+        for mode in ("sync", "concurrent"):
+            sys_ = StreamSystem(
+                strategy="signature", backend=backend,
+                step_mode=mode, max_workers=MAX_WORKERS,
+            )
+            for name in ("A", "B", "C", "D"):
+                sys_.submit(dags[name].copy())
+            sys_.run(5)
+            out[mode] = {
+                name: sys_.sink_digests(name) for name in ("A", "B", "C", "D")
+            }
+            sys_.close()
+        assert out["sync"] == out["concurrent"]
+
+
+# -- EWMA-fed adaptive placement -------------------------------------------------
+
+
+class TestEwmaAwarePlacement:
+    def test_registered(self):
+        assert resolve_placement("ewma_aware").name == "ewma_aware"
+
+    def test_assign_prefers_least_pressured_device(self):
+        p = EwmaAwarePlacement()
+        # device 0 lightly loaded but slow; device 1 busier but fast
+        idx = p.assign(None, 2, load={0: 1, 1: 5}, ewma={0: 80.0, 1: 2.0})
+        assert idx == 1
+        # without EWMA signal it degrades to least-loaded
+        assert p.assign(None, 2, load={0: 3, 1: 1}) == 1
+
+    def test_redispatch_migrates_off_slow_device(self):
+        p = EwmaAwarePlacement()
+        new = p.redispatch(None, current=0, n_devices=3,
+                           load={0: 2, 1: 2, 2: 2},
+                           ewma={0: 100.0, 1: 9.0, 2: 4.0})
+        assert new == 2
+        # single device: nowhere to go
+        assert p.redispatch(None, current=0, n_devices=1, load={0: 2}) == 0
+
+    def test_static_policies_stay_put(self):
+        for name in ("round_robin", "least_loaded"):
+            p = resolve_placement(name)
+            assert p.redispatch(None, current=1, n_devices=4, load={}) == 1
+
+    def test_injected_straggler_migrates(self):
+        """Acceptance: a synthetically-slowed segment on the sharded
+        backend moves to another device on redispatch."""
+        import jax
+
+        from repro.runtime.sharded import ShardedBackend
+
+        cpu = jax.devices()[0]
+        backend = ShardedBackend(
+            placement="ewma_aware",
+            devices=[cpu, cpu],  # two slots on one physical device
+            straggler_factor=3.0,
+            step_mode="concurrent",
+            max_workers=MAX_WORKERS,
+        )
+        sys_ = StreamSystem(strategy="signature", backend=backend)
+        for i in range(4):
+            sys_.submit(chain_df(f"S{i}", "urban", [("kalman", {"q": float(i)})]))
+        victim = sorted(backend.device_of)[0]
+
+        # Inject the straggler: the victim's simulated step-time dwarfs the
+        # rest (base _step_one still runs, so data results stay correct).
+        orig_step_one = type(backend)._step_one
+
+        def slowed(seg):
+            orig_step_one(backend, seg)
+            return 200.0 if seg.name == victim else 2.0
+
+        backend._step_one = slowed
+        before = backend.device_of[victim]
+        for _ in range(12):
+            sys_.step()
+            if backend.redispatches:
+                break
+        assert backend.redispatches, "straggler was never flagged"
+        assert any(n == victim for _, n in backend.redispatches)
+        assert backend.device_of[victim] != before  # migrated, not re-queued
+        # the plane still steps correctly after the migration
+        rep = sys_.step()
+        assert rep.live_tasks == backend.live_task_count
+        sys_.close()
+
+    def test_ewma_feeds_assign_on_sharded(self):
+        import jax
+
+        from repro.runtime.sharded import ShardedBackend
+
+        cpu = jax.devices()[0]
+        backend = ShardedBackend(placement="ewma_aware", devices=[cpu, cpu])
+        sys_ = StreamSystem(strategy="signature", backend=backend)
+        sys_.submit(chain_df("S0", "urban", [("kalman", {"q": 0.0})]))
+        (first_seg,) = backend.device_of
+        first = backend.device_of[first_seg]
+        # make the first segment's device look hot; the next submission
+        # must land on the other one
+        backend.ewma_ms[first_seg] = 500.0
+        sys_.submit(chain_df("S1", "meter", [("kalman", {"q": 1.0})]))
+        (second,) = (
+            idx for name, idx in backend.device_of.items() if name != first_seg
+        )
+        assert second != first
+        sys_.close()
+
+
+# -- satellite: checkpoint GC ----------------------------------------------------
+
+
+class TestCheckpointRetention:
+    def _payload(self, i):
+        return {"n": i}
+
+    def test_keep_last_prunes_old_valid(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), keep_last=2)
+        for i in range(5):
+            store.save(self._payload(i))
+        ids = store.list_ids()
+        assert len(ids) == 2
+        assert store.latest_payload()["n"] == 4  # newest survives
+
+    def test_newest_valid_never_pruned(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), keep_last=1)
+        for i in range(3):
+            store.save(self._payload(i))
+        assert len(store.list_ids()) == 1
+        assert store.latest_payload()["n"] == 2
+
+    def test_keep_last_validation(self, tmp_path):
+        with pytest.raises(ValueError, match="keep_last"):
+            CheckpointStore(str(tmp_path), keep_last=0)
+        with pytest.raises(ValueError, match="keep_last"):
+            CheckpointStore(str(tmp_path)).prune(keep_last=0)
+
+    def test_torn_files_always_reaped(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), keep_last=3)
+        store.save(self._payload(0))  # id 1
+        torn = store.path_of(2)
+        with open(torn, "w") as f:
+            f.write('{"half a check')  # simulated mid-write crash
+        removed = store.prune()
+        assert torn in removed
+        assert not os.path.exists(torn)
+        assert store.list_ids() == [1]  # valid one kept (within keep_last)
+
+    def test_torn_reaped_even_without_policy(self, tmp_path):
+        store = CheckpointStore(str(tmp_path))  # no keep_last
+        store.save(self._payload(0))  # id 1
+        with open(store.path_of(2), "w") as f:
+            f.write("garbage")
+        removed = store.prune()
+        assert removed == [store.path_of(2)]
+        assert store.list_ids() == [1]  # valid checkpoints untouched
+
+    def test_unsupported_format_never_reaped(self, tmp_path):
+        """Version skew: an intact checkpoint from a different software
+        version is skipped by restore but must survive retention — another
+        binary sharing the directory can still restore it."""
+        store = CheckpointStore(str(tmp_path), keep_last=1)
+        store.save(self._payload(0))  # id 1
+        alien = store.path_of(2)
+        with open(alien, "w") as f:
+            json.dump(
+                {"checkpoint_format": 999, "sha256": "x", "payload": {"n": 9}}, f
+            )
+        for i in range(3):
+            store.save(self._payload(i))  # each save prunes
+        assert os.path.exists(alien)  # never reaped
+        # and it does not count toward keep_last: one valid + the alien
+        assert len(store.list_ids()) == 2
+
+    def test_prune_validates_each_file_once(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), keep_last=5)
+        for i in range(3):
+            store.save(self._payload(i))
+        loads = []
+        orig_load = store.load
+        store.load = lambda x: (loads.append(x), orig_load(x))[1]
+        store.save(self._payload(3))  # triggers prune
+        assert loads == []  # everything already validated by this instance
+
+    def test_ids_stay_monotonic_after_prune(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), keep_last=1)
+        for i in range(3):
+            store.save(self._payload(i))  # ids 1..3; prune keeps 3
+        store.save(self._payload(99))
+        assert store.list_ids() == [4]  # pruned ids are never re-minted
+
+    def test_session_plumbing(self, tmp_path):
+        from repro.api import ReuseSession
+
+        ckpt = str(tmp_path / "ck")
+        s = ReuseSession(
+            strategy="signature", execute=True, backend="dryrun",
+            checkpoint_dir=ckpt, checkpoint_every=1, checkpoint_keep_last=2,
+        )
+        s.submit(chain_df("A", "urban", [("kalman", {"q": 0.1})]))
+        s.run(6)  # auto-checkpoints every step
+        assert len(CheckpointStore(ckpt).list_ids()) == 2
+        # retention survives checkpoint → restore
+        restored = ReuseSession.restore(ckpt)
+        assert restored._system.checkpoint_keep_last == 2
+        assert restored._system.checkpoint_store.keep_last == 2
+        restored.run(4)
+        assert len(CheckpointStore(ckpt).list_ids()) == 2
+
+    def test_keep_last_needs_checkpoint_dir(self):
+        with pytest.raises(ValueError, match="checkpoint_keep_last"):
+            StreamSystem(backend="dryrun", checkpoint_keep_last=2)
+
+
+# -- satellite: dry-run latency calibration --------------------------------------
+
+
+class TestLatencyCalibration:
+    def test_fit_recovers_coefficients(self):
+        rng = np.random.default_rng(0)
+        truth = {"kalman": 2.0, "parse": 0.5}
+        samples = []
+        for _ in range(12):
+            units = {t: float(rng.uniform(1, 10)) for t in truth}
+            ms = sum(truth[t] * u for t, u in units.items())
+            samples.append((units, ms))
+        model = fit_latency_model(samples)
+        for t, c in truth.items():
+            assert model.ms_per_unit[t] == pytest.approx(c, rel=1e-6)
+        assert model.segment_ms({"kalman": 3.0}) == pytest.approx(6.0, rel=1e-6)
+
+    def test_unseen_type_uses_mean_fallback(self):
+        model = fit_latency_model([({"a": 2.0}, 4.0)])
+        assert model.default_ms_per_unit == pytest.approx(2.0)
+        assert model.segment_ms({"never-seen": 1.0}) == pytest.approx(2.0)
+
+    def test_empty_samples(self):
+        model = fit_latency_model([])
+        assert model.segment_ms({"x": 5.0}) == 0.0
+
+    def test_negative_coefficients_clipped(self):
+        # contradictory observations force a negative LS solution for one type
+        samples = [({"a": 1.0, "b": 1.0}, 1.0), ({"a": 1.0}, 2.0)]
+        model = fit_latency_model(samples)
+        assert all(c >= 0.0 for c in model.ms_per_unit.values())
+
+    def test_calibrated_dryrun_reports_realistic_segment_ms(self):
+        sys_ = StreamSystem(strategy="signature", backend="dryrun")
+        sys_.submit(chain_df("A", "urban", [("kalman", {"q": 0.1})]))
+        sys_.backend.calibrate(LatencyModel({"kalman": 1.0}, default_ms_per_unit=0.5))
+        rep = sys_.step()
+        (seg,) = sys_.backend.segments.values()
+        expected = sum(
+            (1.0 if sys_.backend.task_defs[t].type == "kalman" else 0.5)
+            * seg.cost_of[t] * seg.spec.batch_of[t]
+            for t in seg.spec.task_ids
+        )
+        assert rep.segment_ms[seg.name] == pytest.approx(expected)
+        assert rep.makespan_ms == pytest.approx(expected)
+
+    def test_jit_samples_calibrate_dryrun(self):
+        """End-to-end feed: record jit StepReports → fit → dry-run reports
+        non-trivial segment_ms."""
+        jit = StreamSystem(strategy="signature", backend="inprocess")
+        jit.submit(chain_df("A", "urban", [("kalman", {"q": 0.1})]))
+        jit.run(4)
+        samples = jit.backend.latency_samples()
+        assert samples
+        model = fit_latency_model(samples)
+        dry = StreamSystem(strategy="signature", backend="dryrun")
+        dry.backend.calibrate(model)
+        dry.submit(chain_df("A", "urban", [("kalman", {"q": 0.1})]))
+        rep = dry.step()
+        assert rep.makespan_ms > 0.0
+
+    def test_makespan_wave_max_vs_wave_sum(self):
+        """Dryrun concurrent makespan is Σ over waves of the wave max;
+        sync is the plain sum — the acceptance's wave-max-not-wave-sum."""
+        dags = _fig1_by_name()
+        per_mode = {}
+        for mode in ("sync", "concurrent"):
+            sys_ = StreamSystem(
+                strategy="signature", backend="dryrun", step_mode=mode,
+            )
+            sys_.backend.calibrate(LatencyModel({}, default_ms_per_unit=1.0))
+            # A→B→C merge incrementally (a chain of waves); D is independent
+            # and shares wave 0, so at least one wave has 2 segments and
+            # wave-max < wave-sum there.
+            for name in ("A", "B", "C", "D"):
+                sys_.submit(dags[name].copy())
+            rep = sys_.step()
+            waves = sys_.backend.segment_waves()
+            assert len(waves) > 1
+            assert any(len(w) > 1 for w in waves)
+            agg = max if mode == "concurrent" else sum
+            expected = sum(agg(rep.segment_ms[n] for n in w) for w in waves)
+            assert rep.makespan_ms == pytest.approx(expected)
+            per_mode[mode] = rep.makespan_ms
+        assert per_mode["concurrent"] < per_mode["sync"]
+
+
+# -- satellite: StepReport ring buffer -------------------------------------------
+
+
+class TestReportHistory:
+    def test_ring_buffer_bounds_memory(self):
+        sys_ = StreamSystem(
+            strategy="signature", backend="dryrun", report_history=5,
+        )
+        sys_.submit(chain_df("A", "urban", [("kalman", {"q": 0.1})]))
+        sys_.run(12)
+        assert [r.step for r in sys_.backend.reports] == list(range(8, 13))
+
+    def test_unbounded_by_default_and_not_persisted(self):
+        sys_ = StreamSystem(strategy="signature", backend="dryrun")
+        sys_.submit(chain_df("A", "urban", [("kalman", {"q": 0.1})]))
+        sys_.run(3)
+        assert len(sys_.backend.reports) == 3
+        dump = sys_.backend.dump_state()
+        assert "reports" not in dump
+
+    def test_history_survives_checkpoint_restore(self, tmp_path):
+        ckpt = str(tmp_path / "ck")
+        sys_ = StreamSystem(
+            strategy="signature", backend="dryrun",
+            checkpoint_dir=ckpt, report_history=4,
+        )
+        sys_.submit(chain_df("A", "urban", [("kalman", {"q": 0.1})]))
+        sys_.run(9)
+        want = [(r.step, r.live_tasks, r.cost) for r in sys_.backend.reports]
+        sys_.checkpoint()
+        restored = StreamSystem.restore(ckpt)
+        assert restored.backend.history_limit == 4
+        got = [(r.step, r.live_tasks, r.cost) for r in restored.backend.reports]
+        assert got == want
+        # the restored buffer keeps rolling
+        restored.step()
+        assert len(restored.backend.reports) == 4
+        assert restored.backend.reports[-1].step == 10
+
+    def test_report_history_validation(self):
+        with pytest.raises(ValueError, match="report_history"):
+            StreamSystem(backend="dryrun", report_history=0)
+
+
+# -- wave observers + knob plumbing ----------------------------------------------
+
+
+class TestWaveObserversAndKnobs:
+    def test_on_wave_covers_every_segment_once(self):
+        from repro.api import ReuseSession
+
+        events = []
+        s = ReuseSession(
+            strategy="signature", execute=True, backend="dryrun",
+            step_mode="concurrent", on_wave=events.append,
+        )
+        for name, df in _fig1_by_name().items():
+            if name in ("A", "B"):
+                s.submit(df)
+        rep = s.step()
+        assert all(isinstance(e, WaveEvent) for e in events)
+        assert [e.index for e in events] == list(range(len(events)))
+        stepped = [n for e in events for n in e.segments]
+        assert sorted(stepped) == sorted(s._system.backend.segments)
+        assert sum(e.wave_ms for e in events) == pytest.approx(rep.makespan_ms)
+        s.close()
+
+    def test_step_event_exposes_makespan(self):
+        from repro.api import ReuseSession
+
+        seen = []
+        s = ReuseSession(
+            strategy="signature", execute=True, backend="dryrun",
+            on_step=seen.append,
+        )
+        s.submit(chain_df("A", "urban", [("kalman", {"q": 0.1})]))
+        rep = s.step()
+        assert seen[0].makespan_ms == rep.makespan_ms
+
+    def test_invalid_step_mode_rejected(self):
+        from repro.runtime.dryrun import DryRunBackend
+
+        with pytest.raises(ValueError, match="step_mode"):
+            DryRunBackend(step_mode="warp")
+        with pytest.raises(ValueError, match="step_mode"):
+            DryRunBackend().configure_stepping(step_mode="warp")
+
+    def test_control_plane_session_rejects_stepping_knobs(self):
+        from repro.api import DataflowError, ReuseSession
+
+        with pytest.raises(DataflowError, match="step_mode"):
+            ReuseSession(step_mode="concurrent")
+        with pytest.raises(DataflowError, match="report_history"):
+            ReuseSession(report_history=8)
+
+    def test_wrapping_a_system_applies_stepping_knobs(self):
+        from repro.api import DataflowError, ReuseSession
+
+        system = StreamSystem(strategy="signature", backend="dryrun")
+        s = ReuseSession(
+            system=system, step_mode="concurrent", max_workers=3,
+            report_history=7,
+        )
+        assert system.backend.step_mode == "concurrent"
+        assert system.backend.max_workers == 3
+        assert system.backend.history_limit == 7
+        s.close()
+        # checkpoint wiring belongs to the system — rebinding must fail loudly
+        with pytest.raises(DataflowError, match="checkpoint_dir"):
+            ReuseSession(system=system, checkpoint_dir="/tmp/nope")
+
+    def test_mode_switch_mid_run_preserves_results(self):
+        dags = _fig1_by_name()
+        _, base_counts, _ = _run_ops("dryrun", dags, FIG1_OPS, "sync")
+        sys_ = StreamSystem(strategy="signature", backend="dryrun", step_mode="sync")
+        for i, (op, name) in enumerate(FIG1_OPS):
+            _apply(sys_, dags, op, name)
+            sys_.step()
+            sys_.backend.configure_stepping(
+                step_mode="concurrent" if i % 2 == 0 else "sync"
+            )
+        for _ in range(3):
+            sys_.step()
+        assert _sink_counts(sys_) == base_counts

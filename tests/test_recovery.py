@@ -682,7 +682,9 @@ class TestCliRecovery:
             k: part_rec["series"][k] + rest_rec["series"][k]
             for k in ("live_tasks", "paused_tasks", "cores")
         }
-        assert stitched == full_rec["series"]
+        # makespan_ms is measured wall-time (timing-dependent), so the
+        # stitching identity covers the deterministic counter series.
+        assert stitched == {k: full_rec["series"][k] for k in stitched}
 
     def test_restore_without_checkpoint_dir_fails(self):
         proc = _run_cli(["--trace", "riot/seq", "--restore"])
