@@ -51,6 +51,12 @@ from repro.runtime.backend import (
     register_backend,
     resolve_backend,
 )
+from repro.runtime.transport import (
+    Transport,
+    available_transports,
+    register_transport,
+    resolve_transport,
+)
 from repro.runtime.checkpoint import (
     CHECKPOINT_FORMAT_VERSION,
     CheckpointError,
@@ -92,9 +98,13 @@ __all__ = [
     "WaveEvent",
     "available_backends",
     "available_strategies",
+    "available_transports",
     "flow",
+    "Transport",
     "register_backend",
     "register_strategy",
+    "register_transport",
     "resolve_backend",
+    "resolve_transport",
     "resolve_strategy",
 ]

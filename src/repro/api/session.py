@@ -7,9 +7,11 @@ no JAX import); with ``execute=True`` it owns a full
 :class:`~repro.runtime.system.StreamSystem` driving a pluggable
 :class:`~repro.runtime.backend.ExecutionBackend`: ``backend="inprocess"``
 (default — the jit data plane actually streams event batches),
-``"sharded"`` (segments placed across ``jax.devices()``) or ``"dryrun"``
+``"sharded"`` (segments placed across ``jax.devices()``), ``"dryrun"``
 (pure cost-model stepping, no JAX — full OPMW trace sweeps in
-milliseconds).
+milliseconds) or ``"multiproc"`` (persistent worker processes stepping
+jit segments over a shared-memory/TCP stream transport — ``workers=``
+sizes the pool, ``transport=`` picks the wire).
 
     session = ReuseSession(strategy="signature", execute=True, backend="dryrun")
     session.on_merge(lambda ev: print("merged", ev.name, "→", ev.running_dag))
@@ -63,9 +65,13 @@ class ReuseSession:
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: Optional[int] = None,
         checkpoint_keep_last: Optional[int] = None,
+        checkpoint_background: Optional[bool] = None,
         step_mode: Optional[str] = None,
         max_workers: Optional[int] = None,
         report_history: Optional[int] = None,
+        transport: Optional[Any] = None,
+        workers: Optional[int] = None,
+        backend_options: Optional[Dict[str, Any]] = None,
         system: Optional[Any] = None,
         on_merge: Optional[Hook] = None,
         on_unmerge: Optional[Hook] = None,
@@ -100,6 +106,10 @@ class ReuseSession:
                 "checkpoint_dir": checkpoint_dir,
                 "checkpoint_every": checkpoint_every,
                 "checkpoint_keep_last": checkpoint_keep_last,
+                "checkpoint_background": checkpoint_background,
+                "transport": transport,
+                "workers": workers,
+                "backend_options": backend_options,
             }
             if any(v is not None for v in rebind.values()):
                 names = ", ".join(k for k, v in rebind.items() if v is not None)
@@ -131,10 +141,14 @@ class ReuseSession:
                 checkpoint_dir=checkpoint_dir,
                 checkpoint_every=checkpoint_every,
                 checkpoint_keep_last=checkpoint_keep_last,
+                checkpoint_background=bool(checkpoint_background),
                 step_mode=step_mode,
                 max_workers=max_workers,
                 on_wave=self._dispatch_wave,
                 report_history=report_history,
+                transport=transport,
+                workers=workers,
+                backend_options=backend_options,
             )
             self.manager: ReuseManager = self._system.manager
         else:
@@ -142,9 +156,13 @@ class ReuseSession:
                 "checkpoint_dir": checkpoint_dir,
                 "checkpoint_every": checkpoint_every,
                 "checkpoint_keep_last": checkpoint_keep_last,
+                "checkpoint_background": checkpoint_background,
                 "step_mode": step_mode,
                 "max_workers": max_workers,
                 "report_history": report_history,
+                "transport": transport,
+                "workers": workers,
+                "backend_options": backend_options,
             }
             if any(v is not None for v in bad.values()):
                 names = ", ".join(k for k, v in bad.items() if v is not None)

@@ -139,10 +139,13 @@ def run_dataflow_trace(
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 1,
     checkpoint_keep_last: Optional[int] = None,
+    checkpoint_background: bool = False,
     restore: bool = False,
     max_events: Optional[int] = None,
     step_mode: Optional[str] = None,
     max_workers: Optional[int] = None,
+    transport: Optional[str] = None,
+    workers: Optional[int] = None,
 ) -> Dict[str, Any]:
     """Replay ``workload/trace`` (e.g. ``opmw/rw1``) on an ExecutionBackend.
 
@@ -193,6 +196,9 @@ def run_dataflow_trace(
             step_mode=step_mode,
             max_workers=max_workers,
             checkpoint_keep_last=checkpoint_keep_last,
+            checkpoint_background=checkpoint_background or None,
+            transport=transport,
+            workers=workers,
         )
         resumed_at = len(session.manager.journal)  # events already applied
     else:
@@ -202,37 +208,54 @@ def run_dataflow_trace(
             backend=backend or "dryrun",
             checkpoint_dir=checkpoint_dir,
             checkpoint_keep_last=checkpoint_keep_last if checkpoint_dir else None,
+            checkpoint_background=(checkpoint_background or None) if checkpoint_dir else None,
             step_mode=step_mode,
             max_workers=max_workers,
+            transport=transport,
+            workers=workers,
         )
     todo = events[resumed_at:]
     if max_events is not None:
         todo = todo[: max(0, max_events - resumed_at)]
     live, paused, cost, makespan = [], [], [], []
     t0 = time.time()
-    for i, _ in enumerate(replay(session, dags, todo)):
-        report = None
-        for _ in range(steps_per_event):
-            report = session.step()
-        if report is None:  # steps_per_event=0: account without stepping
-            l, p, c = session._system.backend.account()
-            m = 0.0
-        else:
-            l, p, c = report.live_tasks, report.paused_tasks, report.cost
-            m = report.makespan_ms
-        live.append(l)
-        paused.append(p)
-        cost.append(round(c, 4))
-        makespan.append(round(m, 4))
-        # Checkpoint on event boundaries (not raw steps) so a restore
-        # resumes exactly at the next un-applied trace event.
-        if checkpoint_dir and (i + 1) % max(1, checkpoint_every) == 0:
-            session.checkpoint()
+    # close() even on a failing replay: it flushes background checkpoints
+    # and stops worker processes / shm session dirs (a crashed multiproc
+    # trace must not leak orphan workers into the CI runner)
+    try:
+        for i, _ in enumerate(replay(session, dags, todo)):
+            report = None
+            for _ in range(steps_per_event):
+                report = session.step()
+            if report is None:  # steps_per_event=0: account without stepping
+                l, p, c = session._system.backend.account()
+                m = 0.0
+            else:
+                l, p, c = report.live_tasks, report.paused_tasks, report.cost
+                m = report.makespan_ms
+            live.append(l)
+            paused.append(p)
+            cost.append(round(c, 4))
+            makespan.append(round(m, 4))
+            # Checkpoint on event boundaries (not raw steps) so a restore
+            # resumes exactly at the next un-applied trace event.
+            if checkpoint_dir and (i + 1) % max(1, checkpoint_every) == 0:
+                session.checkpoint()
+        backend_obj = session._system.backend
+        record_step_mode = backend_obj.step_mode
+        transport_name = getattr(getattr(backend_obj, "transport", None), "name", None)
+        workers_n = getattr(backend_obj, "n_workers", None)
+        backend_name = session.backend_name
+        strategy_name = session.strategy
+    finally:
+        session.close()
     return {
         "trace": spec,
-        "backend": session.backend_name,
-        "strategy": session.strategy,
-        "step_mode": session._system.backend.step_mode,
+        "backend": backend_name,
+        "strategy": strategy_name,
+        "step_mode": record_step_mode,
+        "transport": transport_name,
+        "workers": workers_n,
         "events": len(events),
         "events_applied": resumed_at + len(todo),
         "resumed_at_event": resumed_at,
@@ -285,6 +308,20 @@ def main(argv=None) -> int:
         help="thread-pool width for --step-mode concurrent on jit backends",
     )
     ap.add_argument(
+        "--transport", choices=("inproc", "shm", "tcp"), default=None,
+        help="stream transport for --trace (default: the backend's own; "
+        "multiproc defaults to shm)",
+    )
+    ap.add_argument(
+        "--workers", type=int, default=None,
+        help="worker-process pool size for --backend multiproc",
+    )
+    ap.add_argument(
+        "--checkpoint-background", action="store_true",
+        help="write checkpoints on a background thread (snapshot on the "
+        "stepping thread, encode/fsync/rename off-thread)",
+    )
+    ap.add_argument(
         "--max-events", type=int, default=None,
         help="stop the trace after N events (crash simulation / smoke)",
     )
@@ -307,10 +344,13 @@ def main(argv=None) -> int:
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=args.checkpoint_every,
             checkpoint_keep_last=args.checkpoint_keep_last,
+            checkpoint_background=args.checkpoint_background,
             restore=args.restore,
             max_events=args.max_events,
             step_mode=args.step_mode,
             max_workers=args.max_workers,
+            transport=args.transport,
+            workers=args.workers,
         )
         summary = {k: v for k, v in rec.items() if k != "series"}
         print(json.dumps(summary, indent=2))

@@ -36,6 +36,7 @@ from .backend import (
 from .scheduler import (
     TASKS_PER_WORKER,
     WORKERS_PER_NODE,
+    PlacedBackendMixin,
     Placement,
     PlacementPolicy,
     StragglerPolicy,
@@ -47,6 +48,18 @@ from .scheduler import (
     resolve_placement,
     run_ready_queue,
 )
+from .transport import (
+    InProcTransport,
+    ShmTransport,
+    TcpBrokerServer,
+    TcpTransport,
+    Transport,
+    TransportError,
+    available_transports,
+    connect_transport,
+    register_transport,
+    resolve_transport,
+)
 
 # name -> (module, attribute); resolved on first access to keep JAX lazy.
 _LAZY = {
@@ -55,7 +68,10 @@ _LAZY = {
     "DryRunBackend": ("repro.runtime.dryrun", "DryRunBackend"),
     "Executor": ("repro.runtime.executor", "Executor"),
     "InProcessJitBackend": ("repro.runtime.executor", "InProcessJitBackend"),
+    "MultiprocBackend": ("repro.runtime.worker", "MultiprocBackend"),
+    "RemoteSegment": ("repro.runtime.worker", "RemoteSegment"),
     "Segment": ("repro.runtime.segment", "Segment"),
+    "WorkerError": ("repro.runtime.worker", "WorkerError"),
     "build_segment": ("repro.runtime.segment", "build_segment"),
     "ShardedBackend": ("repro.runtime.sharded", "ShardedBackend"),
     "StreamSystem": ("repro.runtime.system", "StreamSystem"),
@@ -68,6 +84,7 @@ if TYPE_CHECKING:  # pragma: no cover - static imports for type checkers
     from .segment import Segment, build_segment
     from .sharded import ShardedBackend
     from .system import StreamSystem
+    from .worker import MultiprocBackend, RemoteSegment, WorkerError
 
 __all__ = [
     "BackendSnapshot",
@@ -79,32 +96,46 @@ __all__ = [
     "DryRunBackend",
     "ExecutionBackend",
     "Executor",
+    "InProcTransport",
     "InProcessJitBackend",
+    "MultiprocBackend",
     "PAUSE_EPSILON",
+    "PlacedBackendMixin",
     "Placement",
     "PlacementPolicy",
+    "RemoteSegment",
     "Segment",
     "SegmentSpec",
     "ShardedBackend",
+    "ShmTransport",
     "StepReport",
     "StragglerPolicy",
     "StreamSystem",
     "TASKS_PER_WORKER",
+    "TcpBrokerServer",
+    "TcpTransport",
+    "Transport",
+    "TransportError",
     "WORKERS_PER_NODE",
     "WaveEvent",
+    "WorkerError",
     "available_backends",
     "available_placements",
+    "available_transports",
     "build_segment",
     "compute_batches",
     "compute_waves",
+    "connect_transport",
     "decode_pytree",
     "encode_pytree",
     "is_checkpoint_path",
     "place_round_robin",
     "register_backend",
     "register_placement",
+    "register_transport",
     "resolve_backend",
     "resolve_placement",
+    "resolve_transport",
     "run_ready_queue",
     "topic_for",
 ]

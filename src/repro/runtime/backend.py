@@ -229,6 +229,9 @@ class ExecutionBackend:
         self.ewma_ms: Dict[str, float] = {}
         self.redispatches: List[Tuple[int, str]] = []
         self.reports: List[StepReport] = []
+        # state-leaf encoder used by dump_state/_dump_extra — swapped for a
+        # deferring marker during background-checkpoint snapshots
+        self._state_encoder: Callable[[Any], Any] = encode_pytree
 
     def configure_stepping(
         self,
@@ -251,7 +254,7 @@ class ExecutionBackend:
             self.step_mode = step_mode
         if max_workers is not None and max_workers != self.max_workers:
             self.max_workers = max_workers
-            self.close()  # resize on next concurrent step
+            self._reset_pool()  # resize on next concurrent step
         if on_wave is not None:
             self.on_wave = on_wave
         if report_history is not None:
@@ -396,13 +399,19 @@ class ExecutionBackend:
         finally:
             self._end_concurrent_step()
 
+    def _reset_pool(self) -> None:
+        """Drop the dispatch pool only (recreated lazily at the next
+        concurrent step) — the pool-resize half of :meth:`close`, safe to
+        call on a live backend."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
     def close(self) -> None:
         """Release stepping resources (the persistent dispatch pool).
 
         Idempotent; stepping after close() lazily recreates the pool."""
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
-            self._pool = None
+        self._reset_pool()
 
     def step(self) -> StepReport:
         t0 = time.perf_counter()
@@ -491,8 +500,17 @@ class ExecutionBackend:
             device_of=dict(getattr(self, "device_of", {})),
         )
 
+    def spawn_config(self) -> Dict[str, Any]:
+        """Constructor kwargs that reproduce this backend's topology.
+
+        Checkpoints persist this next to the backend name so a restore can
+        re-create the same data plane — transport kind, worker count,
+        placement policy — without the caller re-specifying it. Keys must
+        be JSON-safe and accepted by the backend's constructor."""
+        return {}
+
     # -- durability (checkpoint/restore verbs) ------------------------------------
-    def dump_state(self) -> Dict[str, Any]:
+    def dump_state(self, state_encoder: Optional[Callable[[Any], Any]] = None) -> Dict[str, Any]:
         """Serialize everything a restore needs to resume stepping exactly.
 
         The payload is backend-portable: segment specs carry each task's
@@ -502,7 +520,23 @@ class ExecutionBackend:
         extras (broker buffers, device maps) ride in ``extra`` via
         :meth:`_dump_extra` and are ignored by backends that don't know
         them, which is what makes inprocess ↔ dryrun cross-restores work.
+
+        ``state_encoder`` overrides how state leaves are serialized — the
+        background checkpointer passes a deferring marker so the cheap
+        snapshot happens on the stepping thread and the base64 encoding on
+        the writer thread (states are replaced wholesale each step, never
+        mutated in place, so captured references stay consistent).
         """
+        self._state_encoder = (
+            encode_pytree if state_encoder is None else state_encoder
+        )
+        try:
+            return self._dump_state_inner()
+        finally:
+            self._state_encoder = encode_pytree
+
+    def _dump_state_inner(self) -> Dict[str, Any]:
+        enc = self._state_encoder
         segments: List[Dict[str, Any]] = []
         for name, seg in sorted(
             self.segments.items(), key=lambda kv: kv[1].spec.created_at
@@ -524,7 +558,7 @@ class ExecutionBackend:
                         for t in spec.task_ids
                     },
                     "states": {
-                        t: encode_pytree(seg.states[t]) for t in spec.task_ids
+                        t: enc(seg.states[t]) for t in spec.task_ids
                     },
                     "steps_run": int(getattr(seg, "steps_run", 0)),
                 }
@@ -558,6 +592,10 @@ class ExecutionBackend:
         """
         if self.segments:
             raise ValueError("restore_state() needs a fresh backend (segments deployed)")
+        # Extras first: they carry transport buffers/counters and the
+        # checkpoint-time placement map — restore-time placement policies
+        # (sticky) consult the latter while the segments redeploy below.
+        self._restore_extra(state.get("extra", {}))
         for rec in sorted(state["segments"], key=lambda r: r["created_at"]):
             spec = SegmentSpec(
                 name=rec["name"],
@@ -588,7 +626,6 @@ class ExecutionBackend:
         if state.get("history_limit") is not None:
             self.history_limit = int(state["history_limit"])
             self.reports = [_decode_report(r) for r in state.get("reports", ())]
-        self._restore_extra(state.get("extra", {}))
 
     def _decode_init_states(
         self, spec: SegmentSpec, dataflow: Dataflow, states_enc: Dict[str, Any]
@@ -690,6 +727,7 @@ _LAZY_BUILTINS: Dict[str, Tuple[str, str]] = {
     "inprocess": ("repro.runtime.executor", "InProcessJitBackend"),
     "sharded": ("repro.runtime.sharded", "ShardedBackend"),
     "dryrun": ("repro.runtime.dryrun", "DryRunBackend"),
+    "multiproc": ("repro.runtime.worker", "MultiprocBackend"),
 }
 
 

@@ -37,7 +37,9 @@ import base64
 import hashlib
 import json
 import os
+import queue
 import re
+import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -116,6 +118,41 @@ def decode_pytree(x: Any) -> Any:
             return arr.copy()  # frombuffer views are read-only
         raise CheckpointError(f"unknown pytree node kind {kind!r}")
     raise CheckpointError(f"cannot decode state node of type {type(x).__name__}")
+
+
+class DeferredState:
+    """A state pytree captured but not yet encoded.
+
+    The background checkpointer snapshots on the stepping thread by
+    wrapping each segment's state values in this marker — a reference
+    capture, safe because backends replace state pytrees wholesale every
+    step and never mutate arrays in place — and the writer thread later
+    materializes them with :func:`encode_deferred`.
+    """
+
+    __slots__ = ("value",)
+
+    def __init__(self, value: Any):
+        self.value = value
+
+
+def deferred_encoder(value: Any) -> DeferredState:
+    """State encoder for snapshot-only dumps (see ``dump_state``)."""
+    return DeferredState(value)
+
+
+def encode_deferred(obj: Any) -> Any:
+    """Materialize every :class:`DeferredState` marker in a payload —
+    the writer-thread half of background checkpointing."""
+    if isinstance(obj, DeferredState):
+        return encode_pytree(obj.value)
+    if isinstance(obj, dict):
+        return {k: encode_deferred(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [encode_deferred(v) for v in obj]
+    if isinstance(obj, tuple):
+        return tuple(encode_deferred(v) for v in obj)
+    return obj
 
 
 def _canonical_json(payload: Dict[str, Any]) -> str:
@@ -311,6 +348,83 @@ class CheckpointStore:
         if found is None:
             raise CheckpointError(f"no valid checkpoint under {self.root!r}")
         return found[1]["payload"]
+
+
+class BackgroundCheckpointWriter:
+    """Single writer thread turning snapshot payloads into durable files.
+
+    With ``checkpoint_every=1`` on the synchronous path every step pays
+    the full encode + fsync + rename; this writer moves that off the
+    stepping thread — the stepping side only captures references
+    (:func:`deferred_encoder`), the writer encodes and saves in
+    submission order through the same :meth:`CheckpointStore.save`, so
+    atomicity / monotonic-id / torn-write semantics are unchanged. A
+    crash loses at most the checkpoints still queued — exactly the
+    window a slower synchronous cadence would never have written at all.
+
+    Writer-thread failures surface on the next :meth:`submit` /
+    :meth:`flush` (the stepping thread never blocks on them mid-step).
+    """
+
+    def __init__(self, store: CheckpointStore):
+        self.store = store
+        self._queue: "queue.Queue[Optional[Dict[str, Any]]]" = queue.Queue()
+        self._errors: List[BaseException] = []
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._closed = False
+
+    def _ensure_thread(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._run, name="repro-ckpt-writer", daemon=True
+            )
+            self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            item = self._queue.get()
+            try:
+                if item is None:
+                    return
+                self.store.save(encode_deferred(item))
+            except BaseException as e:  # noqa: BLE001 - reported on flush
+                with self._lock:
+                    self._errors.append(e)
+            finally:
+                self._queue.task_done()
+
+    def _raise_pending(self) -> None:
+        with self._lock:
+            if self._errors:
+                err = self._errors[:]
+                self._errors.clear()
+                raise CheckpointError(
+                    f"background checkpoint write failed: {err[0]!r}"
+                ) from err[0]
+
+    def submit(self, payload: Dict[str, Any]) -> None:
+        """Queue one snapshot payload for durable write (non-blocking)."""
+        if self._closed:
+            raise CheckpointError("checkpoint writer is closed")
+        self._raise_pending()
+        self._ensure_thread()
+        self._queue.put(payload)
+
+    def flush(self) -> None:
+        """Block until every queued checkpoint is durably on disk."""
+        self._queue.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._thread is not None and self._thread.is_alive():
+            self._queue.join()
+            self._queue.put(None)
+            self._thread.join(timeout=30)
+        self._raise_pending()
 
 
 def is_checkpoint_path(path: str) -> bool:

@@ -30,9 +30,10 @@ from .backend import (
     SegmentSpec,
     StepReport,
 )
-from .broker import Broker, topic_for
-from .checkpoint import decode_pytree, encode_pytree
+from .broker import topic_for
+from .checkpoint import decode_pytree
 from .segment import Segment, build_segment
+from .transport import Transport, resolve_transport
 
 __all__ = [
     "CORE_CALIBRATION",
@@ -45,7 +46,14 @@ __all__ = [
 
 class InProcessJitBackend(ExecutionBackend):
     """Today's Executor: one jit-compiled step function per segment, broker
-    topics between segments, device-resident task states."""
+    topics between segments, device-resident task states.
+
+    Boundary streams ride a pluggable :class:`~repro.runtime.transport.Transport`
+    (``transport=``): the default ``"inproc"`` is the zero-copy in-process
+    broker; ``"shm"`` / ``"tcp"`` move the same topics through shared
+    memory or sockets — the data plane's publish/fetch path is
+    transport-agnostic. ``self.broker`` stays as an alias for the
+    transport (pre-transport-API name)."""
 
     name = "inprocess"
 
@@ -55,6 +63,8 @@ class InProcessJitBackend(ExecutionBackend):
         ewma_alpha: float = 0.3,
         step_mode: str = "sync",
         max_workers: Optional[int] = None,
+        transport: Any = "inproc",
+        transport_options: Optional[Dict[str, Any]] = None,
     ):
         super().__init__(
             straggler_factor=straggler_factor,
@@ -62,7 +72,10 @@ class InProcessJitBackend(ExecutionBackend):
             step_mode=step_mode,
             max_workers=max_workers,
         )
-        self.broker = Broker()
+        self.transport: Transport = resolve_transport(
+            transport, **(transport_options or {})
+        )
+        self.broker = self.transport  # backwards-compatible alias
         # Per-topic sequence targets for the concurrent step in flight
         # (None outside one): each forwarding task publishes exactly once
         # per step, so a boundary read of this step must observe sequence
@@ -101,8 +114,11 @@ class InProcessJitBackend(ExecutionBackend):
         }
 
     def _begin_concurrent_step(self) -> None:
+        # one sequences() snapshot instead of a seq() per topic — on the
+        # tcp transport each seq() would be its own socket round-trip
+        seqs = self.transport.sequences()
         self._topic_target = {
-            topic_for(tid): self.broker.seq(topic_for(tid)) + 1
+            topic_for(tid): seqs.get(topic_for(tid), 0) + 1
             for name, tids in self.forwarding.items()
             if name in self.segments
             for tid in tids
@@ -153,29 +169,35 @@ class InProcessJitBackend(ExecutionBackend):
         return out
 
     def _dump_extra(self) -> Dict[str, Any]:
-        """Broker topic buffers + publish counters.
+        """Transport topic buffers + publish counters.
 
         Strictly, buffers are reconstructible (launch order is topological,
         so every boundary topic is re-published upstream within the first
         post-restore step before its consumer fetches it) — but persisting
-        them keeps a restored broker observable-identical, including for
+        them keeps a restored transport observable-identical, including for
         tooling that reads topics between steps.
         """
+        counters = self.transport.counters()
         return {
             "broker": {
-                topic: encode_pytree(batch)
-                for topic, batch in sorted(self.broker.topics().items())
+                topic: self._state_encoder(batch)
+                for topic, batch in sorted(self.transport.topics().items())
             },
-            "broker_bytes_published": int(self.broker.bytes_published),
-            "broker_publishes": int(self.broker.publishes),
+            "broker_bytes_published": int(counters["bytes_published"]),
+            "broker_publishes": int(counters["publishes"]),
         }
 
     def _restore_extra(self, extra: Dict[str, Any]) -> None:
         for topic, enc in extra.get("broker", {}).items():
-            self.broker.publish(topic, decode_pytree(enc))
+            self.transport.publish(topic, decode_pytree(enc))
         # publish() above bumped the counters; restore the checkpointed view
-        self.broker.bytes_published = int(extra.get("broker_bytes_published", 0))
-        self.broker.publishes = int(extra.get("broker_publishes", 0))
+        self.transport.restore_counters(
+            int(extra.get("broker_bytes_published", 0)),
+            int(extra.get("broker_publishes", 0)),
+        )
+
+    def spawn_config(self) -> Dict[str, Any]:
+        return {"transport": self.transport.name}
 
 
 def _conform_state(value: Any, template: Any) -> Any:

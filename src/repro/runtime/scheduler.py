@@ -32,6 +32,7 @@ from dataclasses import dataclass, field
 from typing import (
     TYPE_CHECKING,
     AbstractSet,
+    Any,
     Callable,
     Dict,
     List,
@@ -183,11 +184,16 @@ class PlacementPolicy:
 
     ``load`` maps device index → number of tasks currently placed there;
     policies may ignore it (round-robin) or balance on it (least-loaded).
-    ``ewma`` maps device index → summed EWMA step-time (ms) of the
-    segments currently placed there — the straggler tracker's view of how
-    slow each device actually is. Static policies ignore it; the
-    ``ewma_aware`` policy balances on it and migrates segments off slow
-    devices via :meth:`redispatch`.
+    ``ewma`` maps device index → aggregate EWMA step-time (ms) attributed
+    to each device — the straggler tracker's view of how slow each device
+    actually is (live segment EWMAs plus a time-decaying residual left by
+    migrated-away segments, so a device that just shed its straggler cools
+    gradually instead of instantly reading cold). Static policies ignore
+    it; the ``ewma_aware`` policy balances on it and migrates segments off
+    slow devices via :meth:`redispatch`. ``hints`` carries restore-time
+    context (see :class:`StickyPlacement`): backends pass it only to
+    policies whose ``assign`` declares the keyword, so older custom
+    policies keep working unchanged.
     """
 
     name: str = ""
@@ -198,6 +204,7 @@ class PlacementPolicy:
         n_devices: int,
         load: Dict[int, int],
         ewma: Optional[Dict[int, float]] = None,
+        hints: Optional[Dict[str, Any]] = None,
     ) -> int:
         raise NotImplementedError
 
@@ -262,6 +269,7 @@ class RoundRobinPlacement(PlacementPolicy):
         n_devices: int,
         load: Dict[int, int],
         ewma: Optional[Dict[int, float]] = None,
+        hints: Optional[Dict[str, Any]] = None,
     ) -> int:
         idx = self._next % n_devices
         self._next += 1
@@ -280,6 +288,7 @@ class LeastLoadedPlacement(PlacementPolicy):
         n_devices: int,
         load: Dict[int, int],
         ewma: Optional[Dict[int, float]] = None,
+        hints: Optional[Dict[str, Any]] = None,
     ) -> int:
         return min(range(n_devices), key=lambda i: (load.get(i, 0), i))
 
@@ -293,10 +302,21 @@ class EwmaAwarePlacement(PlacementPolicy):
     (ROADMAP: backend-aware placement). New segments land on the device
     with the least observed work, and :meth:`redispatch` migrates a
     flagged straggler to the lightest *other* device — hot segments move
-    off slow devices instead of being re-queued in place.
+    off slow devices instead of being re-queued in place — but only when
+    that device is *substantially* cooler (``improvement`` fraction of the
+    source's pressure). Paired with the time-decaying device aggregates
+    (a device that just shed a straggler stays warm for a few steps), the
+    threshold is what damps ping-pong migrations: right after a
+    migration the old device still reads hot, so an immediately re-flagged
+    segment stays put instead of bouncing straight back.
     """
 
     name = "ewma_aware"
+
+    def __init__(self, improvement: float = 0.5):
+        if not 0.0 < improvement <= 1.0:
+            raise ValueError(f"improvement must be in (0, 1], got {improvement}")
+        self.improvement = improvement
 
     @staticmethod
     def _pressure(i: int, load: Dict[int, int], ewma: Optional[Dict[int, float]]):
@@ -309,6 +329,7 @@ class EwmaAwarePlacement(PlacementPolicy):
         n_devices: int,
         load: Dict[int, int],
         ewma: Optional[Dict[int, float]] = None,
+        hints: Optional[Dict[str, Any]] = None,
     ) -> int:
         return min(range(n_devices), key=lambda i: self._pressure(i, load, ewma))
 
@@ -322,10 +343,194 @@ class EwmaAwarePlacement(PlacementPolicy):
     ) -> int:
         if n_devices < 2:
             return current
-        return min(
+        best = min(
             (i for i in range(n_devices) if i != current),
             key=lambda i: self._pressure(i, load, ewma),
         )
+        e = ewma or {}
+        cur_p = e.get(current, 0.0)
+        if cur_p > 0.0 and e.get(best, 0.0) >= self.improvement * cur_p:
+            return current  # destination barely cooler — migration won't pay
+        return best
+
+
+@register_placement
+class StickyPlacement(PlacementPolicy):
+    """Restore-time placement hints (ROADMAP): re-place each restored
+    segment on the device it occupied *at checkpoint time* whenever the
+    device pool still matches, preserving cache locality across restarts.
+
+    The checkpointed map arrives through ``hints`` —
+    ``checkpoint_device_of`` (segment → device index) and
+    ``checkpoint_n_devices`` — which sharded/multiproc backends populate
+    from the restored payload. Segments without a hint (new deployments,
+    or a pool-size mismatch meaning the indices no longer name the same
+    hardware) fall back to :class:`EwmaAwarePlacement`, as does straggler
+    redispatch — stickiness pins the *starting* placement, it never traps
+    a straggler.
+    """
+
+    name = "sticky"
+
+    def __init__(self) -> None:
+        self._fallback = EwmaAwarePlacement()
+
+    def assign(
+        self,
+        spec: "SegmentSpec",
+        n_devices: int,
+        load: Dict[int, int],
+        ewma: Optional[Dict[int, float]] = None,
+        hints: Optional[Dict[str, Any]] = None,
+    ) -> int:
+        h = hints or {}
+        pinned = (h.get("checkpoint_device_of") or {}).get(spec.name)
+        if (
+            pinned is not None
+            and h.get("checkpoint_n_devices") == n_devices
+            and 0 <= int(pinned) < n_devices
+        ):
+            return int(pinned)
+        return self._fallback.assign(spec, n_devices, load, ewma=ewma)
+
+    def redispatch(
+        self,
+        spec: "SegmentSpec",
+        current: int,
+        n_devices: int,
+        load: Dict[int, int],
+        ewma: Optional[Dict[int, float]] = None,
+    ) -> int:
+        return self._fallback.redispatch(spec, current, n_devices, load, ewma=ewma)
+
+
+# -- shared placement bookkeeping (sharded devices / multiproc workers) ----------
+
+
+class PlacedBackendMixin:
+    """Placement bookkeeping for backends that pin each segment to one slot
+    of a pool — ``jax.devices()`` on the sharded backend, worker processes
+    on the multiproc backend. Mixed into an ``ExecutionBackend`` subclass;
+    the concrete backend implements :meth:`_n_slots` (pool size) and
+    :meth:`_move_segment` (the actual state migration) and calls
+    :meth:`_init_placement` from its constructor.
+
+    Provides the EWMA feedback loop shared by both pools:
+
+      * ``device_ewma()`` — per-slot aggregate of live segment EWMAs *plus*
+        a residual left behind by migrated-away segments that decays by
+        ``ewma_decay`` per step toward 0 (ROADMAP "EWMA decay on idle
+        devices"): a slot that just shed its straggler stays warm for a few
+        steps instead of instantly reading cold, which — combined with
+        :class:`EwmaAwarePlacement`'s improvement threshold — prevents
+        ping-pong migrations under bursty load;
+      * ``redispatch()`` — consults the policy with the flagged segment's
+        own EWMA re-attributed to its current slot (the base tracker resets
+        it first), migrates via :meth:`_move_segment` when the policy picks
+        a different slot, and credits the residual;
+      * restore-time hints — ``device_of_at_checkpoint`` and the
+        checkpointed pool size flow to policies that accept ``hints``
+        (:class:`StickyPlacement`).
+    """
+
+    def _init_placement(
+        self,
+        policy: Union[str, "PlacementPolicy"],
+        ewma_decay: float = 0.6,
+    ) -> None:
+        import inspect
+
+        self.policy = resolve_placement(policy)
+        self.device_of: Dict[str, int] = {}  # segment name -> slot index
+        # checkpoint-time placement of the backend we restored from (if
+        # any); informational unless the policy is hint-aware (sticky).
+        self.device_of_at_checkpoint: Dict[str, int] = {}
+        self._n_slots_at_checkpoint: Optional[int] = None
+        if not 0.0 <= ewma_decay < 1.0:
+            raise ValueError(f"ewma_decay must be in [0, 1), got {ewma_decay}")
+        self.ewma_decay = ewma_decay
+        self._ewma_residual: Dict[int, float] = {}
+        # pass hints only to policies that declare the keyword, so custom
+        # pre-hints PlacementPolicy subclasses keep working unchanged
+        self._policy_takes_hints = (
+            "hints" in inspect.signature(self.policy.assign).parameters
+        )
+
+    def _n_slots(self) -> int:
+        raise NotImplementedError
+
+    def _move_segment(self, seg: Any, old: int, new: int) -> None:
+        raise NotImplementedError
+
+    # -- aggregates ------------------------------------------------------------
+    def device_load(self) -> Dict[int, int]:
+        """Slot index → deployed task count (paused tasks occupy slots)."""
+        load: Dict[int, int] = {}
+        for name, seg in self.segments.items():
+            idx = self.device_of[name]
+            load[idx] = load.get(idx, 0) + len(seg.spec.task_ids)
+        return load
+
+    def device_ewma(self) -> Dict[int, float]:
+        """Slot index → live segment EWMA sum + decaying migration residual."""
+        ewma: Dict[int, float] = {
+            idx: r for idx, r in self._ewma_residual.items() if r > 0.0
+        }
+        for name, ms in self.ewma_ms.items():
+            idx = self.device_of.get(name)
+            if idx is not None:
+                ewma[idx] = ewma.get(idx, 0.0) + ms
+        return ewma
+
+    def _update_stragglers(self, seg_ms: Dict[str, float]) -> List[str]:
+        # decay first: residuals cool one notch per step, then migrations
+        # triggered by *this* step's flags credit fresh (undecayed) heat
+        self._ewma_residual = {
+            idx: r * self.ewma_decay
+            for idx, r in self._ewma_residual.items()
+            if r * self.ewma_decay > 1e-9
+        }
+        return super()._update_stragglers(seg_ms)
+
+    # -- policy calls ----------------------------------------------------------
+    def _assign_slot(self, spec: "SegmentSpec") -> int:
+        kwargs: Dict[str, Any] = {"ewma": self.device_ewma()}
+        if self._policy_takes_hints:
+            kwargs["hints"] = {
+                "checkpoint_device_of": self.device_of_at_checkpoint,
+                "checkpoint_n_devices": self._n_slots_at_checkpoint,
+            }
+        idx = self.policy.assign(spec, self._n_slots(), self.device_load(), **kwargs)
+        self.device_of[spec.name] = idx
+        return idx
+
+    def kill(self, segment_name: str) -> None:
+        super().kill(segment_name)
+        self.device_of.pop(segment_name, None)
+
+    def redispatch(self, segment_name: str) -> None:
+        """Straggler mitigation with teeth: consult the placement policy for
+        a new slot and migrate the segment's states there. Static policies
+        keep the stay-put behavior via the default ``redispatch`` hook."""
+        seg_ew = self.ewma_ms.get(segment_name, 0.0)
+        super().redispatch(segment_name)  # record + reset the EWMA
+        seg = self.segments.get(segment_name)
+        current = self.device_of.get(segment_name)
+        if seg is None or current is None:
+            return
+        # the flagged segment's own EWMA was just reset — re-attribute it to
+        # its current slot so the policy sees the pressure behind the flag
+        ewma = self.device_ewma()
+        ewma[current] = ewma.get(current, 0.0) + seg_ew
+        new = self.policy.redispatch(
+            seg.spec, current, self._n_slots(), self.device_load(), ewma=ewma
+        )
+        if new != current and 0 <= new < self._n_slots():
+            self._move_segment(seg, current, new)
+            self.device_of[segment_name] = new
+            self._ewma_residual[current] = (
+                self._ewma_residual.get(current, 0.0) + seg_ew
+            )
 
 
 @dataclass

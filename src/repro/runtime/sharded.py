@@ -3,10 +3,15 @@
 Each segment is pinned to one device by a pluggable
 :class:`~repro.runtime.scheduler.PlacementPolicy` (round-robin by default —
 the Storm scheme generalized from worker slots to devices). A segment's
-task states live on its device; boundary batches fetched from the broker
+task states live on its device; boundary batches fetched from the transport
 are moved to the consuming segment's device before the jitted step, so
 cross-device streams pay exactly one transfer per hop — the device-mesh
 analogue of the paper's broker indirection.
+
+Placement bookkeeping (slot map, EWMA device aggregates with idle decay,
+policy-driven straggler migration, restore-time sticky hints) is shared
+with the multiproc backend via
+:class:`~repro.runtime.scheduler.PlacedBackendMixin`.
 
 On a single-device host this degenerates to :class:`InProcessJitBackend`
 with placement bookkeeping (useful in CI); with
@@ -23,11 +28,11 @@ from repro.core.graph import Dataflow
 
 from .backend import SegmentSpec
 from .executor import InProcessJitBackend
-from .scheduler import PlacementPolicy, resolve_placement
+from .scheduler import PlacedBackendMixin, PlacementPolicy
 from .segment import Segment
 
 
-class ShardedBackend(InProcessJitBackend):
+class ShardedBackend(PlacedBackendMixin, InProcessJitBackend):
     name = "sharded"
 
     def __init__(
@@ -36,44 +41,35 @@ class ShardedBackend(InProcessJitBackend):
         devices: Optional[Sequence[Any]] = None,
         straggler_factor: float = 3.0,
         ewma_alpha: float = 0.3,
+        ewma_decay: float = 0.6,
         step_mode: str = "sync",
         max_workers: Optional[int] = None,
+        transport: Any = "inproc",
+        transport_options: Optional[Dict[str, Any]] = None,
     ):
         super().__init__(
             straggler_factor=straggler_factor,
             ewma_alpha=ewma_alpha,
             step_mode=step_mode,
             max_workers=max_workers,
+            transport=transport,
+            transport_options=transport_options,
         )
         self.devices: List[Any] = list(devices) if devices is not None else list(jax.devices())
         if not self.devices:
             raise ValueError("ShardedBackend needs at least one device")
-        self.policy = resolve_placement(placement)
-        self.device_of: Dict[str, int] = {}  # segment name -> device index
-        # checkpoint-time placement of the backend we restored from (if any);
-        # informational — restore re-places via the PlacementPolicy, since
-        # the restoring host may have a different device pool.
-        self.device_of_at_checkpoint: Dict[str, int] = {}
+        self._init_placement(placement, ewma_decay=ewma_decay)
 
-    # -- placement --------------------------------------------------------------
-    def device_load(self) -> Dict[int, int]:
-        """Device index → deployed task count (paused tasks occupy slots)."""
-        load: Dict[int, int] = {}
-        for name, seg in self.segments.items():
-            idx = self.device_of[name]
-            load[idx] = load.get(idx, 0) + len(seg.spec.task_ids)
-        return load
+    # -- placement hooks (PlacedBackendMixin) -----------------------------------
+    def _n_slots(self) -> int:
+        return len(self.devices)
 
-    def device_ewma(self) -> Dict[int, float]:
-        """Device index → summed EWMA step-time (ms) of its segments — the
-        straggler tracker's measured view of device pressure, fed to the
-        placement policy on assign *and* redispatch."""
-        ewma: Dict[int, float] = {}
-        for name, ms in self.ewma_ms.items():
-            idx = self.device_of.get(name)
-            if idx is not None:
-                ewma[idx] = ewma.get(idx, 0.0) + ms
-        return ewma
+    def _move_segment(self, seg: Segment, old: int, new: int) -> None:
+        """Migrate a segment's buffers: the compiled executable is
+        device-agnostic; only task states move."""
+        dev = self.devices[new]
+        seg.states = jax.device_put(seg.states, dev)
+        seg.active = jax.device_put(seg.active, dev)
 
     def _build(
         self,
@@ -82,42 +78,11 @@ class ShardedBackend(InProcessJitBackend):
         init_states: Optional[Dict[str, Any]],
     ) -> Segment:
         seg = super()._build(spec, dataflow, init_states)
-        idx = self.policy.assign(
-            spec, len(self.devices), self.device_load(), ewma=self.device_ewma()
-        )
-        self.device_of[spec.name] = idx
+        idx = self._assign_slot(spec)
         dev = self.devices[idx]
         seg.states = jax.device_put(seg.states, dev)
         seg.active = jax.device_put(seg.active, dev)
         return seg
-
-    def kill(self, segment_name: str) -> None:
-        super().kill(segment_name)
-        self.device_of.pop(segment_name, None)
-
-    def redispatch(self, segment_name: str) -> None:
-        """Straggler mitigation with teeth: consult the placement policy for
-        a new device and *migrate* the segment's states there (the compiled
-        executable is device-agnostic; only buffers move). Static policies
-        keep the old stay-put behavior via the default ``redispatch`` hook.
-        """
-        super().redispatch(segment_name)  # record + reset the EWMA
-        seg = self.segments.get(segment_name)
-        current = self.device_of.get(segment_name)
-        if seg is None or current is None:
-            return
-        new = self.policy.redispatch(
-            seg.spec,
-            current,
-            len(self.devices),
-            self.device_load(),
-            ewma=self.device_ewma(),
-        )
-        if new != current and 0 <= new < len(self.devices):
-            dev = self.devices[new]
-            seg.states = jax.device_put(seg.states, dev)
-            seg.active = jax.device_put(seg.active, dev)
-            self.device_of[segment_name] = new
 
     def _fetch_inputs(self, seg: Segment) -> Dict[str, Any]:
         """Move boundary batches onto the consuming segment's device (one
@@ -133,6 +98,7 @@ class ShardedBackend(InProcessJitBackend):
     def _dump_extra(self) -> Dict[str, Any]:
         extra = super()._dump_extra()
         extra["device_of"] = {name: int(i) for name, i in self.device_of.items()}
+        extra["n_devices"] = len(self.devices)
         return extra
 
     def _restore_extra(self, extra: Dict[str, Any]) -> None:
@@ -140,3 +106,11 @@ class ShardedBackend(InProcessJitBackend):
         self.device_of_at_checkpoint = {
             name: int(i) for name, i in extra.get("device_of", {}).items()
         }
+        if extra.get("n_devices") is not None:
+            self._n_slots_at_checkpoint = int(extra["n_devices"])
+
+    def spawn_config(self) -> Dict[str, Any]:
+        cfg = super().spawn_config()
+        if getattr(self.policy, "name", ""):
+            cfg["placement"] = self.policy.name
+        return cfg

@@ -45,7 +45,7 @@ from .backend import (
     compute_batches,
     resolve_backend,
 )
-from .checkpoint import CheckpointStore
+from .checkpoint import BackgroundCheckpointWriter, CheckpointStore, deferred_encoder
 from .scheduler import Placement, place_round_robin
 
 
@@ -60,15 +60,34 @@ class StreamSystem:
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: Optional[int] = None,
         checkpoint_keep_last: Optional[int] = None,
+        checkpoint_background: bool = False,
         step_mode: Optional[str] = None,
         max_workers: Optional[int] = None,
         on_wave: Optional[Any] = None,
         report_history: Optional[int] = None,
+        transport: Optional[Any] = None,
+        workers: Optional[int] = None,
+        backend_options: Optional[Dict[str, Any]] = None,
     ):
         self.manager = ReuseManager(
             strategy=strategy, check_invariants=check_invariants, journal_path=journal_path
         )
-        self.backend = resolve_backend(backend)
+        # Backend construction knobs: `transport=` picks the stream
+        # transport ("inproc"/"shm"/"tcp"), `workers=` sizes the multiproc
+        # worker pool; anything else rides in backend_options. They apply
+        # when the backend is named (or a class) — a pre-built instance
+        # already made those choices.
+        options: Dict[str, Any] = dict(backend_options or {})
+        if transport is not None:
+            options["transport"] = transport
+        if workers is not None:
+            options["workers"] = workers
+        if options and isinstance(backend, ExecutionBackend):
+            raise ValueError(
+                "transport=/workers=/backend_options= need a backend name or "
+                "class — a backend instance is already constructed"
+            )
+        self.backend = resolve_backend(backend, **options)
         self.backend.configure_stepping(
             step_mode=step_mode,
             max_workers=max_workers,
@@ -86,10 +105,17 @@ class StreamSystem:
             else None
         )
         self.checkpoint_every = checkpoint_every
+        # Background checkpointing: the auto-cadence snapshots on the
+        # stepping thread (reference capture) and encodes/fsyncs/renames on
+        # a writer thread, so checkpoint_every=1 no longer pauses stepping.
+        self.checkpoint_background = bool(checkpoint_background)
+        self._ckpt_writer: Optional[BackgroundCheckpointWriter] = None
         if checkpoint_every and not checkpoint_dir:
             raise ValueError("checkpoint_every needs a checkpoint_dir")
         if checkpoint_keep_last and not checkpoint_dir:
             raise ValueError("checkpoint_keep_last needs a checkpoint_dir")
+        if checkpoint_background and not checkpoint_dir:
+            raise ValueError("checkpoint_background needs a checkpoint_dir")
 
     @property
     def executor(self) -> ExecutionBackend:
@@ -219,7 +245,10 @@ class StreamSystem:
             and self.checkpoint_store is not None
             and self.backend.step_count % self.checkpoint_every == 0
         ):
-            self.checkpoint()
+            if self.checkpoint_background:
+                self._checkpoint_async()
+            else:
+                self.checkpoint()
         return report
 
     def run(self, steps: int) -> List[StepReport]:
@@ -227,14 +256,20 @@ class StreamSystem:
         return [self.step() for _ in range(steps)]
 
     # -- durability (full-system checkpoint/restore) --------------------------------
-    def checkpoint_payload(self) -> Dict[str, Any]:
+    def checkpoint_payload(self, state_encoder: Optional[Any] = None) -> Dict[str, Any]:
         """The full durable state: control-plane journal + data-plane dump.
 
         Deterministic for a given system state (no wall-clock stamps — the
         envelope written by :class:`CheckpointStore` carries those), which
-        is what makes ``payload → restore → payload`` a fixed point."""
+        is what makes ``payload → restore → payload`` a fixed point.
+        ``state_encoder`` is forwarded to the backend dump — the background
+        checkpointer passes the deferring marker encoder."""
         return {
             "backend": self.backend.name or type(self.backend).__name__,
+            # constructor kwargs reproducing the data-plane topology
+            # (transport kind, worker count, placement) for re-spawn on
+            # restore; applied when restoring onto the same backend name
+            "backend_config": self.backend.spawn_config(),
             "strategy": self.manager.strategy,
             "journal": list(self.manager.journal),
             "base_batch": int(self.base_batch),
@@ -243,16 +278,31 @@ class StreamSystem:
             "segments_of": {n: list(segs) for n, segs in self._segments_of.items()},
             "checkpoint_every": self.checkpoint_every,
             "checkpoint_keep_last": self.checkpoint_keep_last,
+            "checkpoint_background": self.checkpoint_background,
             # Stepping-pipeline config rides along so a restore lands in the
             # same mode by default; the segment dependency DAG itself is
             # derived state and is rebuilt by redeploy, never persisted.
             "step_mode": self.backend.step_mode,
             "max_workers": self.backend.max_workers,
-            "data": self.backend.dump_state(),
+            "data": self.backend.dump_state(state_encoder),
         }
 
+    def _checkpoint_async(self) -> None:
+        """Queue a snapshot for the writer thread (auto-cadence path)."""
+        if self._ckpt_writer is None:
+            self._ckpt_writer = BackgroundCheckpointWriter(self.checkpoint_store)
+        self._ckpt_writer.submit(self.checkpoint_payload(deferred_encoder))
+
+    def flush_checkpoints(self) -> None:
+        """Block until queued background checkpoints are durably on disk."""
+        if self._ckpt_writer is not None:
+            self._ckpt_writer.flush()
+
     def checkpoint(self, checkpoint_dir: Optional[str] = None) -> str:
-        """Write one durable checkpoint; returns its path."""
+        """Write one durable checkpoint synchronously; returns its path.
+
+        Queued background checkpoints are flushed first so ids on disk
+        stay chronological."""
         store = (
             CheckpointStore(checkpoint_dir, keep_last=self.checkpoint_keep_last)
             if checkpoint_dir
@@ -262,6 +312,7 @@ class StreamSystem:
             raise ValueError(
                 "no checkpoint_dir configured — pass one to checkpoint() or the constructor"
             )
+        self.flush_checkpoints()
         return store.save(self.checkpoint_payload())
 
     @classmethod
@@ -272,11 +323,15 @@ class StreamSystem:
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: Optional[int] = None,
         checkpoint_keep_last: Optional[int] = None,
+        checkpoint_background: Optional[bool] = None,
         step_mode: Optional[str] = None,
         max_workers: Optional[int] = None,
         on_wave: Optional[Any] = None,
         journal_path: Optional[str] = None,
         check_invariants: bool = False,
+        transport: Optional[Any] = None,
+        workers: Optional[int] = None,
+        backend_options: Optional[Dict[str, Any]] = None,
     ) -> "StreamSystem":
         """Reconstruct a full system from a checkpoint payload.
 
@@ -295,11 +350,31 @@ class StreamSystem:
             journal_path=journal_path,
         )
         mgr.check_invariants = check_invariants
+        target = backend if backend is not None else payload["backend"]
+        # Re-spawn the checkpointed data-plane topology (transport kind,
+        # worker pool, placement) when restoring onto the same backend
+        # name; explicit transport=/workers=/backend_options= override it,
+        # and a cross-backend restore starts from that backend's defaults.
+        options: Dict[str, Any] = {}
+        if isinstance(target, str) and target == payload.get("backend"):
+            options.update(payload.get("backend_config") or {})
+        if backend_options:
+            options.update(backend_options)
+        if transport is not None:
+            options["transport"] = transport
+        if workers is not None:
+            options["workers"] = workers
         system = cls(
             strategy=payload["strategy"],
             base_batch=int(payload["base_batch"]),
-            backend=backend if backend is not None else payload["backend"],
+            backend=target,
+            backend_options=options or None,
             checkpoint_dir=checkpoint_dir,
+            checkpoint_background=(
+                checkpoint_background
+                if checkpoint_background is not None
+                else (bool(payload.get("checkpoint_background", False)) and bool(checkpoint_dir))
+            ),
         )
         # The cadence/retention survive the restore even when no
         # checkpoint_dir is configured yet (step() only auto-checkpoints
@@ -339,11 +414,15 @@ class StreamSystem:
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: Optional[int] = None,
         checkpoint_keep_last: Optional[int] = None,
+        checkpoint_background: Optional[bool] = None,
         step_mode: Optional[str] = None,
         max_workers: Optional[int] = None,
         on_wave: Optional[Any] = None,
         journal_path: Optional[str] = None,
         check_invariants: bool = False,
+        transport: Optional[Any] = None,
+        workers: Optional[int] = None,
+        backend_options: Optional[Dict[str, Any]] = None,
     ) -> "StreamSystem":
         """Restore from ``path`` — a checkpoint directory (newest valid
         checkpoint wins; torn last checkpoints are skipped) or one concrete
@@ -363,18 +442,27 @@ class StreamSystem:
             checkpoint_dir=checkpoint_dir or default_dir,
             checkpoint_every=checkpoint_every,
             checkpoint_keep_last=checkpoint_keep_last,
+            checkpoint_background=checkpoint_background,
             step_mode=step_mode,
             max_workers=max_workers,
             on_wave=on_wave,
             journal_path=journal_path,
             check_invariants=check_invariants,
+            transport=transport,
+            workers=workers,
+            backend_options=backend_options,
         )
 
     def close(self) -> None:
-        """Release data-plane resources (the backend's dispatch pool).
+        """Release data-plane resources: flush queued background
+        checkpoints, then close the backend (dispatch pool; for the
+        multiproc backend also the worker pool and transport).
 
-        Idempotent; the system remains usable — stepping recreates what
-        it needs lazily."""
+        Idempotent; single-process systems remain usable — stepping
+        recreates what they need lazily."""
+        if self._ckpt_writer is not None:
+            self._ckpt_writer.close()
+            self._ckpt_writer = None
         self.backend.close()
 
     # -- observability ----------------------------------------------------------------

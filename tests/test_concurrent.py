@@ -922,3 +922,197 @@ class TestWaveObserversAndKnobs:
         for _ in range(3):
             sys_.step()
         assert _sink_counts(sys_) == base_counts
+
+
+# -- satellites: EWMA idle-device decay + sticky restore placement ---------------
+
+
+class _FakePlacedBackend:
+    """Built lazily in tests: PlacedBackendMixin over the dry-run backend
+    with synthetic per-segment step times — deterministic EWMA dynamics,
+    no jit compiles, no worker processes."""
+
+    @staticmethod
+    def make(n_slots=2, ewma_decay=0.6, seg_ms=None, placement="ewma_aware"):
+        from repro.runtime.dryrun import DryRunBackend
+        from repro.runtime.scheduler import PlacedBackendMixin
+
+        class Fake(PlacedBackendMixin, DryRunBackend):
+            concurrent_dispatch = False
+
+            def __init__(self):
+                super().__init__()
+                self._n = n_slots
+                self._init_placement(placement, ewma_decay=ewma_decay)
+                self.moves = []
+                self.seg_ms_of = dict(seg_ms or {})
+
+            def _n_slots(self):
+                return self._n
+
+            def _move_segment(self, seg, old, new):
+                self.moves.append((seg.name, old, new))
+
+            def _build(self, spec, dataflow, init_states):
+                seg = super()._build(spec, dataflow, init_states)
+                self._assign_slot(spec)
+                return seg
+
+            def _step_one(self, seg):
+                super()._step_one(seg)
+                # synthetic speeds keyed by launch order (created_at) — the
+                # minted segment/DAG names vary with the control plane
+                return self.seg_ms_of.get(seg.spec.created_at, 2.0)
+
+        return Fake()
+
+
+def _deploy_chains(backend, n=4):
+    system = StreamSystem(strategy="none", backend=backend)
+    for i in range(n):
+        system.submit(chain_df(f"S{i}", "urban", [("kalman", {"q": float(i)})]))
+    return system
+
+
+class TestEwmaIdleDecay:
+    def test_residual_heat_decays_toward_zero_on_idle_device(self):
+        """ROADMAP satellite: a device that received no steps (its straggler
+        migrated away) cools by ewma_decay per step instead of reading
+        stale-hot (or instantly cold) forever."""
+        be = _FakePlacedBackend.make(ewma_decay=0.5, seg_ms={0: 200.0})
+        sys_ = _deploy_chains(be, n=4)  # launch 0/2 -> slot 0, 1/3 -> slot 1
+        sys_.step()  # victim flagged (3 fast peers keep the median low), migrated
+        assert be.moves and be.moves[0][1] == 0
+        first = be.device_ewma().get(0, 0.0)
+        assert first > 0.0  # residual heat left behind
+        be.seg_ms_of[0] = 2.0  # device-caused straggler: cured by migration
+        decayed = []
+        for _ in range(6):
+            sys_.step()
+            decayed.append(be.device_ewma().get(0, 0.0))
+        assert all(b <= a for a, b in zip(decayed, decayed[1:]))
+        assert decayed[-1] < 0.1 * first  # → 0, not stale-hot
+        sys_.close()
+
+    def test_ewma_decay_validation(self):
+        with pytest.raises(ValueError, match="ewma_decay"):
+            _FakePlacedBackend.make(ewma_decay=1.0)
+
+    def test_pingpong_migrations_damped(self):
+        """The regression the satellite names: a segment-caused straggler on
+        2 devices. Without decay the residual vanishes instantly, the old
+        device always reads cold, and every flag bounces the segment back;
+        with decay the source stays warm and the segment holds position."""
+        runs = {}
+        for decay in (0.0, 0.9):
+            be = _FakePlacedBackend.make(ewma_decay=decay, seg_ms={0: 200.0})
+            sys_ = _deploy_chains(be, n=4)
+            for _ in range(6):
+                sys_.step()
+            runs[decay] = list(be.moves)
+            sys_.close()
+        legacy, damped = runs[0.0], runs[0.9]
+        assert len(legacy) >= 3  # ping-pong: migrates on (almost) every flag
+        assert len(damped) == 1  # one migration, then holds
+        # and specifically no immediate bounce-back right after migrating
+        assert not any(
+            a[0] == b[0] and a[2] == b[1] and b[2] == a[1]
+            for a, b in zip(damped, damped[1:])
+        )
+
+    def test_redispatch_improvement_threshold_policy_level(self):
+        p = EwmaAwarePlacement()
+        # destination retains decayed residual heat -> not substantially
+        # cooler -> stay put (the anti-ping-pong half)
+        assert p.redispatch(None, current=1, n_devices=2,
+                            load={0: 5, 1: 5},
+                            ewma={0: 120.0, 1: 202.0}) == 1
+        # residual has decayed -> migration pays again
+        assert p.redispatch(None, current=1, n_devices=2,
+                            load={0: 5, 1: 5},
+                            ewma={0: 10.0, 1: 202.0}) == 0
+        with pytest.raises(ValueError, match="improvement"):
+            EwmaAwarePlacement(improvement=0.0)
+
+
+class TestStickyPlacement:
+    def _spec(self, name):
+        from repro.runtime.backend import SegmentSpec
+
+        return SegmentSpec(name=name, dag_name="d", task_ids=[f"{name}.t"],
+                           parents={f"{name}.t": []}, publish=set(),
+                           batch_of={f"{name}.t": 32})
+
+    def test_registered(self):
+        assert resolve_placement("sticky").name == "sticky"
+
+    def test_pins_when_pool_matches(self):
+        p = resolve_placement("sticky")
+        hints = {"checkpoint_device_of": {"segA": 3}, "checkpoint_n_devices": 4}
+        assert p.assign(self._spec("segA"), 4, load={}, hints=hints) == 3
+
+    def test_falls_back_without_hint_or_on_pool_mismatch(self):
+        p = resolve_placement("sticky")
+        # no hint for this segment -> ewma_aware fallback (least pressure)
+        hints = {"checkpoint_device_of": {"other": 1}, "checkpoint_n_devices": 2}
+        assert p.assign(self._spec("segB"), 2, load={0: 4},
+                        ewma={0: 9.0}, hints=hints) == 1
+        # pool size changed -> indices no longer name the same hardware
+        hints = {"checkpoint_device_of": {"segB": 1}, "checkpoint_n_devices": 4}
+        assert p.assign(self._spec("segB"), 2, load={0: 4},
+                        ewma={0: 9.0}, hints=hints) == 1  # via fallback
+        hints = {"checkpoint_device_of": {"segB": 5}, "checkpoint_n_devices": 2}
+        assert p.assign(self._spec("segB"), 2, load={}, hints=hints) in (0, 1)
+
+    def test_redispatch_delegates_to_fallback(self):
+        p = resolve_placement("sticky")
+        assert p.redispatch(None, current=0, n_devices=3,
+                            load={}, ewma={0: 100.0, 1: 9.0, 2: 4.0}) == 2
+
+    def test_sharded_restore_repins_devices(self):
+        """Integration: a sharded checkpoint restored with placement="sticky"
+        lands every segment back on its checkpointed device, even where the
+        ewma_aware fallback would have chosen differently."""
+        import jax
+
+        from repro.runtime.sharded import ShardedBackend
+
+        cpu = jax.devices()[0]
+        be = ShardedBackend(devices=[cpu, cpu])
+        sys_ = StreamSystem(strategy="none", backend=be)
+        for i in range(3):
+            sys_.submit(chain_df(f"S{i}", "urban", [("kalman", {"q": float(i)})]))
+        sys_.run(2)
+        # force a map the fallback would never produce for in-order deploys
+        pinned = {name: 1 - idx for name, idx in be.device_of.items()}
+        be.device_of = pinned
+        payload = sys_.checkpoint_payload()
+        sys_.close()
+
+        be2 = ShardedBackend(devices=[cpu, cpu], placement="sticky")
+        restored = StreamSystem.from_payload(payload, backend=be2)
+        assert be2.device_of == pinned
+        restored.run(1)
+        restored.close()
+
+    def test_legacy_policy_without_hints_kwarg_still_works(self):
+        """Custom pre-hints policies (no ``hints`` parameter) must keep
+        working: backends only pass hints to signatures that declare it."""
+        import jax
+
+        from repro.runtime.scheduler import PlacementPolicy
+        from repro.runtime.sharded import ShardedBackend
+
+        class Legacy(PlacementPolicy):
+            name = ""
+
+            def assign(self, spec, n_devices, load, ewma=None):  # old-style
+                return n_devices - 1
+
+        cpu = jax.devices()[0]
+        be = ShardedBackend(devices=[cpu, cpu], placement=Legacy())
+        sys_ = StreamSystem(strategy="none", backend=be)
+        sys_.submit(chain_df("L0", "urban", [("kalman", {"q": 0.5})]))
+        sys_.step()
+        assert set(be.device_of.values()) == {1}
+        sys_.close()

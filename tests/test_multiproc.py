@@ -1,0 +1,349 @@
+"""Multiprocess worker backend tests.
+
+Five layers:
+  * coordinator plumbing: registry, constructor validation, the
+    inproc-transport rejection, worker log files, worker-error surfacing;
+  * dry worker plane (no jit compiles — scheduler/transport machinery at
+    full speed): fig-1 churn conformance against the dry-run backend's
+    counters, checkpoint/restore, sticky worker re-placement;
+  * jit worker plane: sink digests (counts AND checksums) identical to
+    the in-process jit backend on fig-1 churn in both step modes, plus
+    checkpoint/restore continuity and cross-backend restores;
+  * straggler migration across workers through the shared placement
+    machinery;
+  * the acceptance bar (slow tier): ``backend="multiproc"`` with
+    ``transport="shm"`` is sink-count-identical to ``inprocess`` on the
+    full OPMW rw1 trace — live, mid-step churn, and across a
+    checkpoint/restore boundary — in both step modes.
+
+The CI multiproc-conformance job re-runs this module with
+``REPRO_TEST_STEP_MODE`` sync and concurrent (workers=2); results must be
+mode-invariant, and worker logs are uploaded as artifacts on failure.
+"""
+from __future__ import annotations
+
+import os
+
+import pytest
+
+from repro.runtime.backend import available_backends, resolve_backend
+from repro.runtime.system import StreamSystem
+from repro.runtime.transport import TransportError
+from repro.runtime.worker import MultiprocBackend, RemoteSegment, WorkerError
+
+from helpers import chain_df, fig1
+
+STEP_MODE = os.environ.get("REPRO_TEST_STEP_MODE") or "sync"
+MAX_WORKERS = int(os.environ.get("REPRO_TEST_MAX_WORKERS", "4"))
+
+FIG1_OPS = [
+    ("add", "A"),
+    ("add", "B"),
+    ("add", "C"),
+    ("add", "D"),
+    ("remove", "B"),
+    ("defrag", ""),
+    ("remove", "A"),
+    ("add", "B"),
+]
+
+
+def _apply(system, dags, op, name):
+    if op == "add":
+        system.submit(dags[name].copy())
+    elif op == "remove":
+        system.remove(name)
+    else:
+        system.defragment()
+
+
+def _counts(system):
+    return {
+        name: {s: d["count"] for s, d in system.sink_digests(name).items()}
+        for name in sorted(system.manager.submitted)
+    }
+
+
+def _digests(system):
+    return {
+        name: system.sink_digests(name) for name in sorted(system.manager.submitted)
+    }
+
+
+def _run_ops(backend, ops, step_mode=STEP_MODE, tail_steps=2, **kw):
+    dags = {d.name: d for d in fig1()}
+    system = StreamSystem(
+        strategy="signature", backend=backend, step_mode=step_mode,
+        max_workers=MAX_WORKERS, **kw,
+    )
+    for op, name in ops:
+        _apply(system, dags, op, name)
+        system.step()
+    for _ in range(tail_steps):
+        system.step()
+    digests = _digests(system)
+    system.close()
+    return digests
+
+
+class TestCoordinatorPlumbing:
+    def test_registered(self):
+        assert "multiproc" in available_backends()
+
+    def test_constructor_validation(self):
+        with pytest.raises(ValueError, match="workers"):
+            MultiprocBackend(workers=0)
+        with pytest.raises(ValueError, match="worker_plane"):
+            MultiprocBackend(worker_plane="quantum")
+
+    def test_inproc_transport_rejected(self):
+        with pytest.raises(TransportError, match="cannot span"):
+            MultiprocBackend(workers=1, transport="inproc")
+
+    def test_system_knobs_reach_backend(self):
+        system = StreamSystem(backend="multiproc", workers=1,
+                              backend_options={"worker_plane": "dry"})
+        try:
+            assert isinstance(system.backend, MultiprocBackend)
+            assert system.backend.n_workers == 1
+            assert system.backend.worker_plane == "dry"
+            assert system.backend.transport.name == "shm"
+        finally:
+            system.close()
+
+    def test_worker_error_surfaces_with_log_path(self, tmp_path):
+        be = MultiprocBackend(workers=1, worker_plane="dry",
+                              log_dir=str(tmp_path))
+        try:
+            with pytest.raises(WorkerError, match="unknown worker op"):
+                be._call(0, {"op": "frobnicate"})
+            log = tmp_path / "worker-0.log"
+            assert log.exists()
+            assert "frobnicate" in log.read_text()
+        finally:
+            be.close()
+
+    def test_close_shuts_workers_down(self):
+        be = MultiprocBackend(workers=2, worker_plane="dry")
+        be._ensure_workers()
+        procs = list(be._procs)
+        assert all(p.is_alive() for p in procs)
+        be.close()
+        assert all(not p.is_alive() for p in procs)
+        be.close()  # idempotent
+
+
+class TestDryWorkerPlane:
+    def test_fig1_counts_match_dryrun_backend(self):
+        be = MultiprocBackend(workers=2, worker_plane="dry")
+        got = _run_ops(be, FIG1_OPS)
+        ref = _run_ops("dryrun", FIG1_OPS)
+        assert {n: {s: d["count"] for s, d in v.items()} for n, v in got.items()} == {
+            n: {s: d["count"] for s, d in v.items()} for n, v in ref.items()
+        }
+
+    def test_segments_spread_across_workers(self):
+        be = MultiprocBackend(workers=2, worker_plane="dry")
+        system = StreamSystem(strategy="none", backend=be)
+        for i in range(4):
+            system.submit(chain_df(f"S{i}", "urban", [("kalman", {"q": float(i)})]))
+        system.step()
+        assert set(be.device_of.values()) == {0, 1}
+        assert isinstance(next(iter(be.segments.values())), RemoteSegment)
+        system.close()
+
+    def test_checkpoint_restore_with_sticky_worker_placement(self):
+        be = MultiprocBackend(workers=2, worker_plane="dry",
+                              placement="least_loaded")
+        system = StreamSystem(strategy="none", backend=be)
+        for i in range(4):
+            system.submit(chain_df(f"S{i}", "urban", [("kalman", {"q": float(i)})]))
+        system.run(3)
+        payload = system.checkpoint_payload()
+        placed = dict(be.device_of)
+        ref = _counts(system)
+        system.close()
+        assert payload["backend_config"] == {
+            "workers": 2, "transport": "shm", "worker_plane": "dry",
+            "placement": "least_loaded",
+        }
+        # sticky re-placement: same worker pool -> checkpointed pinning wins
+        be2 = MultiprocBackend(workers=2, worker_plane="dry", placement="sticky")
+        restored = StreamSystem.from_payload(payload, backend=be2)
+        assert restored.backend.device_of == placed
+        assert _counts(restored) == ref
+        restored.run(2)
+        restored.close()
+        # pool mismatch -> sticky falls back (placement still total)
+        be3 = MultiprocBackend(workers=3, worker_plane="dry", placement="sticky")
+        restored3 = StreamSystem.from_payload(payload, backend=be3)
+        assert set(restored3.backend.device_of) == set(placed)
+        restored3.run(1)
+        restored3.close()
+
+    def test_tcp_transport_spans_workers(self):
+        be = MultiprocBackend(workers=2, worker_plane="dry", transport="tcp")
+        got = _run_ops(be, FIG1_OPS[:4], tail_steps=1)
+        assert all(
+            d["count"] > 0 for v in got.values() for d in v.values()
+        )
+
+
+class TestJitWorkerPlane:
+    def test_fig1_digests_identical_to_inprocess(self):
+        """Counts AND checksums: the jit plane in worker processes is
+        bit-identical to the in-process jit plane across churn + defrag."""
+        ref = _run_ops("inprocess", FIG1_OPS)
+        got = _run_ops(resolve_backend("multiproc", workers=2), FIG1_OPS)
+        assert got == ref
+
+    @pytest.mark.slow
+    def test_fig1_identical_in_both_modes(self):
+        ref = _run_ops("inprocess", FIG1_OPS, step_mode="sync")
+        for mode in ("sync", "concurrent"):
+            got = _run_ops(
+                resolve_backend("multiproc", workers=2), FIG1_OPS, step_mode=mode
+            )
+            assert got == ref, mode
+
+    @pytest.mark.slow
+    def test_checkpoint_restore_continuity_and_cross_backend(self, ckpt_dir):
+        dags = {d.name: d for d in fig1()}
+        system = StreamSystem(
+            strategy="signature",
+            backend=resolve_backend("multiproc", workers=2),
+            step_mode=STEP_MODE, checkpoint_dir=ckpt_dir,
+        )
+        system.submit(dags["A"].copy())
+        system.submit(dags["B"].copy())
+        system.run(3)
+        system.remove("B")
+        system.step()
+        path = system.checkpoint()
+        ref = _counts(system)
+        system.run(2)
+        final = _counts(system)
+        system.close()
+
+        # multiproc -> multiproc (worker pool re-spawned from backend_config)
+        r1 = StreamSystem.restore(path)
+        assert isinstance(r1.backend, MultiprocBackend)
+        assert r1.backend.n_workers == 2
+        assert _counts(r1) == ref
+        r1.run(2)
+        assert _counts(r1) == final
+        r1.close()
+
+        # multiproc -> inprocess and inprocess -> multiproc
+        r2 = StreamSystem.restore(path, backend="inprocess")
+        assert _counts(r2) == ref
+        r2.run(2)
+        assert _counts(r2) == final
+        p2 = r2.checkpoint_payload()
+        r2.close()
+        r3 = StreamSystem.from_payload(
+            p2, backend=resolve_backend("multiproc", workers=2)
+        )
+        assert _counts(r3) == final
+        r3.run(1)
+        r3.close()
+
+
+class TestStragglerMigrationAcrossWorkers:
+    def test_injected_straggler_moves_to_other_worker(self):
+        be = MultiprocBackend(workers=2, worker_plane="dry",
+                              placement="ewma_aware", straggler_factor=3.0)
+        system = StreamSystem(strategy="none", backend=be)
+        for i in range(4):
+            system.submit(chain_df(f"S{i}", "urban", [("kalman", {"q": float(i)})]))
+        victim = sorted(be.device_of)[0]
+        orig = type(be)._step_one
+
+        def slowed(seg):
+            orig(be, seg)
+            return 200.0 if seg.spec.name == victim else 2.0
+
+        be._step_one = slowed
+        before = be.device_of[victim]
+        for _ in range(12):
+            system.step()
+            if be.redispatches:
+                break
+        assert be.redispatches, "straggler was never flagged"
+        assert be.device_of[victim] != before  # migrated to the other worker
+        # the migrated segment still steps (its states moved with it)
+        rep = system.step()
+        assert rep.live_tasks == be.live_task_count
+        system.close()
+
+
+# -- acceptance bar: full OPMW rw1 conformance (slow tier) -----------------------
+
+
+def _opmw_events(truncate=None):
+    from repro.workloads import opmw_workload, rw_trace
+
+    dags = opmw_workload()
+    events = [(ev.op, ev.name) for ev in rw_trace(dags, seed=11)]
+    return events[:truncate] if truncate else events
+
+
+def _run_opmw(backend, events, step_mode, ckpt_boundary=None, ckpt_dir=None):
+    """Replay OPMW events (one step per event); optionally checkpoint at
+    ``ckpt_boundary`` events, tear the system down, and resume from disk —
+    the final counts must be indistinguishable from an uninterrupted run."""
+    from repro.workloads import opmw_workload
+
+    dags = {d.name: d for d in opmw_workload()}
+    system = StreamSystem(
+        strategy="signature", backend=backend, step_mode=step_mode,
+        max_workers=MAX_WORKERS,
+        **({"checkpoint_dir": ckpt_dir} if ckpt_dir else {}),
+    )
+    for i, (op, name) in enumerate(events):
+        _apply(system, dags, op, name)
+        system.step()
+        if ckpt_boundary is not None and i + 1 == ckpt_boundary:
+            system.checkpoint()
+            system.close()
+            system = StreamSystem.restore(ckpt_dir)
+    counts = _counts(system)
+    system.close()
+    return counts
+
+
+@pytest.mark.slow
+class TestOpmwConformance:
+    def test_rw1_slice_multiproc_vs_inprocess(self):
+        events = _opmw_events(truncate=10)
+        ref = _run_opmw("inprocess", events, STEP_MODE)
+        got = _run_opmw(
+            resolve_backend("multiproc", workers=2), events, STEP_MODE
+        )
+        assert got == ref
+
+    def test_rw1_slice_with_restore_boundary(self, ckpt_dir):
+        events = _opmw_events(truncate=10)
+        ref = _run_opmw("inprocess", events, STEP_MODE)
+        got = _run_opmw(
+            resolve_backend("multiproc", workers=2), events, STEP_MODE,
+            ckpt_boundary=5, ckpt_dir=ckpt_dir,
+        )
+        assert got == ref
+
+    def test_rw1_full_trace_acceptance(self, ckpt_dir):
+        """The PR's acceptance criterion: multiproc/shm ≡ inprocess on the
+        *full* OPMW rw1 trace, across a mid-trace kill + restore."""
+        if os.environ.get("REPRO_FULL_OPMW_MULTIPROC") != "1":
+            pytest.skip(
+                "full-trace acceptance run (~2 min of jit compiles) — set "
+                "REPRO_FULL_OPMW_MULTIPROC=1; the CI multiproc-conformance "
+                "job runs it in both step modes"
+            )
+        events = _opmw_events()
+        ref = _run_opmw("inprocess", events, STEP_MODE)
+        got = _run_opmw(
+            resolve_backend("multiproc", workers=2), events, STEP_MODE,
+            ckpt_boundary=len(events) // 2, ckpt_dir=ckpt_dir,
+        )
+        assert got == ref

@@ -690,3 +690,149 @@ class TestCliRecovery:
         proc = _run_cli(["--trace", "riot/seq", "--restore"])
         assert proc.returncode != 0
         assert "--checkpoint-dir" in (proc.stderr + proc.stdout)
+
+
+# ---------------------------------------------------------------------------
+# background checkpointing — snapshot on the stepping thread, encode/fsync/
+# rename on a writer thread; torn-write semantics unchanged
+# ---------------------------------------------------------------------------
+
+
+class TestBackgroundCheckpointing:
+    def test_deferred_encoding_is_payload_identical(self):
+        """The snapshot + writer-thread encode must produce byte-identical
+        payloads to the synchronous path (jit states, broker buffers and
+        all) — background mode changes *when* encoding happens, never what
+        is written."""
+        from repro.runtime.checkpoint import deferred_encoder, encode_deferred
+
+        dags = _fig1_dags()
+        system = StreamSystem(strategy="signature", backend="inprocess")
+        for op, name in FIG1_OPS[:4]:
+            _apply(system, dags, op, name)
+            system.step()
+        sync_payload = system.checkpoint_payload()
+        bg_payload = encode_deferred(system.checkpoint_payload(deferred_encoder))
+        assert bg_payload == sync_payload
+
+    def test_cadence_writes_off_thread_and_restores(self, ckpt_dir):
+        dags = _fig1_dags()
+        system = StreamSystem(
+            strategy="signature", backend="dryrun",
+            checkpoint_dir=ckpt_dir, checkpoint_every=1,
+            checkpoint_background=True,
+        )
+        for op, name in FIG1_OPS:
+            _apply(system, dags, op, name)
+            system.step()
+        system.flush_checkpoints()
+        store = CheckpointStore(ckpt_dir)
+        assert len(store.list_ids()) == len(FIG1_OPS)
+        digests, acct = _final_state(system)
+        restored = StreamSystem.restore(ckpt_dir)
+        assert restored.checkpoint_background  # survives the restore
+        r_digests, r_acct = _final_state(restored)
+        assert r_digests == digests and r_acct == acct
+
+    @pytest.mark.parametrize("kill_at", [5, 23])
+    def test_kill_at_event_with_background_writer(self, kill_at, ckpt_dir):
+        """Crash without a flush: queued-but-unwritten checkpoints are lost,
+        the restore lands on the newest durable prefix (journal length =
+        resume offset), and the finished trace is conformant with the
+        uninterrupted baseline — the kill-at-any-step contract, unchanged.
+
+        The crash is simulated deterministically by gating the store: only
+        the first ``durable`` saves reach disk, the rest behave like
+        checkpoints still queued when the process died — so the truncated
+        prefix + replayed tail path is exercised on every run (a plain
+        ``del`` races the daemon writer, which usually wins)."""
+        dags, ops = _opmw_dags(), _opmw_ops(truncate=40)
+        base = _baseline(("dryrun", "rw1:40"), "dryrun", dags, ops)
+
+        system = StreamSystem(
+            strategy="signature", backend="dryrun",
+            checkpoint_dir=ckpt_dir, checkpoint_every=1,
+            checkpoint_background=True,
+        )
+        durable = kill_at // 2 + 1  # checkpoints that beat the crash to disk
+        real_save = system.checkpoint_store.save
+        written = []
+
+        def gated_save(payload):
+            if len(written) >= durable:
+                return "<lost-in-crash>"  # queued but never made durable
+            written.append(1)
+            return real_save(payload)
+
+        system.checkpoint_store.save = gated_save
+        series = []
+        for op, name in ops[: kill_at + 1]:
+            _apply(system, dags, op, name)
+            rep = system.step()
+            series.append((rep.live_tasks, rep.paused_tasks, rep.cost))
+        system.flush_checkpoints()  # drain the queue through the gate
+        del system  # the crash
+
+        restored = StreamSystem.restore(ckpt_dir)
+        resumed = len(restored.manager.journal)
+        assert resumed == durable  # newest durable prefix, tail lost
+        series = series[:resumed]  # replayed events re-produce the tail
+        for op, name in ops[resumed:]:
+            _apply(restored, dags, op, name)
+            rep = restored.step()
+            series.append((rep.live_tasks, rep.paused_tasks, rep.cost))
+        digests, acct = _final_state(restored)
+        _assert_conformant(base, (series, digests, acct, restored))
+
+    def test_explicit_checkpoint_flushes_queue_first(self, ckpt_dir):
+        system = StreamSystem(
+            strategy="signature", backend="dryrun",
+            checkpoint_dir=ckpt_dir, checkpoint_every=1,
+            checkpoint_background=True,
+        )
+        system.submit(_fig1_dags()["A"].copy())
+        system.step()  # queues checkpoint 1 in the background
+        path = system.checkpoint()  # must flush, then write synchronously
+        store = CheckpointStore(ckpt_dir)
+        ids = store.list_ids()
+        assert len(ids) == 2 and path.endswith(store.filename(ids[-1]))
+
+    def test_writer_failure_surfaces_on_flush(self, ckpt_dir):
+        from repro.runtime.checkpoint import CheckpointError
+
+        system = StreamSystem(
+            strategy="signature", backend="dryrun",
+            checkpoint_dir=ckpt_dir, checkpoint_every=1,
+            checkpoint_background=True,
+        )
+        def boom(payload):
+            raise OSError("disk on fire")
+
+        system.checkpoint_store.save = boom
+        system.submit(_fig1_dags()["A"].copy())
+        system.step()
+        with pytest.raises(CheckpointError, match="background checkpoint"):
+            system.flush_checkpoints()
+
+    def test_needs_checkpoint_dir(self):
+        with pytest.raises(ValueError, match="checkpoint_background"):
+            StreamSystem(backend="dryrun", checkpoint_background=True)
+        from repro.api import ReuseSession
+        from repro.core import DataflowError
+
+        with pytest.raises(DataflowError, match="checkpoint_background"):
+            ReuseSession(checkpoint_background=True)
+
+    def test_session_background_smoke(self, ckpt_dir):
+        from repro.api import ReuseSession
+
+        with ReuseSession(
+            strategy="signature", execute=True, backend="dryrun",
+            checkpoint_dir=ckpt_dir, checkpoint_every=1,
+            checkpoint_background=True,
+        ) as session:
+            session.submit(_fig1_dags()["A"].copy())
+            session.run(3)
+        # context exit closes the system, which flushes the writer
+        restored = ReuseSession.restore(ckpt_dir)
+        assert restored.stats().steps_run == 3

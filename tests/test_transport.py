@@ -1,0 +1,316 @@
+"""Stream-transport subsystem tests.
+
+Three layers:
+  * a conformance suite every registered transport (inproc / shm / tcp)
+    must pass — publish/fetch round-trips, per-topic sequencing
+    (``fetch_synced``), drop-wake semantics under a blocked synced fetch,
+    drop + republish sequence reset, counters (cumulative across drops,
+    resettable, restorable), registry/observability surface;
+  * cross-process attachment: ``connect_info`` → ``connect_transport`` in
+    a spawned worker process publishes batches the parent fetches
+    bit-exactly (shm and tcp; inproc refuses with a clear error);
+  * the data plane on a non-default transport: the in-process jit backend
+    stepped over shm and tcp produces sink digests identical to the
+    in-process broker on the fig-1 churn scenario, via the
+    ``StreamSystem(transport=...)`` injection point.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime.transport import (
+    ShmTransport,
+    TcpTransport,
+    Transport,
+    TransportError,
+    available_transports,
+    connect_transport,
+    register_transport,
+    resolve_transport,
+)
+
+TRANSPORTS = ["inproc", "shm", "tcp"]
+SPANNING = ["shm", "tcp"]  # transports that cross process boundaries
+
+
+def _batch(fill=1.0, n=4):
+    return np.full((n, 8), fill, dtype=np.float32)
+
+
+@pytest.fixture(params=TRANSPORTS)
+def transport(request):
+    t = resolve_transport(request.param)
+    yield t
+    t.close()
+
+
+class TestRegistry:
+    def test_builtins_available(self):
+        assert {"inproc", "shm", "tcp"} <= set(available_transports())
+
+    def test_unknown_rejected(self):
+        with pytest.raises(ValueError, match="unknown transport"):
+            resolve_transport("no-such-transport")
+        with pytest.raises(TypeError):
+            resolve_transport(42)
+
+    def test_instance_passthrough_and_custom_class(self):
+        inst = resolve_transport("inproc")
+        assert resolve_transport(inst) is inst
+
+        class MyTransport(ShmTransport):
+            name = "test-custom-transport"
+
+        register_transport(MyTransport)
+        assert "test-custom-transport" in available_transports()
+
+    def test_duplicate_name_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+
+            @register_transport
+            class Dup(Transport):
+                name = "shm"
+
+
+class TestTransportConformance:
+    def test_publish_fetch_roundtrip_bit_exact(self, transport):
+        b = np.arange(32, dtype=np.float32).reshape(4, 8) * 0.37
+        transport.publish("stream/t1", b)
+        got = np.asarray(transport.fetch("stream/t1"))
+        assert got.dtype == b.dtype and got.shape == b.shape
+        assert np.array_equal(got, b)
+
+    def test_fetch_unknown_topic_raises(self, transport):
+        with pytest.raises(KeyError):
+            transport.fetch("stream/nope")
+
+    def test_sequence_advances_per_publish(self, transport):
+        assert transport.seq("stream/s") == 0
+        transport.publish("stream/s", _batch(1.0))
+        transport.publish("stream/s", _batch(2.0))
+        assert transport.seq("stream/s") == 2
+        assert transport.sequences() == {"stream/s": 2}
+
+    def test_fetch_synced_returns_latest_once_reached(self, transport):
+        transport.publish("stream/s", _batch(1.0))
+        transport.publish("stream/s", _batch(2.0))
+        got = np.asarray(transport.fetch_synced("stream/s", 2))
+        assert got[0, 0] == 2.0
+
+    def test_fetch_synced_blocks_until_publish(self, transport):
+        transport.publish("stream/s", _batch(1.0))
+        out = []
+
+        def consumer():
+            out.append(np.asarray(transport.fetch_synced("stream/s", 2, timeout=10)))
+
+        th = threading.Thread(target=consumer)
+        th.start()
+        time.sleep(0.05)
+        assert not out  # still blocked on seq 2
+        transport.publish("stream/s", _batch(7.0))
+        th.join(5)
+        assert out and out[0][0, 0] == 7.0
+
+    def test_drop_wakes_blocked_synced_fetch(self, transport):
+        transport.publish("stream/s", _batch(1.0))
+        err = []
+
+        def consumer():
+            try:
+                transport.fetch_synced("stream/s", 5, timeout=10)
+            except KeyError:
+                err.append("woken")
+
+        th = threading.Thread(target=consumer)
+        th.start()
+        time.sleep(0.05)
+        transport.drop("stream/s")
+        th.join(5)
+        assert err == ["woken"]
+
+    def test_drop_then_republish_resets_sequence(self, transport):
+        transport.publish("stream/s", _batch(1.0))
+        transport.publish("stream/s", _batch(2.0))
+        transport.drop("stream/s")
+        assert not transport.has("stream/s")
+        transport.publish("stream/s", _batch(3.0))
+        assert transport.seq("stream/s") == 1
+        assert np.asarray(transport.fetch("stream/s"))[0, 0] == 3.0
+
+    def test_counters_cumulative_across_drops(self, transport):
+        b = _batch()
+        transport.publish("stream/a", b)
+        transport.publish("stream/b", b)
+        transport.drop("stream/a")
+        c = transport.counters()
+        assert c["publishes"] == 2
+        assert c["bytes_published"] == 2 * b.nbytes
+        assert transport.bytes_published == c["bytes_published"]
+        assert transport.publishes == 2
+
+    def test_counters_reset_and_restore(self, transport):
+        transport.publish("stream/a", _batch())
+        transport.reset_counters()
+        assert transport.counters() == {"bytes_published": 0, "publishes": 0}
+        transport.restore_counters(1234, 5)
+        assert transport.counters() == {"bytes_published": 1234, "publishes": 5}
+
+    def test_len_and_topics_cover_live_topics_only(self, transport):
+        transport.publish("stream/a", _batch(1.0))
+        transport.publish("stream/b", _batch(2.0))
+        transport.drop("stream/a")
+        assert len(transport) == 1
+        topics = transport.topics()
+        assert set(topics) == {"stream/b"}
+        assert np.asarray(topics["stream/b"])[0, 0] == 2.0
+
+    def test_ring_overwrites_keep_latest(self, transport):
+        for i in range(12):  # laps the shm ring (4 slots) twice
+            transport.publish("stream/s", _batch(float(i)))
+        assert np.asarray(transport.fetch("stream/s"))[0, 0] == 11.0
+        assert transport.seq("stream/s") == 12
+
+
+class TestShmSpecifics:
+    def test_slot_overflow_raises_clear_error(self):
+        t = ShmTransport(slot_bytes=64)
+        try:
+            with pytest.raises(TransportError, match="slot_bytes"):
+                t.publish("stream/big", np.zeros((64, 8), np.float32))
+        finally:
+            t.close()
+
+    def test_close_removes_session_dir(self, tmp_path):
+        import os
+
+        t = ShmTransport()
+        d = t.dir
+        t.publish("stream/x", _batch())
+        t.close()
+        assert not os.path.isdir(d)
+
+    def test_batch_rank_limit(self):
+        t = ShmTransport()
+        try:
+            with pytest.raises(TransportError, match="rank"):
+                t.publish("stream/x", np.zeros((1, 1, 1, 1, 1), np.float32))
+        finally:
+            t.close()
+
+
+def _child_publish(spec, topic):
+    t = connect_transport(spec)
+    t.publish(topic, np.full((4, 8), 42.5, dtype=np.float32))
+    t.close()
+
+
+class TestCrossProcess:
+    def test_inproc_refuses_to_span(self):
+        t = resolve_transport("inproc")
+        with pytest.raises(TransportError, match="cannot span"):
+            t.connect_info()
+
+    @pytest.mark.parametrize("name", SPANNING)
+    def test_child_process_publish_parent_fetch(self, name):
+        t = resolve_transport(name)
+        try:
+            ctx = mp.get_context("spawn")
+            proc = ctx.Process(
+                target=_child_publish, args=(t.connect_info(), "stream/xp")
+            )
+            proc.start()
+            got = np.asarray(t.fetch_synced("stream/xp", 1, timeout=60))
+            proc.join(30)
+            assert proc.exitcode == 0
+            assert np.array_equal(got, np.full((4, 8), 42.5, dtype=np.float32))
+            assert t.counters()["publishes"] == 1
+        finally:
+            t.close()
+
+
+# -- the jit data plane on non-default transports -------------------------------
+
+
+FIG1_OPS = [
+    ("add", "A"),
+    ("add", "B"),
+    ("add", "C"),
+    ("remove", "B"),
+    ("defrag", ""),
+    ("add", "D"),
+]
+
+
+def _run_fig1(transport_name, step_mode="sync"):
+    from repro.runtime.system import StreamSystem
+
+    from helpers import fig1
+
+    dags = {d.name: d for d in fig1()}
+    system = StreamSystem(
+        strategy="signature", backend="inprocess",
+        transport=transport_name, step_mode=step_mode,
+    )
+    for op, name in FIG1_OPS:
+        if op == "add":
+            system.submit(dags[name].copy())
+        elif op == "remove":
+            system.remove(name)
+        else:
+            system.defragment()
+        system.step()
+    for _ in range(2):
+        system.step()
+    digests = {
+        n: system.sink_digests(n) for n in sorted(system.manager.submitted)
+    }
+    system.close()
+    return digests
+
+
+class TestJitPlaneOverTransports:
+    @pytest.mark.parametrize("name", SPANNING)
+    def test_sink_digests_identical_to_inproc(self, name):
+        ref = _run_fig1("inproc")
+        got = _run_fig1(name)
+        assert got == ref  # counts AND checksums — the wire codec is bit-exact
+
+    def test_concurrent_mode_over_shm(self):
+        ref = _run_fig1("inproc")
+        got = _run_fig1("shm", step_mode="concurrent")
+        assert got == ref
+
+    def test_transport_knob_needs_constructible_backend(self):
+        from repro.runtime.backend import resolve_backend
+        from repro.runtime.system import StreamSystem
+
+        be = resolve_backend("dryrun")
+        with pytest.raises(ValueError, match="backend name or"):
+            StreamSystem(backend=be, transport="shm")
+
+    def test_checkpoint_restore_preserves_transport_counters(self, tmp_path):
+        from repro.runtime.system import StreamSystem
+
+        from helpers import fig1
+
+        A = fig1()[0]
+        system = StreamSystem(strategy="signature", backend="inprocess", transport="shm")
+        system.submit(A.copy())
+        system.submit(fig1()[1].copy())  # creates a boundary stream
+        system.run(3)
+        payload = system.checkpoint_payload()
+        counters = system.backend.transport.counters()
+        assert payload["backend_config"]["transport"] == "shm"
+        system.close()
+
+        restored = StreamSystem.from_payload(payload)
+        assert restored.backend.transport.name == "shm"
+        assert restored.backend.transport.counters() == counters
+        restored.run(1)
+        restored.close()
