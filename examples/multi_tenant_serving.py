@@ -1,45 +1,69 @@
-"""Multi-tenant LM serving with collaborative reuse — the paper's merge
-algorithms as a first-class serving feature.
+"""Multi-tenant serving with collaborative reuse — the paper's merge
+algorithms as an admission-control superpower.
 
-Six tenants serve adapters of the same base model over three request
-streams. With reuse, each shared backbone prefix runs ONCE per stream;
-tenants keep their own fine-tuned stages/adapters. Removal unmerges
-without touching the surviving tenants.
+Starts a ServeFrontend (slot-based admission over one ReuseSession) on a
+local socket and drives it with ServeClient exactly as external tenants
+would: alice and bob submit overlapping RIoT dataflows, and because a
+submission that merges into running work is charged only its *new*
+segments, the same slot pool carries far more than its nominal capacity.
+The run ends with a removal freeing slots that immediately admit queued
+work in weighted fair-share order.
 
     PYTHONPATH=src python examples/multi_tenant_serving.py
+
+(The older library-level integration — ReuseServing/TenantPipeline, which
+merges LM adapter pipelines in-process without a server — is still there:
+``from repro.serve import ReuseServing``.)
 """
-from repro.serve import ReuseServing, TenantPipeline
+from repro.serve import ServeClient, ServeFrontend, TenantQuota
+from repro.workloads import riot_workload, tenant_copy
 
 
 def main():
-    for strategy in ("none", "signature"):
-        rs = ReuseServing(strategy=strategy, base_batch=4)
-        for i in range(6):
-            rs.add_tenant(
-                TenantPipeline(
-                    tenant=f"tenant{i}",
-                    stream=("urban", "meter", "taxi")[i % 3],
-                    model="base-7b@v1",
-                    shared_stages=3,     # lower 3 stage groups from the base ckpt
-                    n_stages=4,          # top stage is tenant-fine-tuned
-                    d=64,
-                    layers_per_stage=4,
-                    adapter=f"adapter-{i}",
-                )
+    pool = riot_workload()
+    frontend = ServeFrontend(
+        slots=48,
+        strategy="signature",
+        backend="dryrun",
+        default_quota=TenantQuota(max_slots=48, max_pending=8),
+    )
+    host, port = frontend.start()
+    print(f"frontend serving on {host}:{port} with {frontend.slots} slots\n")
+
+    with frontend, ServeClient((host, port)) as alice, ServeClient((host, port)) as bob:
+        # The two tenants submit the same first six RIoT dataflows — bob's
+        # copies merge into alice's running work and cost (almost) nothing.
+        for df in pool[:6]:
+            ra = alice.submit("alice", tenant_copy(df, "alice"))
+            rb = bob.submit("bob", tenant_copy(df, "bob"))
+            print(
+                f"{df.name:>10}:  alice {ra['status']} ({ra.get('slots_charged', '-')} slots)"
+                f"   bob {rb['status']} ({rb.get('slots_charged', '-')} slots, "
+                f"{rb.get('reused', 0)} reused)"
             )
-        rs.run(5)
-        s = rs.stats()
-        label = "Default (no reuse)" if strategy == "none" else "Reuse    "
-        print(f"{label}: running_tasks={s['running_tasks']:3d} "
-              f"deployed_cost={s['deployed_cost']:.1f}")
-        if strategy == "signature":
-            print("\nper-tenant outputs (identical to the Default run):")
-            for t in rs.tenants:
-                print(" ", t, rs.tenant_output(t))
-            rs.remove_tenant("tenant3")
-            rs.run(2)
-            print(f"\nafter removing tenant3: running_tasks="
-                  f"{rs.stats()['running_tasks']}, others keep streaming")
+
+        alice.step(5)  # stream some batches; cost is billed per tenant
+        stats = alice.stats()
+        print(
+            f"\npool: {stats['slots_used']}/{stats['slots']} slots used, "
+            f"naive (no-reuse) demand {stats['naive_slots']} slots "
+            f"→ effective capacity {stats['effective_capacity']:.2f}×"
+        )
+        for tenant, ledger in sorted(stats["ledgers"].items()):
+            print(
+                f"  {tenant}: holds {ledger['slots_held']} slots, "
+                f"saved {ledger['slots_saved']} by reuse, "
+                f"billed {ledger['cost_total']:.3f} core·steps"
+            )
+
+        # Removal unmerges without touching the other tenant, frees the
+        # removed submission's slots, and admits queued work fair-share.
+        out = bob.remove("bob", f"bob/{pool[0].name}")
+        print(
+            f"\nremoved bob/{pool[0].name}: freed {out['slots_freed']} slots; "
+            f"alice/{pool[0].name} keeps streaming"
+        )
+        print(f"final: {alice.status()['dataflows']} dataflows on the pool")
 
 
 if __name__ == "__main__":

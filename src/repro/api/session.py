@@ -308,6 +308,17 @@ class ReuseSession:
         )
         return receipt
 
+    def preview(self, df: Submittable, validate: bool = True):
+        """Plan a submission without committing it (admission control).
+
+        Returns the :class:`~repro.core.merge.MergePlan` the next
+        :meth:`submit` of this dataflow would enact against the current
+        running set — ``plan.num_created`` is the number of new running
+        tasks, which is what slot-based admission charges. The session
+        (control plane *and* data plane) is left untouched.
+        """
+        return self.manager.preview(as_dataflow(df), validate=validate)
+
     def submit_many(self, dfs: Iterable[Submittable]) -> BatchSubmitReceipt:
         """Submit a batch with batch-aware planning (one signature pass and
         one merged-DAG rebuild per overlapping group — see
@@ -389,6 +400,12 @@ class ReuseSession:
     def sink_digests(self, name: str) -> Dict[str, Dict[str, Any]]:
         """Per-sink count/checksum for a submission (output identity check)."""
         return self._require_system("sink_digests").sink_digests(name)
+
+    def quiesce(self) -> None:
+        """Drain in-flight data-plane work (concurrent dispatch, queued
+        background checkpoints) without releasing anything — see
+        :meth:`repro.runtime.system.StreamSystem.quiesce`."""
+        self._require_system("quiesce").quiesce()
 
     def close(self) -> None:
         """Release data-plane resources (the concurrent dispatch pool).

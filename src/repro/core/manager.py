@@ -137,6 +137,35 @@ class ReuseManager:
             self.verify()
         return receipt
 
+    def preview(self, df: Dataflow, validate: bool = True) -> MergePlan:
+        """Plan the merge for ``df`` WITHOUT committing it.
+
+        Runs the strategy's matching against the current running set and
+        returns the resulting :class:`~repro.core.merge.MergePlan` —
+        ``plan.num_created`` is the number of new running tasks the
+        submission would instantiate, which is what admission control
+        charges against a slot pool (a fully-reused submission costs 0).
+
+        The manager is left bit-identical: the plan mints placeholder ids
+        through the task counter, which is restored afterwards, so a
+        preview followed by the real :meth:`submit` produces exactly the
+        ids (and journal) an un-previewed submit would have. No journal
+        entry is written. ``validate=False`` skips the structural de-dup
+        check for trusted callers on a hot admission path.
+        """
+        if df.name in self.submitted:
+            raise DataflowError(f"dataflow {df.name!r} already submitted")
+        sigs: Optional[Dict[str, str]] = None
+        if validate:
+            sigs = self._validate_submission(df)
+        elif self._strategy.wants_signatures:
+            sigs = compute_signatures(df)
+        saved_counter = self._task_counter
+        try:
+            return self._strategy.plan(self, df, "__preview__", sigs=sigs)
+        finally:
+            self._task_counter = saved_counter
+
     def submit_many(
         self, dfs: Sequence[Dataflow], validate: bool = True
     ) -> List[SubmissionReceipt]:

@@ -1,5 +1,14 @@
-"""Serving driver: single-model batched generation or multi-tenant
-reuse-serving (the paper's technique over LM pipelines).
+"""Serving driver.
+
+Front-end daemon mode (JAX-free on the dryrun backend):
+
+    PYTHONPATH=src python -m repro.launch.serve start --port 7421 --slots 64
+    PYTHONPATH=src python -m repro.launch.serve submit --port 7421 \\
+        --tenant alice --workload opmw --count 5
+    PYTHONPATH=src python -m repro.launch.serve status --port 7421 --stats
+    PYTHONPATH=src python -m repro.launch.serve stop --port 7421
+
+Legacy single-process modes (no subcommand):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke
     PYTHONPATH=src python -m repro.launch.serve --reuse --tenants 6
@@ -7,15 +16,21 @@ reuse-serving (the paper's technique over LM pipelines).
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 
-import jax
-import numpy as np
+_SUBCOMMANDS = ("start", "submit", "status", "stop")
 
-from repro import configs
-from repro.models import init_params
+
+# -- legacy single-process modes -------------------------------------------------
 
 
 def serve_model(args) -> int:
+    import jax
+    import numpy as np
+
+    from repro import configs
+    from repro.models import init_params
     from repro.serve.engine import Request, ServeEngine
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -51,7 +66,6 @@ def serve_reuse(args) -> int:
         )
     rs.run(args.ticks)
     s = rs.stats()
-    naive = args.tenants * (4 + 3)  # stages + embed/head/sink per tenant… per source
     print(f"tenants={s['tenants']} running_tasks={s['running_tasks']} "
           f"deployed_cost={s['deployed_cost']:.1f}")
     for t in list(rs.tenants):
@@ -59,8 +73,8 @@ def serve_reuse(args) -> int:
     return 0
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
+def legacy_main(argv) -> int:
+    ap = argparse.ArgumentParser(prog="repro.launch.serve")
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--reuse", action="store_true", help="multi-tenant reuse-serving")
@@ -72,6 +86,181 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=256)
     args = ap.parse_args(argv)
     return serve_reuse(args) if args.reuse else serve_model(args)
+
+
+# -- front-end daemon mode -------------------------------------------------------
+
+
+def _addr_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+
+
+def cmd_start(argv) -> int:
+    ap = argparse.ArgumentParser(prog="repro.launch.serve start")
+    _addr_args(ap)
+    ap.add_argument("--slots", type=int, default=256)
+    ap.add_argument("--backend", default="dryrun")
+    ap.add_argument("--strategy", default="signature")
+    ap.add_argument("--max-slots", type=int, default=64, help="per-tenant slot quota")
+    ap.add_argument("--max-pending", type=int, default=16, help="per-tenant queue depth")
+    ap.add_argument("--retry-after", type=float, default=0.5)
+    ap.add_argument("--defrag-every", type=int, default=None,
+                    help="defragment after every N removals")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=None)
+    ap.add_argument("--restore", action="store_true",
+                    help="restore session + ledgers from --checkpoint-dir")
+    ap.add_argument("--step-interval", type=float, default=None,
+                    help="step the data plane every S seconds while serving")
+    ap.add_argument("--log-file", default=None)
+    args = ap.parse_args(argv)
+
+    import logging
+    import threading
+
+    from repro.serve.frontend import ServeFrontend, TenantQuota
+
+    if args.log_file:
+        logging.basicConfig(
+            filename=args.log_file,
+            level=logging.INFO,
+            format="%(asctime)s %(name)s %(levelname)s %(message)s",
+        )
+    quota = TenantQuota(max_slots=args.max_slots, max_pending=args.max_pending)
+    if args.restore:
+        if not args.checkpoint_dir:
+            ap.error("--restore needs --checkpoint-dir")
+        frontend = ServeFrontend.restore(
+            args.checkpoint_dir,
+            slots=args.slots,
+            default_quota=quota,
+            retry_after=args.retry_after,
+            defrag_every=args.defrag_every,
+            host=args.host,
+            port=args.port,
+        )
+    else:
+        frontend = ServeFrontend(
+            slots=args.slots,
+            strategy=args.strategy,
+            backend=args.backend,
+            default_quota=quota,
+            retry_after=args.retry_after,
+            defrag_every=args.defrag_every,
+            host=args.host,
+            port=args.port,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
+        )
+    host, port = frontend.start()
+    print(f"serving on {host}:{port}", flush=True)
+
+    stepper = None
+    if args.step_interval:
+        def _step_loop() -> None:
+            while not frontend._shutdown_event.wait(args.step_interval):
+                try:
+                    frontend.step()
+                except Exception:  # pragma: no cover - daemon resilience
+                    logging.getLogger(__name__).exception("background step failed")
+
+        stepper = threading.Thread(target=_step_loop, name="serve-stepper", daemon=True)
+        stepper.start()
+    try:
+        frontend.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        frontend.close()
+    return 0
+
+
+def _workload(name: str):
+    if name == "opmw":
+        from repro.workloads import opmw_workload
+
+        return opmw_workload()
+    if name == "riot":
+        from repro.workloads import riot_workload
+
+        return riot_workload()
+    raise SystemExit(f"unknown workload {name!r} (expected opmw or riot)")
+
+
+def cmd_submit(argv) -> int:
+    ap = argparse.ArgumentParser(prog="repro.launch.serve submit")
+    _addr_args(ap)
+    ap.add_argument("--tenant", required=True)
+    ap.add_argument("--workload", default="opmw", help="opmw | riot")
+    ap.add_argument("--count", type=int, default=1, help="dataflows to submit")
+    ap.add_argument("--offset", type=int, default=0, help="skip the first N pool dataflows")
+    ap.add_argument("--wait", action="store_true", help="sleep out RETRY_AFTER backpressure")
+    args = ap.parse_args(argv)
+
+    from repro.serve.client import ServeClient
+    from repro.workloads import tenant_copy
+
+    pool = _workload(args.workload)
+    picks = pool[args.offset: args.offset + args.count]
+    if len(picks) < args.count:
+        raise SystemExit(
+            f"workload {args.workload!r} has {len(pool)} dataflows; "
+            f"--offset {args.offset} --count {args.count} overruns it"
+        )
+    rc = 0
+    with ServeClient((args.host, args.port)) as client:
+        for df in picks:
+            result = client.submit(args.tenant, tenant_copy(df, args.tenant), wait=args.wait)
+            print(json.dumps(result), flush=True)
+            if result.get("status") not in ("ADMITTED", "QUEUED"):
+                rc = 1
+    return rc
+
+
+def cmd_status(argv) -> int:
+    ap = argparse.ArgumentParser(prog="repro.launch.serve status")
+    _addr_args(ap)
+    ap.add_argument("--stats", action="store_true", help="include per-tenant ledgers")
+    ap.add_argument("--tenant", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.serve.client import ServeClient
+
+    with ServeClient((args.host, args.port)) as client:
+        out = client.stats(args.tenant) if args.stats or args.tenant else client.status()
+    print(json.dumps(out, indent=2, sort_keys=True))
+    return 0
+
+
+def cmd_stop(argv) -> int:
+    ap = argparse.ArgumentParser(prog="repro.launch.serve stop")
+    _addr_args(ap)
+    ap.add_argument("--no-drain", action="store_true", help="skip the final fair-share drain")
+    ap.add_argument("--no-checkpoint", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.serve.client import ServeClient
+
+    with ServeClient((args.host, args.port)) as client:
+        if not args.no_drain:
+            client.drain()
+        out = client.shutdown(checkpoint=not args.no_checkpoint)
+    print(json.dumps(out))
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] in _SUBCOMMANDS:
+        handler = {
+            "start": cmd_start,
+            "submit": cmd_submit,
+            "status": cmd_status,
+            "stop": cmd_stop,
+        }[argv[0]]
+        return handler(argv[1:])
+    return legacy_main(argv)
 
 
 if __name__ == "__main__":

@@ -453,6 +453,18 @@ class StreamSystem:
             backend_options=backend_options,
         )
 
+    def quiesce(self) -> None:
+        """Drain in-flight work without releasing anything.
+
+        Blocks until any concurrent dispatch in progress has finished (the
+        stepping pool is drained and dropped; it is re-created lazily on
+        the next concurrent step) and queued background checkpoints are
+        durably on disk. The serving front end calls this before taking a
+        shutdown checkpoint, so the written state can never race a step.
+        """
+        self.flush_checkpoints()
+        self.backend._reset_pool()
+
     def close(self) -> None:
         """Release data-plane resources: flush queued background
         checkpoints, then close the backend (dispatch pool; for the

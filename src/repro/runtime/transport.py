@@ -593,19 +593,54 @@ def _recv_msg(sock: socket.socket) -> Tuple[Dict[str, Any], bytes]:
     return header, payload
 
 
+def _recv_msg_idle(sock: socket.socket) -> Optional[Tuple[Dict[str, Any], bytes]]:
+    """Server-side :func:`_recv_msg` for sockets with a timeout set.
+
+    Returns ``None`` on an *idle* timeout — no byte of a new message has
+    arrived yet — so the handler loop can poll its shutdown flag instead of
+    blocking in ``recv`` forever (the killed-client leak). A timeout once a
+    message has started is a stalled/dead peer: framing sync is lost, so it
+    raises :class:`ConnectionError` and the handler drops the connection.
+    """
+    try:
+        first = sock.recv(1)
+    except socket.timeout:
+        return None
+    if not first:
+        raise ConnectionError("transport peer closed the connection")
+    try:
+        hdr_len = _U32.unpack(first + _recv_exact(sock, 3))[0]
+        header = json.loads(_recv_exact(sock, hdr_len).decode("utf-8"))
+        payload_len = _U32.unpack(_recv_exact(sock, 4))[0]
+        payload = _recv_exact(sock, payload_len) if payload_len else b""
+    except socket.timeout as e:
+        raise ConnectionError("transport peer stalled mid-message") from e
+    return header, payload
+
+
 class TcpBrokerServer:
     """A broker reachable over TCP — one handler thread per connection,
     state in an inner :class:`~repro.runtime.broker.Broker` (so per-topic
-    sequencing and drop-wake semantics are inherited verbatim)."""
+    sequencing and drop-wake semantics are inherited verbatim).
 
-    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+    Shutdown hygiene: the listen socket is ``SO_REUSEADDR`` and every
+    connection carries a ``conn_timeout`` idle poll, so a killed client
+    cannot strand a handler thread in ``recv`` forever and a restarted
+    server rebinds the same port immediately — ``close()`` also closes the
+    tracked connections, which unblocks their handlers right away.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, conn_timeout: float = 5.0):
         self.broker = Broker()
+        self.conn_timeout = conn_timeout
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
         self._sock.listen(128)
         self.address: Tuple[str, int] = self._sock.getsockname()
         self._closed = False
+        self._conns: Set[socket.socket] = set()
+        self._conns_lock = threading.Lock()
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="repro-tcp-broker", daemon=True
         )
@@ -617,6 +652,11 @@ class TcpBrokerServer:
                 conn, _ = self._sock.accept()
             except OSError:
                 return
+            with self._conns_lock:
+                if self._closed:
+                    conn.close()
+                    return
+                self._conns.add(conn)
             # daemon handler threads reap themselves on disconnect — not
             # retained (a long-lived server would leak dead Thread objects)
             threading.Thread(
@@ -626,9 +666,13 @@ class TcpBrokerServer:
 
     def _serve(self, conn: socket.socket) -> None:
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        conn.settimeout(self.conn_timeout)
         try:
-            while True:
-                header, payload = _recv_msg(conn)
+            while not self._closed:
+                msg = _recv_msg_idle(conn)
+                if msg is None:  # idle poll — re-check the shutdown flag
+                    continue
+                header, payload = msg
                 try:
                     reply, out = self._handle(header, payload)
                 except KeyError as e:
@@ -639,6 +683,8 @@ class TcpBrokerServer:
         except (ConnectionError, OSError):
             pass
         finally:
+            with self._conns_lock:
+                self._conns.discard(conn)
             conn.close()
 
     def _handle(self, h: Dict[str, Any], payload: bytes) -> Tuple[Dict[str, Any], bytes]:
@@ -691,10 +737,30 @@ class TcpBrokerServer:
         if self._closed:
             return
         self._closed = True
+        # shutdown() before close(): close() alone doesn't wake a thread
+        # blocked in accept() — the open file description (and the LISTEN
+        # port) would survive until the next connection attempt.
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._sock.close()
         except OSError:  # pragma: no cover
             pass
+        # Actively close live connections so handler threads unblock now,
+        # not one idle-timeout later.
+        with self._conns_lock:
+            conns = list(self._conns)
+        for conn in conns:
+            try:
+                conn.close()
+            except OSError:  # pragma: no cover
+                pass
+        # The port is only certainly rebindable once the accept thread has
+        # let go of the listening file description.
+        if self._accept_thread is not threading.current_thread():
+            self._accept_thread.join(timeout=2.0)
 
 
 class TcpTransport(Transport):

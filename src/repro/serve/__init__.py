@@ -1,12 +1,58 @@
-"""Serving: batched prefill/decode engine and the multi-tenant
-reuse-serving integration of the paper's merge algorithms."""
-from .engine import ServeEngine, GenerationResult
-from .reuse_serving import TenantPipeline, ReuseServing, backbone_pipeline
+"""Serving: the multi-tenant dataflow front end (slot-based admission over
+collaborative reuse), its wire protocol and client, plus the batched
+prefill/decode engine and the library-level reuse-serving integration.
+
+Imports resolve lazily (PEP 562): the front end / protocol / client stack
+is JAX-free (``ServeFrontend(backend="dryrun")`` never imports JAX), while
+``ServeEngine`` and the model-serving pipeline load JAX on first access.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import TYPE_CHECKING
+
+from . import protocol
+from .client import ServeClient
+from .frontend import (
+    AdmissionResult,
+    ServeFrontend,
+    TenantLedger,
+    TenantQuota,
+)
+
+# name -> (module, attribute); resolved on first access to keep JAX lazy.
+_LAZY = {
+    "GenerationResult": ("repro.serve.engine", "GenerationResult"),
+    "ServeEngine": ("repro.serve.engine", "ServeEngine"),
+    "ReuseServing": ("repro.serve.reuse_serving", "ReuseServing"),
+    "TenantPipeline": ("repro.serve.reuse_serving", "TenantPipeline"),
+    "backbone_pipeline": ("repro.serve.reuse_serving", "backbone_pipeline"),
+}
+
+if TYPE_CHECKING:  # pragma: no cover - static imports for type checkers
+    from .engine import GenerationResult, ServeEngine
+    from .reuse_serving import ReuseServing, TenantPipeline, backbone_pipeline
 
 __all__ = [
+    "AdmissionResult",
     "GenerationResult",
     "ReuseServing",
+    "ServeClient",
     "ServeEngine",
+    "ServeFrontend",
+    "TenantLedger",
     "TenantPipeline",
+    "TenantQuota",
     "backbone_pipeline",
+    "protocol",
 ]
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value  # cache for subsequent lookups
+    return value

@@ -13,6 +13,17 @@ Random Walks (add/remove p=½ ×100 after a ⅔ preload, then drain).
 """
 from .opmw import opmw_workload
 from .riot import riot_workload
+from .tenants import TenantEvent, tenant_copy, tenant_trace
 from .traces import TraceEvent, replay, rw_trace, seq_trace
 
-__all__ = ["opmw_workload", "riot_workload", "replay", "seq_trace", "rw_trace", "TraceEvent"]
+__all__ = [
+    "opmw_workload",
+    "riot_workload",
+    "replay",
+    "seq_trace",
+    "rw_trace",
+    "TraceEvent",
+    "TenantEvent",
+    "tenant_copy",
+    "tenant_trace",
+]

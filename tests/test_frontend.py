@@ -1,0 +1,525 @@
+"""Serving front end: slot-based admission, fair share, wire protocol,
+ledger durability, and the tcp shutdown-hygiene regression."""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from helpers import chain_df, fig1
+
+from repro.api import ReuseSession
+from repro.core import DataflowError
+from repro.runtime.transport import TcpBrokerServer, TcpTransport
+from repro.serve import ServeClient, ServeFrontend, TenantQuota, protocol
+from repro.workloads import opmw_workload, tenant_copy, tenant_trace
+
+
+def frontend(**kwargs) -> ServeFrontend:
+    kwargs.setdefault("slots", 32)
+    kwargs.setdefault("backend", "dryrun")
+    return ServeFrontend(**kwargs)
+
+
+def cost_df(name: str, kind: str, n: int):
+    """A chain costing exactly ``n`` slots, with type-disjoint source,
+    stages and sink per ``kind`` so different kinds never reuse each other
+    — every submission of a fresh kind charges exactly ``n``."""
+    assert n >= 3
+    return chain_df(
+        name,
+        f"{kind}_src",
+        [(f"{kind}_op{i}", {"k": i}) for i in range(n - 2)],
+        sink=f"{kind}_sink",
+    )
+
+
+# -- preview (admission planning) ------------------------------------------------
+
+
+class TestPreview:
+    def test_preview_matches_submit_and_mutates_nothing(self):
+        session = ReuseSession(strategy="signature")
+        A, B, C, D = fig1()
+        session.submit(A)
+        before = (
+            dict(session.manager.phi),
+            session.manager._task_counter,
+            set(session.manager.running),
+        )
+        plan = session.preview(B)
+        assert (
+            dict(session.manager.phi),
+            session.manager._task_counter,
+            set(session.manager.running),
+        ) == before
+        receipt = session.submit(B)
+        assert plan.num_created == receipt.num_created
+        assert plan.num_reused == receipt.num_reused
+
+    def test_preview_preserves_minted_ids(self):
+        """Interleaving previews must not perturb the ids a later submit
+        mints — that determinism is what journal replay (and therefore
+        crash recovery) relies on."""
+        A, B, C, D = fig1()
+        plain = ReuseSession(strategy="signature")
+        plain.submit(A)
+        expected = plain.submit(B).plan.task_map
+
+        probed = ReuseSession(strategy="signature")
+        probed.submit(A)
+        for _ in range(3):
+            probed.preview(B)
+            probed.preview(C)
+        assert probed.submit(B).plan.task_map == expected
+
+    def test_preview_rejects_duplicate_name(self):
+        session = ReuseSession(strategy="signature")
+        A = fig1()[0]
+        session.submit(A)
+        with pytest.raises(DataflowError):
+            session.preview(A)
+
+
+# -- slot accounting -------------------------------------------------------------
+
+
+class TestSlotAccounting:
+    def test_reused_segments_cost_no_slots(self):
+        fe = frontend()
+        A, B, C, D = fig1()
+        ra = fe.submit("t1", A)
+        rb = fe.submit("t2", B)
+        assert ra.status == protocol.ADMITTED and ra.slots_charged == len(A.tasks)
+        # B shares A's urban→parse→kalman prefix: charged only its new tail.
+        assert rb.status == protocol.ADMITTED
+        assert rb.slots_charged == len(B.tasks) - rb.reused
+        assert rb.reused > 0
+        assert fe.slots_used == ra.slots_charged + rb.slots_charged
+
+    def test_identical_resubmission_is_free(self):
+        fe = frontend()
+        A = fig1()[0]
+        fe.submit("t1", A)
+        r = fe.submit("t2", A.copy("A2"))
+        assert r.status == protocol.ADMITTED
+        assert r.slots_charged == 0
+        ledger = fe.ledger_for("t2")
+        assert ledger.slots_held == 0
+        assert ledger.slots_saved == len(A.tasks)
+
+    def test_remove_frees_exactly_what_was_charged(self):
+        fe = frontend()
+        A, B, _, _ = fig1()
+        fe.submit("t1", A)
+        rb = fe.submit("t1", B)
+        used = fe.slots_used
+        out = fe.remove("t1", "B")
+        assert out["slots_freed"] == rb.slots_charged
+        assert fe.slots_used == used - rb.slots_charged
+        assert fe.ledger_for("t1").removed == 1
+
+    def test_effective_capacity_tracks_point_in_time_state(self):
+        fe = frontend()
+        A = fig1()[0]
+        fe.submit("t1", A)
+        fe.submit("t2", A.copy("A2"))
+        assert fe.stats()["effective_capacity"] == pytest.approx(2.0)
+        fe.remove("t2", "A2")
+        assert fe.stats()["effective_capacity"] == pytest.approx(1.0)
+
+
+# -- admission outcomes ----------------------------------------------------------
+
+
+class TestAdmission:
+    def test_quota_exceeded_rejected(self):
+        fe = frontend(slots=32, default_quota=TenantQuota(max_slots=5))
+        r = fe.submit("t1", cost_df("big", "a", 6))
+        assert r.status == protocol.REJECTED
+        assert "quota" in r.reason
+        assert fe.ledger_for("t1").rejected == 1
+        assert fe.slots_used == 0
+
+    def test_cost_beyond_pool_rejected_not_queued(self):
+        fe = frontend(slots=4)
+        r = fe.submit("t1", cost_df("big", "a", 6))
+        assert r.status == protocol.REJECTED
+        assert "slot pool" in r.reason
+
+    def test_duplicate_name_rejected(self):
+        fe = frontend()
+        fe.submit("t1", cost_df("x", "a", 3))
+        r = fe.submit("t1", cost_df("x", "b", 3))
+        assert r.status == protocol.REJECTED
+
+    def test_retry_after_then_successful_resubmit(self):
+        fe = frontend(
+            slots=6,
+            default_quota=TenantQuota(max_slots=6, max_pending=0),
+            retry_after=0.25,
+        )
+        blocker = fe.submit("t1", cost_df("block", "a", 6))
+        assert blocker.status == protocol.ADMITTED
+        shed = fe.submit("t2", cost_df("want", "b", 4))
+        assert shed.status == protocol.RETRY_AFTER
+        assert shed.retry_after == pytest.approx(0.25)
+        assert fe.ledger_for("t2").backpressured == 1
+        fe.remove("t1", "block")
+        again = fe.submit("t2", cost_df("want", "b", 4))
+        assert again.status == protocol.ADMITTED
+
+    def test_remove_admits_queued_submission(self):
+        fe = frontend(slots=6, default_quota=TenantQuota(max_slots=6, max_pending=4))
+        fe.submit("t1", cost_df("block", "a", 6))
+        queued = fe.submit("t2", cost_df("next", "b", 4))
+        assert queued.status == protocol.QUEUED
+        out = fe.remove("t1", "block")
+        admitted = [a["name"] for a in out["admitted"]]
+        assert admitted == ["next"]
+        assert fe.tenant_of["next"] == "t2"
+
+    def test_queued_submission_can_be_cancelled(self):
+        fe = frontend(slots=6, default_quota=TenantQuota(max_slots=6, max_pending=4))
+        fe.submit("t1", cost_df("block", "a", 6))
+        assert fe.submit("t2", cost_df("next", "b", 4)).status == protocol.QUEUED
+        out = fe.remove("t2", "next")
+        assert out["cancelled"] is True
+        assert fe.remove("t1", "block")["admitted"] == []
+
+    def test_zero_cost_submission_admitted_even_when_saturated_queue_empty(self):
+        fe = frontend(slots=6)
+        A = cost_df("block", "a", 6)
+        fe.submit("t1", A)
+        r = fe.submit("t2", A.copy("free-rider"))
+        assert r.status == protocol.ADMITTED and r.slots_charged == 0
+
+    def test_draining_rejects_new_work(self):
+        fe = frontend()
+        fe.drain()
+        r = fe.submit("t1", cost_df("late", "a", 3))
+        assert r.status == protocol.REJECTED
+        assert "draining" in r.reason
+
+
+# -- weighted fair share ---------------------------------------------------------
+
+
+class TestFairShare:
+    def test_greedy_tenant_cannot_starve_light_one(self):
+        """A queues 5, B queues 1 behind a blocker; freeing the pool must
+        interleave B after A's first admission (vtime order), not drain A
+        FIFO-first."""
+        fe = frontend(
+            slots=9,
+            default_quota=TenantQuota(max_slots=9, max_pending=8),
+        )
+        fe.submit("C", cost_df("block", "c", 9))
+        for i in range(5):
+            assert fe.submit("A", cost_df(f"a{i}", f"a{i}", 3)).status == protocol.QUEUED
+        assert fe.submit("B", cost_df("b0", "b0", 3)).status == protocol.QUEUED
+        out = fe.remove("C", "block")
+        admitted = [a["name"] for a in out["admitted"]]
+        assert admitted == ["a0", "b0", "a1"]
+
+    def test_weights_scale_the_share(self):
+        fe = frontend(
+            slots=12,
+            default_quota=TenantQuota(max_slots=12, max_pending=8),
+            quotas={"B": TenantQuota(max_slots=12, max_pending=8, weight=3.0)},
+        )
+        fe.submit("C", cost_df("block", "c", 12))
+        for i in range(3):
+            fe.submit("A", cost_df(f"a{i}", f"xa{i}", 3))
+        for i in range(3):
+            fe.submit("B", cost_df(f"b{i}", f"xb{i}", 3))
+        out = fe.remove("C", "block")
+        admitted = [a["name"] for a in out["admitted"]]
+        # B accrues vtime 3× slower (1 per admission vs A's 3), so of the
+        # four admissions that fit, B wins three: only at the initial 0–0
+        # tie does arrival order hand A its slot.
+        assert admitted == ["a0", "b0", "b1", "b2"]
+
+    def test_small_queued_flow_can_fill_gap_head_cannot(self):
+        fe = frontend(slots=8, default_quota=TenantQuota(max_slots=8, max_pending=4))
+        fe.submit("t1", cost_df("hold", "h", 5))  # 3 free
+        assert fe.submit("t2", cost_df("wide", "w", 4)).status == protocol.QUEUED
+        r = fe.submit("t3", cost_df("slim", "s", 3))
+        # t3 fits the 3-slot gap even though t2's head-of-line does not.
+        assert r.status == protocol.ADMITTED
+
+
+# -- per-tenant billing ----------------------------------------------------------
+
+
+class TestBilling:
+    def test_shared_tasks_split_evenly(self):
+        fe = frontend()
+        A = fig1()[0]
+        fe.submit("t1", A)
+        fe.submit("t2", A.copy("A2"))
+        fe.step(5)
+        s = fe.stats()
+        c1 = s["ledgers"]["t1"]["cost_total"]
+        c2 = s["ledgers"]["t2"]["cost_total"]
+        assert c1 > 0
+        assert c1 == pytest.approx(c2)
+
+    def test_bill_sums_to_step_cost(self):
+        fe = frontend()
+        A, B, _, _ = fig1()
+        fe.submit("t1", A)
+        fe.submit("t2", B)
+        reports = [fe.step()["cost"] for _ in range(3)]
+        s = fe.stats()
+        billed = sum(l["cost_total"] for l in s["ledgers"].values())
+        assert billed == pytest.approx(sum(reports), rel=1e-6)
+
+
+# -- wire protocol ---------------------------------------------------------------
+
+
+class TestWireProtocol:
+    def test_two_tenant_socket_session(self, tmp_path):
+        fe = frontend(slots=32)
+        host, port = fe.start()
+        try:
+            A, B, _, _ = fig1()
+            with ServeClient((host, port)) as alice, ServeClient((host, port)) as bob:
+                ra = alice.submit("alice", A)
+                rb = bob.submit("bob", B)
+                assert ra["status"] == protocol.ADMITTED
+                assert rb["status"] == protocol.ADMITTED
+                assert rb["slots_charged"] < len(B.tasks)  # reused alice's prefix
+                step = bob.step(3)
+                assert step["steps"] == 3
+                status = alice.status()
+                assert status["dataflows"] == 2
+                assert status["slots_used"] == ra["slots_charged"] + rb["slots_charged"]
+                stats = alice.stats()
+                assert stats["effective_capacity"] > 1.0
+                assert stats["ledgers"]["bob"]["slots_saved"] > 0
+                assert alice.remove("alice", "A")["ok"]
+                drained = bob.drain()
+                assert drained["ok"]
+                assert bob.submit("bob", cost_df("late", "z", 3))["status"] == protocol.REJECTED
+        finally:
+            fe.close()
+
+    def test_errors_cross_the_wire_as_exceptions(self):
+        fe = frontend()
+        host, port = fe.start()
+        try:
+            with ServeClient((host, port)) as c:
+                with pytest.raises(protocol.ServeProtocolError, match="not admitted"):
+                    c.remove("t1", "ghost")
+                # the connection survives an error response
+                assert c.ping()
+        finally:
+            fe.close()
+
+    def test_shutdown_verb_stops_server(self):
+        fe = frontend()
+        host, port = fe.start()
+        try:
+            with ServeClient((host, port)) as c:
+                assert c.shutdown(checkpoint=False)["ok"]
+            deadline = time.monotonic() + 5.0
+            while fe._sock is not None and time.monotonic() < deadline:
+                time.sleep(0.02)
+            assert fe._sock is None
+        finally:
+            fe.close()
+
+    def test_restart_rebinds_same_port_immediately(self):
+        fe1 = frontend()
+        host, port = fe1.start()
+        # A client that connects and silently dies must not block restart.
+        stale = socket.create_connection((host, port))
+        fe1.close()
+        fe2 = frontend(host=host, port=port)
+        h2, p2 = fe2.start()
+        try:
+            assert (h2, p2) == (host, port)
+            with ServeClient.wait_ready((h2, p2), timeout=5.0) as c:
+                assert c.ping()
+        finally:
+            stale.close()
+            fe2.close()
+
+
+# -- tcp broker shutdown hygiene (regression) ------------------------------------
+
+
+class TestTcpBrokerHygiene:
+    def test_killed_client_cannot_strand_handler(self):
+        server = TcpBrokerServer(conn_timeout=0.2)
+        host, port = server.address
+        # Stall mid-message: send half a header, then nothing. The
+        # conn_timeout must turn this into a dropped connection, not a
+        # stuck thread.
+        stalled = socket.create_connection((host, port))
+        stalled.sendall(b"\x00\x00")
+        time.sleep(0.6)
+        with server._conns_lock:
+            assert not server._conns
+        # Healthy clients still work after the stale one was reaped.
+        t = TcpTransport(address=(host, port))
+        t.publish("topic", np.arange(3, dtype=np.float32))
+        assert t.seq("topic") == 1
+        t.close()
+        stalled.close()
+        server.close()
+
+    def test_restart_rebinds_port_with_live_clients_attached(self):
+        server = TcpBrokerServer(conn_timeout=0.2)
+        host, port = server.address
+        lingering = socket.create_connection((host, port))
+        server.close()
+        # Rebinding the same port must succeed immediately (SO_REUSEADDR +
+        # close() closing tracked conns), not raise EADDRINUSE.
+        server2 = TcpBrokerServer(host=host, port=port, conn_timeout=0.2)
+        assert server2.address[1] == port
+        t = TcpTransport(address=(host, port))
+        t.publish("topic", np.ones(2, dtype=np.float32))
+        assert t.seq("topic") == 1
+        t.close()
+        lingering.close()
+        server2.close()
+
+
+# -- durability ------------------------------------------------------------------
+
+
+class TestDurability:
+    def _drive(self, fe: ServeFrontend, steps: int = 4) -> None:
+        A, B, C, D = fig1()
+        fe.submit("alice", A)
+        fe.submit("bob", B)
+        fe.submit("bob", D)
+        fe.step(steps)
+        fe.remove("bob", "D")
+        fe.submit("alice", C)
+        fe.step(steps)
+
+    def test_restore_preserves_ledgers_and_sink_counts(self, ckpt_dir):
+        fe = frontend(checkpoint_dir=ckpt_dir)
+        self._drive(fe)
+        want = fe.stats()
+        fe.checkpoint()
+        fe.close()
+        del fe  # "kill"
+
+        restored = ServeFrontend.restore(ckpt_dir)
+        got = restored.stats()
+        assert got["ledgers"] == want["ledgers"]
+        assert got["slots_used"] == want["slots_used"]
+        assert got["naive_slots"] == want["naive_slots"]
+        assert got["effective_capacity"] == pytest.approx(want["effective_capacity"])
+
+        # Sink trajectories must continue exactly as an uninterrupted run.
+        uninterrupted = frontend()
+        self._drive(uninterrupted)
+        for fe2 in (restored, uninterrupted):
+            fe2.step(3)
+        for name in ("A", "B", "C"):
+            assert restored.session.sink_digests(name) == uninterrupted.session.sink_digests(name)
+        restored.close()
+        uninterrupted.close()
+
+    def test_restored_frontend_keeps_admitting_with_reuse(self, ckpt_dir):
+        fe = frontend(checkpoint_dir=ckpt_dir)
+        A = fig1()[0]
+        fe.submit("alice", A)
+        fe.checkpoint()
+        fe.close()
+        restored = ServeFrontend.restore(ckpt_dir)
+        r = restored.submit("bob", A.copy("A2"))
+        assert r.status == protocol.ADMITTED
+        assert r.slots_charged == 0  # reuse across the restart boundary
+        restored.close()
+
+    def test_ledger_sidecar_is_valid_json(self, ckpt_dir):
+        fe = frontend(checkpoint_dir=ckpt_dir)
+        fe.submit("t1", fig1()[0])
+        fe.checkpoint()
+        fe.close()
+        with open(os.path.join(ckpt_dir, "frontend-ledger.json")) as fh:
+            payload = json.load(fh)
+        assert payload["version"] == 1
+        assert "t1" in payload["ledgers"]
+
+
+# -- tenant workload -------------------------------------------------------------
+
+
+class TestTenantTrace:
+    def test_trace_is_deterministic(self):
+        pool = opmw_workload()
+        a = list(tenant_trace(pool, ("x", "y"), events=500, seed=3))
+        b = list(tenant_trace(pool, ("x", "y"), events=500, seed=3))
+        assert a == b
+        assert any(e.op == "remove" for e in a)
+
+    def test_trace_names_are_tenant_namespaced_and_consistent(self):
+        pool = opmw_workload()
+        present: dict = {}
+        for ev in tenant_trace(pool, ("x", "y"), events=800, seed=5):
+            assert ev.name == f"{ev.tenant}/{ev.pool_name}"
+            key = (ev.tenant, ev.name)
+            if ev.op == "add":
+                assert key not in present
+                present[key] = True
+            else:
+                assert present.pop(key)
+
+    def test_weights_skew_the_draw(self):
+        pool = opmw_workload()
+        events = list(
+            tenant_trace(pool, ("heavy", "light"), events=4000,
+                         weights={"heavy": 4.0, "light": 1.0}, seed=9)
+        )
+        heavy = sum(1 for e in events if e.tenant == "heavy")
+        assert heavy / len(events) == pytest.approx(0.8, abs=0.05)
+
+    def test_tenant_copy_keeps_graph_renames_flow(self):
+        df = fig1()[0]
+        c = tenant_copy(df, "alice")
+        assert c.name == "alice/A"
+        assert set(c.tasks) == set(df.tasks)
+        assert c.streams == df.streams
+
+
+# -- end-to-end over the trace ---------------------------------------------------
+
+
+class TestServingCapacity:
+    def test_reuse_admits_strictly_more_than_no_reuse(self):
+        pool = opmw_workload()
+        by_name = {d.name: d for d in pool}
+        admitted = {}
+        for strategy in ("signature", "none"):
+            fe = ServeFrontend(
+                slots=64,
+                strategy=strategy,
+                backend="dryrun",
+                default_quota=TenantQuota(max_slots=64, max_pending=4),
+                defrag_every=32,
+            )
+            for ev in tenant_trace(pool, ("a", "b"), events=600, seed=11):
+                if ev.op == "add":
+                    fe.submit(ev.tenant, tenant_copy(by_name[ev.pool_name], ev.tenant))
+                elif ev.name in fe.tenant_of or any(
+                    p.df.name == ev.name for p in fe._pending
+                ):
+                    fe.remove(ev.tenant, ev.name)
+            admitted[strategy] = sum(
+                l.admitted for l in fe.ledgers.values()
+            )
+            fe.close()
+        assert admitted["signature"] > admitted["none"]
