@@ -1,0 +1,49 @@
+"""Host metadata stamped into every BENCH_*.json / bench writer output.
+
+Benchmark numbers are meaningless without the machine that produced them:
+ms/step on a 4-core CI runner and a 64-core dev box differ by an order of
+magnitude, and JAX version bumps move jit timings. Every writer calls
+:func:`host_metadata` and records the result under a ``"host"`` key so
+results stay comparable across runs and runners.
+
+JAX version is read from package metadata (``importlib.metadata``) rather
+than ``import jax`` — the dryrun/multiproc benches are JAX-free and must
+stay that way.
+"""
+from __future__ import annotations
+
+import os
+import platform
+import sys
+from typing import Any, Dict
+
+
+def _dist_version(name: str) -> str:
+    try:
+        from importlib.metadata import version
+
+        return version(name)
+    except Exception:
+        return "unknown"
+
+
+def host_metadata() -> Dict[str, Any]:
+    """Machine/toolchain facts for benchmark provenance (JSON-safe dict)."""
+    return {
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "implementation": platform.python_implementation(),
+        "jax": _dist_version("jax"),
+        "jaxlib": _dist_version("jaxlib"),
+        "executable": sys.executable,
+    }
+
+
+def stamp(record: Dict[str, Any]) -> Dict[str, Any]:
+    """Set the ``"host"`` key in place and return the record, so writers
+    can wrap their final dict in one call. Always overwrites: a record
+    merged from an older file should carry the machine that wrote it."""
+    record["host"] = host_metadata()
+    return record

@@ -19,6 +19,11 @@ from typing import Dict
 from repro.runtime.system import StreamSystem
 from repro.workloads import riot_workload
 
+try:  # package (python -m benchmarks.run) vs script (python benchmarks/foo.py)
+    from benchmarks._host import stamp
+except ImportError:  # pragma: no cover - script execution path
+    from _host import stamp
+
 
 def _steady_ms(system: StreamSystem, steps: int = 30) -> float:
     system.run(3)  # warm the jit caches
@@ -82,7 +87,7 @@ def main(out_dir: str = "results/benchmarks", backend: str = "inprocess") -> Dic
     )
     suffix = "" if backend == "inprocess" else f"_{backend}"
     with open(os.path.join(out_dir, f"defrag_benefit{suffix}.json"), "w") as f:
-        json.dump(out, f, indent=1)
+        json.dump(stamp(out), f, indent=1)
     return out
 
 

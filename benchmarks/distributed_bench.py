@@ -50,6 +50,11 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 from repro.api import ReuseSession, flow
 
+try:  # package (python -m benchmarks.run) vs script (python benchmarks/foo.py)
+    from benchmarks._host import stamp
+except ImportError:  # pragma: no cover - script execution path
+    from _host import stamp
+
 
 def _chains(n_chains: int, depth: int = 4) -> List:
     """Independent compute-heavy kalman chains — one segment each, one
@@ -227,7 +232,7 @@ def main(argv=None) -> int:
     )
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump(record, f, indent=1)
+        json.dump(stamp(record), f, indent=1)
     print(f"wrote {args.out}")
     # The PR acceptance bar: where the GIL is the binding constraint,
     # worker processes must beat the threaded plane's ms/step. Exit code 2

@@ -1,0 +1,312 @@
+"""Elastic cluster plane benchmark — PR 7 acceptance (BENCH_pr7.json).
+
+Three experiments over the multiproc data plane:
+
+  * **supervision overhead** — ms/step on a steady deployment with the
+    heartbeat supervisor + per-step spill snapshots armed vs bare,
+    best-of-N windows, on the **jit worker plane** (the production
+    plane). Spill cost is a small constant per worker per wave (the
+    payload is ephemeral-filtered to a few hundred bytes per segment),
+    so it amortizes against real XLA compute. Acceptance bar: overhead
+    under 5%. The same measurement on the dry plane — where a step does
+    almost no compute, so the constant cannot amortize — is reported as
+    context, not gated.
+  * **recovery after kill** — SIGKILL one worker mid-trace under
+    supervision; the step that hits the dead pipe triggers respawn +
+    redeploy from spill snapshots and the run completes. Reports the
+    measured redeploy latency and asserts sink counts identical to an
+    uninterrupted run (the exactly-once contract).
+  * **autoscaler grow-then-shrink** — a bursty trace (light load, then a
+    submission burst, then removal). The EWMA-pressure autoscaler, with
+    thresholds calibrated from the measured light-phase pressure, must
+    grow the pool during the burst and shrink it back after — the
+    pool-size timeline is recorded.
+
+Usage:
+    PYTHONPATH=src python benchmarks/elasticity_bench.py \
+        [--workers 2] [--steps 40] [--out results/benchmarks/BENCH_pr7.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import time
+from typing import Dict, List
+
+from repro.api import flow
+from repro.cluster import Autoscaler, WorkerSupervisor
+from repro.runtime.system import StreamSystem
+from repro.runtime.worker import MultiprocBackend
+
+try:  # package (python -m benchmarks.run) vs script (python benchmarks/foo.py)
+    from benchmarks._host import stamp
+except ImportError:  # pragma: no cover - script execution path
+    from _host import stamp
+
+
+def _chains(n: int, depth: int = 3, tag: str = "el") -> List:
+    dags = []
+    for i in range(n):
+        b = flow(f"{tag}{i}").source(f"sensor{i}")
+        for k in range(depth):
+            b.then("kalman", q=0.1 + i, stage=k)
+        dags.append(b.sink("store").build())
+    return dags
+
+
+def _system(workers: int, plane: str = "dry", batch: int = 0,
+            **backend_kw) -> StreamSystem:
+    be = MultiprocBackend(workers=workers, worker_plane=plane, **backend_kw)
+    kw = {"base_batch": batch} if batch else {}
+    return StreamSystem(
+        strategy="signature", backend=be, step_mode="concurrent",
+        max_workers=max(workers, 2), **kw,
+    )
+
+
+def _counts(system: StreamSystem) -> Dict:
+    return {
+        name: {s: d["count"] for s, d in system.sink_digests(name).items()}
+        for name in sorted(system.manager.submitted)
+    }
+
+
+def _ms_per_step(system: StreamSystem, steps: int, windows: int = 5) -> float:
+    """Best-of-N windows (the min is the honest floor under container
+    scheduling jitter, same methodology as the PR 5 bench)."""
+    best = float("inf")
+    for _ in range(windows):
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            system.step()
+        best = min(best, (time.perf_counter() - t0) / steps)
+    return 1e3 * best
+
+
+def bench_overhead(workers: int, chains: int, steps: int,
+                   plane: str = "dry", batch: int = 0,
+                   rounds: int = 3) -> Dict[str, float]:
+    """Steady-state ms/step, supervised vs bare, same deployment.
+
+    Bare and supervised runs alternate for ``rounds`` rounds and each
+    mode takes its minimum — paired sampling, so slow drift on a shared
+    host (the dominant noise source) cannot masquerade as overhead."""
+    ms: Dict[str, float] = {"bare": float("inf"), "supervised": float("inf")}
+    warm = 1 if plane == "dry" else 4  # jit: compiles outside the clock
+    for _ in range(rounds):
+        for mode in ("bare", "supervised"):
+            system = _system(workers, plane=plane, batch=batch)
+            sup = None
+            if mode == "supervised":
+                # stock supervisor config: 0.5s heartbeat, spill snapshots
+                sup = WorkerSupervisor(system.backend).start()
+            for df in _chains(chains):
+                system.submit(df)
+            for _ in range(warm):  # deploy + first publish outside the clock
+                system.step()
+            ms[mode] = min(ms[mode], _ms_per_step(system, steps))
+            if mode == "supervised":
+                spill = system.backend._spill_ewma
+                if spill is not None:
+                    ms["spill_ms_per_worker_step"] = spill
+            if sup is not None:
+                sup.stop()
+            system.close()
+    for mode in ("bare", "supervised"):
+        print(f"  {plane}/{mode:10s}: {ms[mode]:7.2f} ms/step")
+    ms["overhead_pct"] = 100.0 * (ms["supervised"] - ms["bare"]) / ms["bare"]
+    return ms
+
+
+def bench_recovery(workers: int, chains: int, steps: int) -> Dict[str, object]:
+    """Kill one worker mid-trace; report redeploy latency and conformance."""
+    # uninterrupted reference
+    ref = _system(workers)
+    for df in _chains(chains):
+        ref.submit(df)
+    for _ in range(steps):
+        ref.step()
+    expect = _counts(ref)
+    ref.close()
+
+    system = _system(workers)
+    sup = WorkerSupervisor(
+        system.backend, heartbeat_interval=0.2, snapshot_states=True
+    ).start()
+    for df in _chains(chains):
+        system.submit(df)
+    kill_at = steps // 2
+    t_kill = 0.0
+    for i in range(steps):
+        if i == kill_at:
+            victim = system.backend._procs[workers - 1]
+            t_kill = time.perf_counter()
+            os.kill(victim.pid, signal.SIGKILL)
+        system.step()
+    t_done = time.perf_counter()
+    got = _counts(system)
+    respawns = list(system.backend.respawns)
+    sup.stop()
+    system.close()
+    assert got == expect, "post-recovery sink counts diverged from uninterrupted run"
+    assert respawns, "worker was killed but no respawn was recorded"
+    out = {
+        "kill_at_step": kill_at,
+        "respawns": len(respawns),
+        "redeploy_ms": round(float(respawns[0]["ms"]), 2),
+        "segments_redeployed": len(respawns[0]["segments"]),
+        "detect_plus_recover_s": round(t_done - t_kill, 3),
+        "sink_counts_identical": True,
+    }
+    print(f"  killed worker at step {kill_at}: redeploy {out['redeploy_ms']} ms, "
+          f"{out['segments_redeployed']} segments, counts identical")
+    return out
+
+
+def bench_autoscale(steps_per_phase: int, batch: int = 1024) -> Dict[str, object]:
+    """Light -> burst -> shrink trace; thresholds calibrated from the
+    measured light-phase pressure so the bench is robust to host speed.
+
+    Runs on the jit plane: dry steps finish in microseconds, where
+    scheduling jitter is the same magnitude as the signal itself. Real
+    XLA compute puts the light/burst pressure ratio (~6x) far above the
+    noise floor. Calibration reads the *settled* EWMA — the first light
+    steps carry compile spikes that would inflate the baseline."""
+    system = _system(1, plane="jit", batch=batch)
+    light = _chains(2, tag="lo")
+    burst = _chains(10, tag="hi")
+    for df in light:
+        system.submit(df)
+    for _ in range(2 * steps_per_phase):  # deploy + compile + EWMA settle
+        system.step()
+    probe = Autoscaler(system.backend)  # placeholder policy, replaced below
+    samples = []
+    for _ in range(steps_per_phase):
+        system.step()
+        samples.append(probe.pressure())
+    p_light = sorted(samples)[len(samples) // 2]  # median: spike-proof
+    # the burst carries ~6x the light-phase load, so grow at 2x the light
+    # baseline (safely above measurement noise, far below the burst) and
+    # shrink back under 1.2x; short patience/cooldown so the bursty
+    # phases (tens of steps) can express a full grow+shrink cycle
+    high_ms, low_ms = 2.0 * p_light, 1.2 * p_light
+    scaler = Autoscaler(
+        system.backend, min_workers=1, max_workers=4,
+        high_ms=high_ms, low_ms=low_ms,
+        patience=2, cooldown=3,
+    )
+    timeline: List[int] = []
+
+    def run_phase(n: int) -> None:
+        for _ in range(n):
+            system.step()
+            scaler.observe()
+            timeline.append(system.backend.n_workers)
+
+    run_phase(steps_per_phase)          # light: should hold at 1
+    for df in burst:
+        system.submit(df)
+    run_phase(2 * steps_per_phase)      # burst: pressure ~5x light -> grow
+    peak = max(timeline)
+    for df in burst:
+        system.remove(df.name)
+    run_phase(3 * steps_per_phase)      # shrink: pressure decays -> scale down
+    final = timeline[-1]
+    actions = list(scaler.actions)
+    system.close()
+    out = {
+        "worker_plane": "jit",
+        "base_batch": batch,
+        "light_pressure_ms": round(p_light, 4),
+        "high_ms": round(high_ms, 4),
+        "low_ms": round(low_ms, 4),
+        "peak_workers": peak,
+        "final_workers": final,
+        "grew": peak > 1,
+        "shrank_back": final < peak,
+        "actions": actions,
+        "pool_timeline": timeline,
+    }
+    print(f"  pool 1 -> {peak} (burst) -> {final} (drain), "
+          f"{len(actions)} scaling actions")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--chains", type=int, default=6)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--phase-steps", type=int, default=15,
+                    help="steps per autoscaler phase (light/burst/shrink)")
+    ap.add_argument("--batch", type=int, default=16384,
+                    help="event batch for the jit overhead phase (large enough "
+                         "that per-wave spill cost amortizes against compute)")
+    ap.add_argument("--jit-steps", type=int, default=12,
+                    help="steps per timing window in the jit overhead phase")
+    ap.add_argument("--out", default=os.path.join("results", "benchmarks", "BENCH_pr7.json"))
+    args = ap.parse_args(argv)
+
+    print(f"supervision overhead, jit plane "
+          f"({args.workers} workers, {args.chains} chains, batch {args.batch}):")
+    overhead = bench_overhead(args.workers, args.chains, args.jit_steps,
+                              plane="jit", batch=args.batch)
+    print("supervision overhead, dry plane (context only — no compute to "
+          "amortize the constant spill cost against):")
+    overhead_dry = bench_overhead(args.workers, args.chains, args.steps)
+    print("recovery after SIGKILL:")
+    recovery = bench_recovery(args.workers, args.chains, args.steps)
+    print("autoscaler grow-then-shrink:")
+    autoscale = bench_autoscale(args.phase_steps)
+
+    record = {
+        "bench": "elastic_cluster_plane",
+        "deployment": {
+            "workers": args.workers, "chains": args.chains,
+            "steps": args.steps, "transport": "shm",
+            "overhead_plane": "jit", "overhead_batch": args.batch,
+        },
+        "supervision": {
+            "worker_plane": "jit",
+            "base_batch": args.batch,
+            "bare_ms_per_step": round(overhead["bare"], 3),
+            "supervised_ms_per_step": round(overhead["supervised"], 3),
+            "overhead_pct": round(overhead["overhead_pct"], 2),
+            "spill_ms_per_worker_step": round(
+                overhead.get("spill_ms_per_worker_step", 0.0), 4
+            ),
+        },
+        "supervision_dry_context": {
+            "worker_plane": "dry",
+            "bare_ms_per_step": round(overhead_dry["bare"], 3),
+            "supervised_ms_per_step": round(overhead_dry["supervised"], 3),
+            "overhead_pct": round(overhead_dry["overhead_pct"], 2),
+            "note": (
+                "dry steps do near-zero compute, so the constant per-wave "
+                "spill write cannot amortize; not an acceptance gate"
+            ),
+        },
+        "recovery": recovery,
+        "autoscale": autoscale,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(stamp(record), f, indent=1)
+    print(f"wrote {args.out}")
+    # Acceptance bars. Exit code 2 = bar missed on a healthy run (noisy
+    # shared runners can tolerate it in smoke jobs; crashes still fail hard).
+    ok = True
+    if record["supervision"]["overhead_pct"] >= 5.0:
+        print(f"WARNING: supervision overhead "
+              f"{record['supervision']['overhead_pct']:.1f}% >= 5%")
+        ok = False
+    if not (autoscale["grew"] and autoscale["shrank_back"]):
+        print("WARNING: autoscaler did not complete a grow-then-shrink cycle")
+        ok = False
+    return 0 if ok else 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

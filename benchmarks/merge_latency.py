@@ -43,6 +43,11 @@ import numpy as np
 
 from repro.api import Dataflow, ReuseSession, flow
 
+try:  # package (python -m benchmarks.run) vs script (python benchmarks/foo.py)
+    from benchmarks._host import stamp
+except ImportError:  # pragma: no cover - script execution path
+    from _host import stamp
+
 
 def _library(n_dags: int, seed: int = 0, groups: int | None = None) -> List[Dataflow]:
     """n_dags chains over G groups with nested shared prefixes.
@@ -319,7 +324,7 @@ def main(out_dir: str = "results/benchmarks", parts: List[str] | None = None) ->
             stored.update(out)
             out = stored
     with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+        json.dump(stamp(out), f, indent=1)
     return out
 
 

@@ -13,6 +13,11 @@ import json
 import os
 from typing import Dict, List
 
+try:  # package (python -m benchmarks.run) vs script (python benchmarks/foo.py)
+    from benchmarks._host import stamp
+except ImportError:  # pragma: no cover - script execution path
+    from _host import stamp
+
 
 def load(dry_dir: str = "results/dryrun") -> List[Dict]:
     recs = []
@@ -84,7 +89,7 @@ def main(out_dir: str = "results/benchmarks") -> Dict:
         "picks": {k: f"{v['arch']}×{v['shape']}" for k, v in picks.items()},
     }
     with open(os.path.join(out_dir, "roofline_summary.json"), "w") as f:
-        json.dump(summary, f, indent=1)
+        json.dump(stamp(summary), f, indent=1)
     return summary
 
 

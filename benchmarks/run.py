@@ -15,6 +15,8 @@ import time
 
 
 def main() -> int:
+    import json
+
     from benchmarks import (
         defrag_benefit,
         merge_latency,
@@ -22,8 +24,10 @@ def main() -> int:
         serving_reuse,
         workload_traces,
     )
+    from benchmarks._host import host_metadata
 
     t0 = time.time()
+    print(f"host: {json.dumps(host_metadata(), sort_keys=True)}")
     print("=== fig 2/3/4: running tasks / cores / reuse histogram ===")
     workload_traces.main()
     print("\n=== merge latency (faithful vs signature) ===")

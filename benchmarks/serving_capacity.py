@@ -24,6 +24,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.serve.frontend import ServeFrontend, TenantQuota  # noqa: E402
 from repro.workloads import opmw_workload, tenant_copy, tenant_trace  # noqa: E402
 
+try:  # package (python -m benchmarks.run) vs script (python benchmarks/foo.py)
+    from benchmarks._host import stamp
+except ImportError:  # pragma: no cover - script execution path
+    from _host import stamp
+
 TENANTS = ("alice", "bob")
 
 
@@ -121,7 +126,7 @@ def main(argv=None) -> int:
         ),
         "reuse_admits_strictly_more": reuse["admitted"] > naive["admitted"],
     }
-    text = json.dumps(out, indent=1)
+    text = json.dumps(stamp(out), indent=1)
     print(text)
     if args.out:
         os.makedirs(os.path.dirname(args.out), exist_ok=True)

@@ -12,6 +12,11 @@ from typing import Dict
 
 from repro.serve import ReuseServing, TenantPipeline
 
+try:  # package (python -m benchmarks.run) vs script (python benchmarks/foo.py)
+    from benchmarks._host import stamp
+except ImportError:  # pragma: no cover - script execution path
+    from _host import stamp
+
 
 def _build(strategy: str, tenants: int):
     rs = ReuseServing(strategy=strategy, base_batch=4)
@@ -63,7 +68,7 @@ def main(out_dir: str = "results/benchmarks", tenants: int = 9) -> Dict:
         f"({out['none']['step_ms']}→{out['signature']['step_ms']} ms)"
     )
     with open(os.path.join(out_dir, "serving_reuse.json"), "w") as f:
-        json.dump(out, f, indent=1)
+        json.dump(stamp(out), f, indent=1)
     return out
 
 

@@ -28,6 +28,11 @@ from repro.api import ReuseSession
 from repro.ops.costs import cost_weight_for_task
 from repro.workloads import opmw_workload, replay, riot_workload, rw_trace, seq_trace
 
+try:  # package (python -m benchmarks.run) vs script (python benchmarks/foo.py)
+    from benchmarks._host import stamp
+except ImportError:  # pragma: no cover - script execution path
+    from _host import stamp
+
 CORES_PER_UNIT = 0.157   # calibrated: 471 π tasks ≈ 74 cores (paper §5.3)
 PAUSE_FRACTION = 0.17    # 274 paused ≈ 7.5 cores ⇒ ~0.027 / 0.157
 
@@ -251,7 +256,7 @@ def main(
                     out_dir, f"backend_{backend}_{wname}_{tname}{suffix}.json"
                 )
                 with open(path, "w") as f:
-                    json.dump({"series": series, "summary": s}, f, indent=1)
+                    json.dump(stamp({"series": series, "summary": s}), f, indent=1)
                 print(
                     f"{wname}/{tname} [{backend}]: peak tasks "
                     f"{s['peak_default_tasks']}→{s['peak_reuse_tasks']} "
@@ -266,7 +271,7 @@ def main(
             s["wall_s"] = round(time.time() - t0, 2)
             out[f"{wname}_{tname}"] = s
             with open(os.path.join(out_dir, f"fig2_3_4_{wname}_{tname}.json"), "w") as f:
-                json.dump({"series": series, "summary": s}, f, indent=1)
+                json.dump(stamp({"series": series, "summary": s}), f, indent=1)
             print(
                 f"{wname}/{tname}: peak tasks {s['peak_default_tasks']}→"
                 f"{s['peak_reuse_tasks']} (−{s['peak_task_reduction']:.0%}), "

@@ -72,6 +72,9 @@ class ReuseSession:
         transport: Optional[Any] = None,
         workers: Optional[int] = None,
         backend_options: Optional[Dict[str, Any]] = None,
+        supervise: Union[bool, Dict[str, Any]] = False,
+        autoscale: Optional[Union[bool, Dict[str, Any]]] = None,
+        on_worker_event: Optional[Hook] = None,
         system: Optional[Any] = None,
         on_merge: Optional[Hook] = None,
         on_unmerge: Optional[Hook] = None,
@@ -110,6 +113,9 @@ class ReuseSession:
                 "transport": transport,
                 "workers": workers,
                 "backend_options": backend_options,
+                "supervise": supervise or None,
+                "autoscale": autoscale,
+                "on_worker_event": on_worker_event,
             }
             if any(v is not None for v in rebind.values()):
                 names = ", ".join(k for k, v in rebind.items() if v is not None)
@@ -149,6 +155,9 @@ class ReuseSession:
                 transport=transport,
                 workers=workers,
                 backend_options=backend_options,
+                supervise=supervise,
+                autoscale=autoscale,
+                on_worker_event=on_worker_event,
             )
             self.manager: ReuseManager = self._system.manager
         else:
@@ -163,6 +172,9 @@ class ReuseSession:
                 "transport": transport,
                 "workers": workers,
                 "backend_options": backend_options,
+                "supervise": supervise or None,
+                "autoscale": autoscale,
+                "on_worker_event": on_worker_event,
             }
             if any(v is not None for v in bad.values()):
                 names = ", ".join(k for k, v in bad.items() if v is not None)
@@ -435,6 +447,14 @@ class ReuseSession:
 
     def reuse_counts(self) -> Dict[str, int]:
         return self.manager.reuse_counts()
+
+    def worker_health(self) -> Optional[Dict[str, Any]]:
+        """Cluster-plane health snapshot (worker liveness, respawns,
+        autoscaler state). ``None`` for control-plane sessions and
+        in-process backends — only a worker-pool backend can be sick."""
+        if self._system is None:
+            return None
+        return self._system.worker_health()
 
     def stats(self) -> SessionStats:
         mgr = self.manager

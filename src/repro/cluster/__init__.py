@@ -1,0 +1,59 @@
+"""Cluster plane: worker supervision, crash recovery, elastic autoscaling
+and pluggable worker launchers over the multiproc data plane.
+
+Imports resolve lazily (PEP 562) because :mod:`repro.runtime.worker`
+imports :mod:`repro.cluster.events` at module load — an eager
+``from .supervisor import WorkerSupervisor`` here would close that loop.
+:mod:`~repro.cluster.events` itself is dependency-free and safe to import
+from anywhere.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import TYPE_CHECKING
+
+from .events import EVENT_KINDS, WorkerEvent
+
+# name -> (module, attribute); resolved on first access to avoid the
+# worker.py <-> cluster import cycle and keep `import repro.cluster` light.
+_LAZY = {
+    "WorkerSupervisor": ("repro.cluster.supervisor", "WorkerSupervisor"),
+    "Autoscaler": ("repro.cluster.autoscaler", "Autoscaler"),
+    "AutoscalePolicy": ("repro.cluster.autoscaler", "AutoscalePolicy"),
+    "WorkerHandle": ("repro.cluster.launcher", "WorkerHandle"),
+    "LocalProcessLauncher": ("repro.cluster.launcher", "LocalProcessLauncher"),
+    "SubprocessLauncher": ("repro.cluster.launcher", "SubprocessLauncher"),
+    "resolve_launcher": ("repro.cluster.launcher", "resolve_launcher"),
+}
+
+if TYPE_CHECKING:  # pragma: no cover - static imports for type checkers
+    from .autoscaler import Autoscaler, AutoscalePolicy
+    from .launcher import (
+        LocalProcessLauncher,
+        SubprocessLauncher,
+        WorkerHandle,
+        resolve_launcher,
+    )
+    from .supervisor import WorkerSupervisor
+
+__all__ = [
+    "Autoscaler",
+    "AutoscalePolicy",
+    "EVENT_KINDS",
+    "LocalProcessLauncher",
+    "SubprocessLauncher",
+    "WorkerEvent",
+    "WorkerHandle",
+    "WorkerSupervisor",
+    "resolve_launcher",
+]
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value  # cache for subsequent lookups
+    return value

@@ -146,6 +146,10 @@ def run_dataflow_trace(
     max_workers: Optional[int] = None,
     transport: Optional[str] = None,
     workers: Optional[int] = None,
+    supervise: bool = False,
+    autoscale: Optional[Dict[str, Any]] = None,
+    kill_worker_at: Optional[int] = None,
+    kill_worker: int = 0,
 ) -> Dict[str, Any]:
     """Replay ``workload/trace`` (e.g. ``opmw/rw1``) on an ExecutionBackend.
 
@@ -159,6 +163,13 @@ def run_dataflow_trace(
     through the dependency-aware wave pipeline (on the dry-run backend the
     per-step ``makespan_ms`` then models concurrent wall-clock: wave max,
     not wave sum).
+
+    Cluster-plane knobs (``backend="multiproc"`` only): ``supervise``
+    arms self-healing worker supervision, ``autoscale`` passes
+    :class:`~repro.cluster.AutoscalePolicy` kwargs, and
+    ``kill_worker_at=N`` SIGKILLs worker ``kill_worker`` after trace
+    event ``N`` — the CI chaos smoke: the supervisor must recover it and
+    the replay must still complete.
     """
     from repro.api import ReuseSession
     from repro.workloads import (
@@ -199,6 +210,8 @@ def run_dataflow_trace(
             checkpoint_background=checkpoint_background or None,
             transport=transport,
             workers=workers,
+            supervise=supervise,
+            autoscale=autoscale,
         )
         resumed_at = len(session.manager.journal)  # events already applied
     else:
@@ -213,6 +226,8 @@ def run_dataflow_trace(
             max_workers=max_workers,
             transport=transport,
             workers=workers,
+            supervise=supervise,
+            autoscale=autoscale,
         )
     todo = events[resumed_at:]
     if max_events is not None:
@@ -224,6 +239,12 @@ def run_dataflow_trace(
     # trace must not leak orphan workers into the CI runner)
     try:
         for i, _ in enumerate(replay(session, dags, todo)):
+            if kill_worker_at is not None and i == kill_worker_at:
+                import signal
+
+                be = session._system.backend
+                victim = kill_worker % max(getattr(be, "n_workers", 1), 1)
+                os.kill(be._procs[victim].pid, signal.SIGKILL)
             report = None
             for _ in range(steps_per_event):
                 report = session.step()
@@ -247,6 +268,7 @@ def run_dataflow_trace(
         workers_n = getattr(backend_obj, "n_workers", None)
         backend_name = session.backend_name
         strategy_name = session.strategy
+        health = session.worker_health()
     finally:
         session.close()
     return {
@@ -264,6 +286,7 @@ def run_dataflow_trace(
         "peak_paused_tasks": max(paused) if paused else 0,
         "peak_cores": max(cost) if cost else 0.0,
         "peak_makespan_ms": max(makespan) if makespan else 0.0,
+        "worker_health": health,
         "series": {
             "live_tasks": live,
             "paused_tasks": paused,
@@ -271,6 +294,17 @@ def run_dataflow_trace(
             "makespan_ms": makespan,
         },
     }
+
+
+def _parse_autoscale(spec: Optional[str]) -> Optional[Dict[str, Any]]:
+    """``"MIN:MAX"`` -> AutoscalePolicy kwargs (None passes through)."""
+    if not spec:
+        return None
+    try:
+        lo, _, hi = spec.partition(":")
+        return {"min_workers": int(lo), "max_workers": int(hi)}
+    except ValueError:
+        raise SystemExit(f"--autoscale wants MIN:MAX (e.g. 1:4), got {spec!r}") from None
 
 
 def main(argv=None) -> int:
@@ -317,6 +351,25 @@ def main(argv=None) -> int:
         help="worker-process pool size for --backend multiproc",
     )
     ap.add_argument(
+        "--supervise", action="store_true",
+        help="arm the cluster plane on --backend multiproc: heartbeat "
+        "supervision, crash/hang recovery, shadow-snapshot redeploys",
+    )
+    ap.add_argument(
+        "--autoscale", default=None, metavar="MIN:MAX",
+        help="EWMA-driven worker-pool autoscaling bounds for --backend "
+        "multiproc (e.g. 1:4)",
+    )
+    ap.add_argument(
+        "--kill-worker-at", type=int, default=None, metavar="EVENT",
+        help="chaos smoke: SIGKILL --kill-worker after trace event N "
+        "(pair with --supervise; the run must still complete)",
+    )
+    ap.add_argument(
+        "--kill-worker", type=int, default=0,
+        help="which worker --kill-worker-at kills (default 0)",
+    )
+    ap.add_argument(
         "--checkpoint-background", action="store_true",
         help="write checkpoints on a background thread (snapshot on the "
         "stepping thread, encode/fsync/rename off-thread)",
@@ -351,6 +404,10 @@ def main(argv=None) -> int:
             max_workers=args.max_workers,
             transport=args.transport,
             workers=args.workers,
+            supervise=args.supervise,
+            autoscale=_parse_autoscale(args.autoscale),
+            kill_worker_at=args.kill_worker_at,
+            kill_worker=args.kill_worker,
         )
         summary = {k: v for k, v in rec.items() if k != "series"}
         print(json.dumps(summary, indent=2))

@@ -198,7 +198,7 @@ def cmd_submit(argv) -> int:
     ap.add_argument("--wait", action="store_true", help="sleep out RETRY_AFTER backpressure")
     args = ap.parse_args(argv)
 
-    from repro.serve.client import ServeClient
+    from repro.serve.client import ServeClient, SubmitTimeout
     from repro.workloads import tenant_copy
 
     pool = _workload(args.workload)
@@ -211,7 +211,14 @@ def cmd_submit(argv) -> int:
     rc = 0
     with ServeClient((args.host, args.port)) as client:
         for df in picks:
-            result = client.submit(args.tenant, tenant_copy(df, args.tenant), wait=args.wait)
+            try:
+                result = client.submit(
+                    args.tenant, tenant_copy(df, args.tenant), wait=args.wait
+                )
+            except SubmitTimeout as e:
+                print(json.dumps({"status": "TIMEOUT", "error": str(e)}), flush=True)
+                rc = 1
+                continue
             print(json.dumps(result), flush=True)
             if result.get("status") not in ("ADMITTED", "QUEUED"):
                 rc = 1

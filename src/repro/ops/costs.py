@@ -115,6 +115,21 @@ def cost_weight_for_task(task: Any) -> float:
     )
 
 
+# State leaves that a task's ``apply()`` overwrites wholesale every step
+# without ever reading — scratch outputs like a sink's retained ``last``
+# batch. Per-step recovery spills skip them (they self-heal on the first
+# post-recovery step, and nothing downstream observes them before that);
+# checkpoints, ``states`` RPCs and wire snapshots stay byte-exact. Lives
+# here, not on :class:`~repro.ops.base.Operator`, because the multiproc
+# coordinator and dry workers consult it without importing JAX.
+_EPHEMERAL_SINK_KEYS = ("last",)
+
+
+def ephemeral_state_keys(task: Any) -> tuple:
+    """Spill-excluded state keys of a :class:`repro.core.graph.Task`."""
+    return _EPHEMERAL_SINK_KEYS if task.is_sink else ()
+
+
 # -- dry-run latency calibration ------------------------------------------------
 #
 # cost_weight is a *relative* per-event CPU cost; it says nothing about

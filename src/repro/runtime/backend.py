@@ -220,6 +220,10 @@ class ExecutionBackend:
         # changes and on close().
         self._pool: Optional[ThreadPoolExecutor] = None
         self.on_wave: Optional[Callable[[WaveEvent], None]] = None
+        # cluster-plane health surface: every backend accepts the hook, the
+        # single-process backends just never emit (worker_health() -> None)
+        self.worker_events: List[Any] = []
+        self.on_worker_event: Optional[Callable[[Any], None]] = None
         # opt-in StepReport ring buffer: bounds self.reports in memory AND
         # persists the tail in checkpoints (None = unbounded, not persisted)
         self.history_limit: Optional[int] = None
@@ -394,7 +398,7 @@ class ExecutionBackend:
             order = {n: s.spec.created_at for n, s in self.segments.items()}
             return run_ready_queue(
                 self.seg_deps, self._step_named, self.max_workers, order,
-                pool=self._pool,
+                pool=self._pool, recover=self._step_recover,
             )
         finally:
             self._end_concurrent_step()
@@ -406,6 +410,36 @@ class ExecutionBackend:
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+
+    # -- cluster-plane hooks (overridden by the multiproc backend) --------------
+    def _step_recover(self, name: str, exc: BaseException) -> bool:
+        """Attempt to recover from a failed segment step so the dispatch
+        loop can re-queue the item instead of erroring the step. Backends
+        without a self-healing worker pool decline."""
+        return False
+
+    def worker_health(self) -> Optional[Dict[str, Any]]:
+        """Worker-pool health snapshot; ``None`` for in-process backends."""
+        return None
+
+    def _emit_worker_event(self, kind: str, worker: Optional[int] = None,
+                           detail: str = "", ms: float = 0.0) -> None:
+        """Record a cluster-plane event and forward it to the user hook.
+
+        A failing user hook must never break recovery, so hook exceptions
+        are swallowed after the event is recorded."""
+        from repro.cluster.events import WorkerEvent
+
+        event = WorkerEvent(kind=kind, worker=worker, step=self.step_count,
+                            detail=detail, ms=ms)
+        self.worker_events.append(event)
+        if len(self.worker_events) > 256:
+            del self.worker_events[:-256]
+        if self.on_worker_event is not None:
+            try:
+                self.on_worker_event(event)
+            except Exception:  # pragma: no cover - user-hook safety
+                pass
 
     def close(self) -> None:
         """Release stepping resources (the persistent dispatch pool).

@@ -115,6 +115,8 @@ def run_ready_queue(
     max_workers: Optional[int] = None,
     order: Optional[Mapping[str, int]] = None,
     pool: Optional[ThreadPoolExecutor] = None,
+    recover: Optional[Callable[[str, BaseException], bool]] = None,
+    max_retries: int = 2,
 ) -> Dict[str, float]:
     """Dependency-aware concurrent dispatch over a thread pool.
 
@@ -124,6 +126,13 @@ def run_ready_queue(
     per-segment ``runner`` results (step wall-times in ms). The first
     runner exception is re-raised after in-flight work drains; no new
     segments are dispatched past an error.
+
+    ``recover`` is the cluster plane's self-healing seam: when an item
+    fails, ``recover(name, exc)`` may repair the fault (respawn the dead
+    worker, redeploy its segments) and return ``True`` — the item is then
+    **re-queued** instead of recorded as an error, at most ``max_retries``
+    times per item. A declined or failed recovery falls through to the
+    normal drain-and-raise path.
 
     Callers on a hot path pass a persistent ``pool`` (backends keep one
     across steps — pool spin-up costs more than a small step); without
@@ -139,6 +148,7 @@ def run_ready_queue(
             dependents[d].append(n)
     results: Dict[str, float] = {}
     errors: List[BaseException] = []
+    retries: Dict[str, int] = {}
     owned = pool is None
     if pool is None:
         pool = ThreadPoolExecutor(max_workers=max_workers)
@@ -150,12 +160,24 @@ def run_ready_queue(
         while futures:
             done, _ = wait(futures, return_when=FIRST_COMPLETED)
             newly: List[str] = []
+            requeue: List[str] = []
             for fut in done:
                 n = futures.pop(fut)
                 try:
                     results[n] = fut.result()
                 except BaseException as e:  # noqa: BLE001 - re-raised below
-                    errors.append(e)
+                    recovered = False
+                    if recover is not None and retries.get(n, 0) < max_retries:
+                        try:
+                            recovered = bool(recover(n, e))
+                        except BaseException as re:  # noqa: BLE001
+                            errors.append(re)
+                            continue
+                    if recovered:
+                        retries[n] = retries.get(n, 0) + 1
+                        requeue.append(n)
+                    else:
+                        errors.append(e)
                     continue
                 for m in dependents[n]:
                     remaining[m] -= 1
@@ -163,7 +185,7 @@ def run_ready_queue(
                         newly.append(m)
             if errors:
                 continue  # drain in-flight work, dispatch nothing new
-            for m in _ordered(newly, order):
+            for m in _ordered(requeue + newly, order):
                 futures[pool.submit(runner, m)] = m
     finally:
         if owned:

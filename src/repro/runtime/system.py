@@ -68,6 +68,9 @@ class StreamSystem:
         transport: Optional[Any] = None,
         workers: Optional[int] = None,
         backend_options: Optional[Dict[str, Any]] = None,
+        supervise: Union[bool, Dict[str, Any]] = False,
+        autoscale: Optional[Union[bool, Dict[str, Any]]] = None,
+        on_worker_event: Optional[Any] = None,
     ):
         self.manager = ReuseManager(
             strategy=strategy, check_invariants=check_invariants, journal_path=journal_path
@@ -116,6 +119,25 @@ class StreamSystem:
             raise ValueError("checkpoint_keep_last needs a checkpoint_dir")
         if checkpoint_background and not checkpoint_dir:
             raise ValueError("checkpoint_background needs a checkpoint_dir")
+        # Cluster plane (multiproc only): `supervise=` arms self-healing —
+        # a heartbeat thread plus in-step recovery respawn dead/hung
+        # workers and redeploy their segments from shadow snapshots;
+        # `autoscale=` resizes the worker pool on the EWMA pressure signal
+        # after every step. Both accept True or a dict of knobs.
+        self._supervisor = None
+        self._autoscaler = None
+        if on_worker_event is not None:
+            self.backend.on_worker_event = on_worker_event
+        if supervise:
+            from repro.cluster import WorkerSupervisor
+
+            sup_kwargs = supervise if isinstance(supervise, dict) else {}
+            self._supervisor = WorkerSupervisor(self.backend, **sup_kwargs).start()
+        if autoscale:
+            from repro.cluster import Autoscaler
+
+            scale_kwargs = autoscale if isinstance(autoscale, dict) else {}
+            self._autoscaler = Autoscaler(self.backend, **scale_kwargs)
 
     @property
     def executor(self) -> ExecutionBackend:
@@ -240,6 +262,8 @@ class StreamSystem:
     # -- execution -----------------------------------------------------------------
     def step(self) -> StepReport:
         report = self.backend.step()
+        if self._autoscaler is not None:
+            self._autoscaler.observe(report)
         if (
             self.checkpoint_every
             and self.checkpoint_store is not None
@@ -332,6 +356,9 @@ class StreamSystem:
         transport: Optional[Any] = None,
         workers: Optional[int] = None,
         backend_options: Optional[Dict[str, Any]] = None,
+        supervise: Union[bool, Dict[str, Any]] = False,
+        autoscale: Optional[Union[bool, Dict[str, Any]]] = None,
+        on_worker_event: Optional[Any] = None,
     ) -> "StreamSystem":
         """Reconstruct a full system from a checkpoint payload.
 
@@ -369,6 +396,9 @@ class StreamSystem:
             base_batch=int(payload["base_batch"]),
             backend=target,
             backend_options=options or None,
+            supervise=supervise,
+            autoscale=autoscale,
+            on_worker_event=on_worker_event,
             checkpoint_dir=checkpoint_dir,
             checkpoint_background=(
                 checkpoint_background
@@ -423,6 +453,9 @@ class StreamSystem:
         transport: Optional[Any] = None,
         workers: Optional[int] = None,
         backend_options: Optional[Dict[str, Any]] = None,
+        supervise: Union[bool, Dict[str, Any]] = False,
+        autoscale: Optional[Union[bool, Dict[str, Any]]] = None,
+        on_worker_event: Optional[Any] = None,
     ) -> "StreamSystem":
         """Restore from ``path`` — a checkpoint directory (newest valid
         checkpoint wins; torn last checkpoints are skipped) or one concrete
@@ -451,6 +484,9 @@ class StreamSystem:
             transport=transport,
             workers=workers,
             backend_options=backend_options,
+            supervise=supervise,
+            autoscale=autoscale,
+            on_worker_event=on_worker_event,
         )
 
     def quiesce(self) -> None:
@@ -472,6 +508,8 @@ class StreamSystem:
 
         Idempotent; single-process systems remain usable — stepping
         recreates what they need lazily."""
+        if self._supervisor is not None:
+            self._supervisor.stop()
         if self._ckpt_writer is not None:
             self._ckpt_writer.close()
             self._ckpt_writer = None
@@ -492,6 +530,20 @@ class StreamSystem:
                 "checksum": float(st["checksum"]),
             }
         return out
+
+    def worker_health(self) -> Optional[Dict[str, Any]]:
+        """Cluster-plane health: worker liveness, respawn history, recent
+        events, autoscaler state. ``None`` for in-process backends (there
+        is no worker pool to be unhealthy)."""
+        health = self.backend.worker_health()
+        if health is None:
+            return None
+        if self._supervisor is not None:
+            health["heartbeat_interval"] = self._supervisor.heartbeat_interval
+            health["heartbeat_running"] = self._supervisor.running
+        if self._autoscaler is not None:
+            health["autoscale"] = self._autoscaler.state()
+        return health
 
     def placement(self) -> Placement:
         return place_round_robin(

@@ -39,15 +39,23 @@ policy (``worker_of_at_checkpoint`` hints feed the ``sticky`` policy).
 """
 from __future__ import annotations
 
-import multiprocessing as mp
 import os
+import pickle
+import shutil
 import tempfile
 import threading
 import time
 import traceback
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Set, Union
+from typing import Any, Dict, List, Optional, Set, Tuple, Union
 
+from repro.cluster.events import (
+    POOL_GROWN,
+    POOL_SHRUNK,
+    SEGMENT_REDEPLOYED,
+    WORKER_DEAD,
+    WORKER_RESPAWNED,
+)
 from repro.core.graph import Dataflow, Task
 from repro.ops.costs import cost_weight_for_task
 
@@ -223,6 +231,101 @@ def _dataflow_from_tasks(dag_name: str, tasks: Dict[str, Dict[str, Any]]) -> Dat
     return df
 
 
+def _encode_states(runner: Any) -> Dict[str, Any]:
+    """Encode a runner's post-step task states for the reply wire.
+
+    These are the coordinator's *shadow snapshots*: committed atomically
+    with the step reply, so a worker that dies mid-step leaves the shadow
+    at the pre-step states and a deterministic re-step after respawn
+    reproduces the uninterrupted trajectory exactly once."""
+    return {tid: encode_pytree(runner.states[tid]) for tid in runner.spec.task_ids}
+
+
+def _host_tree(x: Any) -> Any:
+    """Device arrays -> host numpy, containers preserved — the cheap
+    (no base64, no JSON tagging) state capture for spill snapshots."""
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return x
+    if isinstance(x, dict):
+        return {k: _host_tree(v) for k, v in x.items()}
+    if isinstance(x, tuple):
+        return tuple(_host_tree(v) for v in x)
+    if isinstance(x, list):
+        return [_host_tree(v) for v in x]
+    import numpy as np
+
+    return np.asarray(x)
+
+
+def _spill_slots(path: str) -> Tuple[str, str]:
+    """The two alternating slot files behind one logical spill path."""
+    return f"{path}.a", f"{path}.b"
+
+
+def _capture_states(runner: Any, ephemeral: Dict[str, tuple]) -> Dict[str, Any]:
+    """Host-side copy of a segment's post-step states, minus ephemeral
+    leaves (``repro.ops.costs.ephemeral_state_keys``: keys every step
+    overwrites wholesale, like a sink's retained batch — dropping them
+    keeps the per-step spill tiny and recovery re-inits them from the
+    operator template)."""
+    out: Dict[str, Any] = {}
+    for tid in runner.spec.task_ids:
+        state = runner.states[tid]
+        drop = ephemeral.get(tid)
+        if drop and isinstance(state, dict):
+            state = {k: v for k, v in state.items() if k not in drop}
+        out[tid] = _host_tree(state)
+    return out
+
+
+class _SpillWriter:
+    """Double-buffered combined spill writer: persists the post-step
+    states of EVERY spill-armed segment a worker owns to one worker-local
+    file, written once per step batch BEFORE the step reply is sent.
+
+    Each entry carries a completed-step counter — what makes recovery
+    exactly-once without per-step wire snapshots: a worker that dies
+    *before* the write leaves the freshest entry one step behind the
+    in-flight step (re-step it), one that dies *after* the write but
+    before the reply leaves it one step ahead of what the coordinator
+    confirmed (skip the re-step — the outputs were already published).
+    One write per wave batch instead of one per segment matters because
+    the cost is dominated by fixed per-write work, not payload bytes
+    (ephemeral-filtered states are a few hundred bytes per segment).
+
+    Two slot files are held open for the writer's lifetime and written
+    alternately (seek/truncate/dump/flush), so the steady state pays no
+    open/rename syscalls. A crash can tear at most the slot being
+    written; the other slot is intact one write behind, and a torn pickle
+    stream never loads (the STOP opcode is its last byte), so the
+    coordinator-side reader merges both slots taking each segment's
+    highest-step entry."""
+
+    def __init__(self, path: str):
+        self._writes = 0
+        self._files = []
+        for p in _spill_slots(path):
+            # r+b, not wb: a respawned worker must not blank the slots the
+            # coordinator may still need for a subsequent recovery
+            self._files.append(open(p, "r+b" if os.path.exists(p) else "w+b"))
+
+    def write(self, entries: Dict[str, Dict[str, Any]]) -> None:
+        f = self._files[self._writes % 2]
+        self._writes += 1
+        f.seek(0)
+        f.truncate()
+        pickle.dump({"segments": entries}, f,
+                    protocol=pickle.HIGHEST_PROTOCOL)
+        f.flush()
+
+    def close(self) -> None:
+        for f in self._files:
+            try:
+                f.close()
+            except OSError:  # pragma: no cover - close is best-effort
+                pass
+
+
 def _worker_main(conn, worker_id: int, transport_spec: Dict[str, Any],
                  plane: str, log_path: str) -> None:
     """The worker loop: blocking command RPCs against owned segments."""
@@ -231,6 +334,10 @@ def _worker_main(conn, worker_id: int, transport_spec: Dict[str, Any],
               transport=transport_spec.get("kind"))
     transport = connect_transport(transport_spec)
     segments: Dict[str, Any] = {}
+    spill_writer: Optional[_SpillWriter] = None  # one combined file per worker
+    spill_entries: Dict[str, Dict[str, Any]] = {}  # segment -> {step, states}
+    spill_step: Dict[str, int] = {}  # segment -> completed-step counter
+    spill_ephem: Dict[str, Dict[str, tuple]] = {}  # segment -> tid -> keys
     while True:
         try:
             msg = conn.recv()
@@ -255,17 +362,47 @@ def _worker_main(conn, worker_id: int, transport_spec: Dict[str, Any],
                     if init:
                         runner.load_states(init)
                     segments[spec.name] = runner
+                spill_entries.pop(spec.name, None)  # redeploy resets history
+                if msg.get("spill"):
+                    from repro.ops.costs import ephemeral_state_keys
+
+                    spill_ephem[spec.name] = {
+                        tid: keys
+                        for tid in spec.task_ids
+                        if (keys := ephemeral_state_keys(df.tasks[tid]))
+                    }
+                    spill_step[spec.name] = int(msg.get("step0", 0))
+                    if spill_writer is None:
+                        spill_writer = _SpillWriter(msg["spill"])
+                else:
+                    spill_step.pop(spec.name, None)
+                    spill_ephem.pop(spec.name, None)
                 log.write("deploy", segment=spec.name, tasks=len(spec.task_ids))
             elif op == "kill":
                 runner = segments.pop(msg["segment"])
                 for tid in runner.spec.task_ids:
                     transport.drop(topic_for(tid))
+                spill_entries.pop(msg["segment"], None)
+                spill_step.pop(msg["segment"], None)
+                spill_ephem.pop(msg["segment"], None)
                 log.write("kill", segment=msg["segment"])
             elif op == "step":
-                runner = segments[msg["segment"]]
+                name = msg["segment"]
+                runner = segments[name]
                 t0 = time.perf_counter()
                 runner.step(transport, msg["forward"], msg.get("targets"))
                 reply["ms"] = (time.perf_counter() - t0) * 1e3
+                if name in spill_step:
+                    spill_step[name] += 1
+                    t1 = time.perf_counter()
+                    spill_entries[name] = {
+                        "step": spill_step[name],
+                        "states": _capture_states(runner, spill_ephem[name]),
+                    }
+                    spill_writer.write(spill_entries)
+                    reply["spill_ms"] = (time.perf_counter() - t1) * 1e3
+                if msg.get("snap"):
+                    reply["states"] = {name: _encode_states(runner)}
             elif op == "step_many":
                 # wave-batched dispatch: step every named segment (they are
                 # mutually independent members of one wave, in launch
@@ -274,12 +411,39 @@ def _worker_main(conn, worker_id: int, transport_spec: Dict[str, Any],
                 # RPC overhead amortizes to one round-trip per worker per
                 # wave instead of one per segment
                 ms: Dict[str, float] = {}
+                snaps: Dict[str, Dict[str, Any]] = {}
+                spill_ms = 0.0
+                spilled = False
                 for entry in msg["segments"]:
-                    runner = segments[entry["segment"]]
+                    name = entry["segment"]
+                    runner = segments[name]
                     t0 = time.perf_counter()
                     runner.step(transport, entry["forward"], entry.get("targets"))
-                    ms[entry["segment"]] = (time.perf_counter() - t0) * 1e3
+                    ms[name] = (time.perf_counter() - t0) * 1e3
+                    if name in spill_step:
+                        spill_step[name] += 1
+                        t1 = time.perf_counter()
+                        spill_entries[name] = {
+                            "step": spill_step[name],
+                            "states": _capture_states(
+                                runner, spill_ephem[name]
+                            ),
+                        }
+                        spill_ms += (time.perf_counter() - t1) * 1e3
+                        spilled = True
+                    if msg.get("snap"):
+                        snaps[name] = _encode_states(runner)
+                if spilled:
+                    # one combined durable write per batch: fixed per-write
+                    # cost amortizes across every segment in the wave
+                    t1 = time.perf_counter()
+                    spill_writer.write(spill_entries)
+                    spill_ms += (time.perf_counter() - t1) * 1e3
                 reply["ms"] = ms
+                if spill_ms:
+                    reply["spill_ms"] = spill_ms
+                if msg.get("snap"):
+                    reply["states"] = snaps
             elif op == "pause":
                 segments[msg["segment"]].pause(set(msg["tasks"]))
             elif op == "resume":
@@ -318,7 +482,17 @@ def _worker_main(conn, worker_id: int, transport_spec: Dict[str, Any],
 
 
 class WorkerError(RuntimeError):
-    """A worker process reported a failure (its log has the traceback)."""
+    """A worker failed. ``worker``/``gen`` identify the process incarnation
+    when the failure was fatal to it (pipe EOF, hang timeout) — the cluster
+    plane's recovery hook uses them to respawn exactly that incarnation.
+    Application-level errors reported by a *live* worker leave them ``None``
+    (respawning would not fix a logic error)."""
+
+    def __init__(self, message: str, worker: Optional[int] = None,
+                 gen: Optional[int] = None):
+        super().__init__(message)
+        self.worker = worker
+        self.gen = gen
 
 
 @dataclass
@@ -335,6 +509,10 @@ class RemoteSegment:
     cost_of: Dict[str, float]
     active: Dict[str, bool]
     steps_run: int = 0
+    # recovery found the segment's spill one step AHEAD of what the
+    # coordinator confirmed (worker died after publish+spill but before
+    # the reply): that many re-dispatches are no-ops, not re-steps
+    _skip_steps: int = 0
     _states_cache: Optional[Dict[str, Any]] = field(default=None, repr=False)
     _states_step: int = -1
 
@@ -410,6 +588,8 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         ewma_decay: float = 0.6,
         step_mode: str = "sync",
         max_workers: Optional[int] = None,
+        launcher: Any = "local",
+        rpc_timeout: Optional[float] = None,
     ):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
@@ -424,6 +604,8 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
             # the dispatch pool must cover every worker or RPC overlap dies
             max_workers=max_workers if max_workers is not None else max(workers, 2),
         )
+        from repro.cluster.launcher import resolve_launcher
+
         self.n_workers = workers
         self.worker_plane = worker_plane
         self.transport: Transport = resolve_transport(
@@ -438,46 +620,67 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         )
         os.makedirs(self.log_dir, exist_ok=True)
         self._init_placement(placement, ewma_decay=ewma_decay)
-        self._ctx = mp.get_context("spawn")
-        self._procs: List[Any] = []
-        self._conns: List[Any] = []
-        self._conn_locks: List[threading.Lock] = []
+        self.launcher = resolve_launcher(launcher)
+        self._procs: List[Any] = []  # WorkerHandles, indexed by worker slot
+        # RLock, not Lock: recovery respawns a worker while holding its
+        # conn lock and then redeploys through _call on the same thread
+        self._conn_locks: List[threading.RLock] = []
+        self._gen: List[int] = []  # incarnation counter per slot
         self._topic_target: Optional[Dict[str, int]] = None
         self._spawned = False
+        # -- cluster plane state (driven by repro.cluster) --------------------
+        self.rpc_timeout = rpc_timeout  # hang bound on RPC replies (None = wait)
+        self.self_heal = False  # supervisor attach flips this on
+        self.shadow_states = False  # piggyback post-step states on replies
+        self.snapshot_every = 1  # shadow refresh cadence (steps)
+        # "spill": workers persist post-step states to worker-local files
+        # (cheap: pickle, no wire traffic); "wire": states ride step replies
+        # (works for launchers whose workers share no filesystem)
+        self.snapshot_mode = "wire"
+        self._spill_ewma: Optional[float] = None  # worker-reported spill ms/step
+        self._spill_dir: Optional[str] = None
+        self._shadow: Dict[str, Dict[str, Any]] = {}  # segment -> encoded states
+        self._recover_lock = threading.Lock()
+        self.respawns: List[Dict[str, Any]] = []
 
     # -- worker pool ------------------------------------------------------------
+    def _spawn_worker(self, worker: int) -> Any:
+        log_path = os.path.join(self.log_dir, f"worker-{worker}.log")
+        return self.launcher.launch(
+            worker, self._transport_spec, self.worker_plane, log_path
+        )
+
     def _ensure_workers(self) -> None:
         if self._spawned:
             return
         self._spawned = True
         for i in range(self.n_workers):
-            parent_conn, child_conn = self._ctx.Pipe()
-            log_path = os.path.join(self.log_dir, f"worker-{i}.log")
-            proc = self._ctx.Process(
-                target=_worker_main,
-                args=(child_conn, i, self._transport_spec, self.worker_plane,
-                      log_path),
-                name=f"repro-worker-{i}",
-                daemon=True,
-            )
-            proc.start()
-            child_conn.close()
-            self._procs.append(proc)
-            self._conns.append(parent_conn)
-            self._conn_locks.append(threading.Lock())
+            self._procs.append(self._spawn_worker(i))
+            self._conn_locks.append(threading.RLock())
+            self._gen.append(0)
 
     def _call(self, worker: int, msg: Dict[str, Any]) -> Dict[str, Any]:
         """One blocking RPC to a worker; serialized per worker, overlapping
         across workers (recv releases the GIL)."""
         self._ensure_workers()
+        gen = self._gen[worker]
         with self._conn_locks[worker]:
+            conn = self._procs[worker].conn
             try:
-                self._conns[worker].send(msg)
-                reply = self._conns[worker].recv()
+                conn.send(msg)
+                if self.rpc_timeout is not None and not conn.poll(self.rpc_timeout):
+                    # hang bound exceeded: the pipe is now out of sync, so
+                    # this incarnation is unusable — recovery is mandatory
+                    raise WorkerError(
+                        f"worker {worker} hung on {msg.get('op')!r} "
+                        f"(> {self.rpc_timeout}s)", worker=worker, gen=gen,
+                    )
+                reply = conn.recv()
             except (EOFError, BrokenPipeError, OSError) as e:
                 raise WorkerError(
                     f"worker {worker} died during {msg.get('op')!r} "
-                    f"(log: {os.path.join(self.log_dir, f'worker-{worker}.log')})"
+                    f"(log: {os.path.join(self.log_dir, f'worker-{worker}.log')})",
+                    worker=worker, gen=gen,
                 ) from e
         if "error" in reply:
             raise WorkerError(
@@ -485,6 +688,30 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
                 f"{reply.get('traceback', '')}"
             )
         return reply
+
+    def worker_alive(self, worker: int) -> bool:
+        """Cheap liveness: the launched process still exists (no pipe I/O)."""
+        if not self._spawned or worker >= len(self._procs):
+            return False
+        return self._procs[worker].is_alive()
+
+    def ping_worker(self, worker: int, timeout: float = 5.0) -> bool:
+        """Active liveness probe: a ``ping`` RPC bounded by ``timeout``.
+
+        A ``False`` from a timeout poisons the command pipe (a late reply
+        would desync framing), so callers must treat it as fatal and
+        recover the worker — the supervisor does."""
+        self._ensure_workers()
+        with self._conn_locks[worker]:
+            conn = self._procs[worker].conn
+            try:
+                conn.send({"op": "ping"})
+                if not conn.poll(timeout):
+                    return False
+                reply = conn.recv()
+            except (EOFError, BrokenPipeError, OSError):
+                return False
+        return "pid" in reply
 
     def _segment_call(self, seg: RemoteSegment, msg: Dict[str, Any]) -> Dict[str, Any]:
         msg = dict(msg)
@@ -501,8 +728,232 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         reply = self._call(old, {"op": "states", "segment": seg.spec.name})
         self._call(old, {"op": "kill", "segment": seg.spec.name})
         self.device_of[seg.spec.name] = new  # before deploy RPC below
-        self._deploy_rpc(new, seg.spec, states=reply["states"])
+        self._deploy_rpc(new, seg.spec, states=reply["states"],
+                         step0=seg.steps_run)
+        self._reapply_pauses(new, seg)
         seg._states_cache = None
+
+    # -- cluster plane: recovery and elasticity -----------------------------------
+    def _spill_file(self, worker: int) -> str:
+        if self._spill_dir is None:
+            # prefer tmpfs: spill writes sit on every step's critical path,
+            # and /tmp is often disk-backed (~7x slower per write)
+            base = "/dev/shm" if os.path.isdir("/dev/shm") else None
+            self._spill_dir = tempfile.mkdtemp(prefix="repro-spill-", dir=base)
+        return os.path.join(self._spill_dir, f"worker-{worker}.pkl")
+
+    def _read_spill(self, worker: int) -> Dict[str, Dict[str, Any]]:
+        """Per-segment spill entries of one worker's combined file.
+
+        Both alternating slots are read (a crash tears at most the slot
+        being written) and merged per segment, highest step wins. Entries
+        can be stale — a segment that migrated here and died before its
+        first step leaves an old incarnation's entry — so callers must
+        check the step counter against the coordinator's count."""
+        merged: Dict[str, Dict[str, Any]] = {}
+        if self._spill_dir is None:
+            return merged
+        for slot in _spill_slots(self._spill_file(worker)):
+            try:
+                with open(slot, "rb") as f:
+                    payload = pickle.load(f)
+            except (OSError, EOFError, pickle.UnpicklingError):
+                continue  # slot never written, or torn by the crash
+            for name, entry in payload.get("segments", {}).items():
+                cur = merged.get(name)
+                if cur is None or int(entry["step"]) > int(cur["step"]):
+                    merged[name] = entry
+        return merged
+
+    def _recovery_states(self, seg: RemoteSegment,
+                         spilled: Dict[str, Dict[str, Any]]):
+        """Freshest redeploy states for a dead worker's segment.
+
+        Returns ``(encoded_states, step0, skip)``. In spill mode the
+        worker-local entry carries a completed-step counter: equal to the
+        coordinator's count means the state is current (any in-flight step
+        simply re-runs); one ahead means the lost step actually completed
+        (outputs published, spill written, reply lost) — redeploy the
+        advanced state and *skip* the re-dispatch. A counter outside that
+        range is a stale entry from before a migration: fall back to the
+        shadow snapshot, which the deploy RPC keeps at deploy-time states
+        (always pre-step at death)."""
+        entry = spilled.get(seg.spec.name)
+        if entry is not None:
+            k = int(entry["step"])
+            if k in (seg.steps_run, seg.steps_run + 1):
+                states = {
+                    tid: encode_pytree(v)
+                    for tid, v in entry["states"].items()
+                }
+                return states, k, k == seg.steps_run + 1
+        return self._shadow.get(seg.spec.name), seg.steps_run, False
+
+    def _reapply_pauses(self, worker: int, seg: RemoteSegment) -> None:
+        paused = [t for t in seg.spec.task_ids if not seg.active[t]]
+        if paused:
+            self._call(worker, {"op": "pause", "segment": seg.spec.name,
+                                "tasks": paused})
+
+    def recover_worker(self, worker: int, expect_gen: Optional[int] = None) -> Dict[str, Any]:
+        """Respawn a dead/hung worker in place and redeploy its segments.
+
+        States come from the freshest source available — the worker-local
+        spill file (``snapshot_mode="spill"``) or the shadow snapshot
+        committed with the segment's last step reply (``"wire"``), falling
+        back to deploy-time states; all encoded, so no JAX is touched in
+        the coordinator (see :meth:`_recovery_states` for the exactly-once
+        step accounting). ``expect_gen`` makes recovery idempotent under
+        races: a heartbeat thread and a stepping thread that both observe
+        the same death recover it exactly once (the second caller sees the
+        bumped generation and returns without respawning)."""
+        with self._recover_lock:
+            if expect_gen is not None and self._gen[worker] != expect_gen:
+                return {"worker": worker, "segments": [], "ms": 0.0,
+                        "already_recovered": True}
+            t0 = time.perf_counter()
+            self._emit_worker_event(WORKER_DEAD, worker=worker,
+                                    detail=f"gen={self._gen[worker]}")
+            with self._conn_locks[worker]:
+                old = self._procs[worker]
+                try:
+                    old.terminate()
+                except Exception:
+                    pass
+                old.join(timeout=5)
+                old.close()
+                self._procs[worker] = self._spawn_worker(worker)
+                self._gen[worker] += 1
+                self._emit_worker_event(WORKER_RESPAWNED, worker=worker,
+                                        detail=f"gen={self._gen[worker]}")
+                redeployed: List[str] = []
+                spilled = (
+                    self._read_spill(worker)
+                    if self.snapshot_mode == "spill" else {}
+                )
+                for name in sorted(
+                    n for n, w in self.device_of.items() if w == worker
+                ):
+                    seg = self.segments.get(name)
+                    if seg is None:
+                        continue
+                    states, step0, skip = self._recovery_states(seg, spilled)
+                    self._deploy_rpc(worker, seg.spec, states=states,
+                                     step0=step0)
+                    if skip:
+                        seg._skip_steps += 1
+                    self._reapply_pauses(worker, seg)
+                    seg._states_cache = None
+                    redeployed.append(name)
+            ms = (time.perf_counter() - t0) * 1e3
+            self._emit_worker_event(
+                SEGMENT_REDEPLOYED, worker=worker, ms=ms,
+                detail=f"{len(redeployed)} segment(s): {', '.join(redeployed)}",
+            )
+            record = {"worker": worker, "segments": redeployed, "ms": ms,
+                      "step": self.step_count}
+            self.respawns.append(record)
+            return record
+
+    def _step_recover(self, name: str, exc: BaseException) -> bool:
+        """Self-healing hook for the stepping paths: recover the dead
+        worker so the failed item can be re-dispatched instead of erroring
+        the whole step. Only fatal worker failures qualify, and only once
+        the supervisor has armed ``self_heal``."""
+        if not self.self_heal or not isinstance(exc, WorkerError):
+            return False
+        if exc.worker is None or exc.worker >= self.n_workers:
+            return False
+        self.recover_worker(exc.worker, expect_gen=exc.gen)
+        return True
+
+    def resize_pool(self, n: int) -> None:
+        """Grow or shrink the worker pool without stopping the system.
+
+        Growing spawns fresh workers (new segments land there via the
+        placement policy; straggler migration rebalances existing ones).
+        Shrinking migrates every segment off the retiring workers to the
+        least-pressured survivors, then shuts the retirees down."""
+        if n < 1:
+            raise ValueError(f"worker pool size must be >= 1, got {n}")
+        self._ensure_workers()
+        if n == self.n_workers:
+            return
+        t0 = time.perf_counter()
+        if n > self.n_workers:
+            for i in range(self.n_workers, n):
+                self._procs.append(self._spawn_worker(i))
+                self._conn_locks.append(threading.RLock())
+                self._gen.append(0)
+            grown = n - self.n_workers
+            self.n_workers = n
+            self._emit_worker_event(
+                POOL_GROWN, ms=(time.perf_counter() - t0) * 1e3,
+                detail=f"+{grown} -> {n} workers",
+            )
+        else:
+            ewma = self.device_ewma()
+            load: Dict[int, int] = {i: 0 for i in range(n)}
+            for name, w in self.device_of.items():
+                if w < n:
+                    load[w] += len(self.segments[name].spec.task_ids)
+            moved = 0
+            for name, w in sorted(self.device_of.items()):
+                if w < n:
+                    continue
+                target = min(range(n),
+                             key=lambda i: (ewma.get(i, 0.0), load[i], i))
+                seg = self.segments[name]
+                self._move_segment(seg, w, target)
+                load[target] += len(seg.spec.task_ids)
+                moved += 1
+            for i in reversed(range(n, self.n_workers)):
+                handle = self._procs.pop(i)
+                try:
+                    with self._conn_locks[i]:
+                        handle.conn.send({"op": "shutdown"})
+                        handle.conn.recv()
+                except (EOFError, BrokenPipeError, OSError):
+                    pass
+                handle.close()
+                handle.join(timeout=5)
+                if handle.is_alive():  # pragma: no cover - stuck worker
+                    handle.terminate()
+                self._conn_locks.pop(i)
+                self._gen.pop(i)
+                self._ewma_residual.pop(i, None)
+            shrunk = self.n_workers - n
+            self.n_workers = n
+            self._emit_worker_event(
+                POOL_SHRUNK, ms=(time.perf_counter() - t0) * 1e3,
+                detail=f"-{shrunk} -> {n} workers ({moved} segments migrated)",
+            )
+        # the dispatch pool must keep covering every worker
+        self._reset_pool()
+        self.max_workers = max(self.n_workers, 2)
+
+    def worker_health(self) -> Dict[str, Any]:
+        """Cluster-plane health snapshot (serving surfaces this verbatim)."""
+        per_worker: Dict[int, int] = {i: 0 for i in range(self.n_workers)}
+        for name, w in self.device_of.items():
+            if name in self.segments and w in per_worker:
+                per_worker[w] += 1
+        return {
+            "backend": self.name,
+            "workers": self.n_workers,
+            "alive": [h.is_alive() for h in self._procs],
+            "generations": list(self._gen),
+            "respawns": len(self.respawns),
+            "segments_per_worker": {str(i): c for i, c in per_worker.items()},
+            "supervised": self.self_heal,
+            "snapshot_mode": self.snapshot_mode if (
+                self.shadow_states or self._spill_dir is not None
+            ) else None,
+            "spill_ms_per_step": (
+                round(self._spill_ewma, 4) if self._spill_ewma is not None else None
+            ),
+            "events": [e.to_dict() for e in self.worker_events[-20:]],
+        }
 
     # -- ExecutionBackend hooks -------------------------------------------------
     def _encode_spec(self, spec: SegmentSpec) -> Dict[str, Any]:
@@ -517,20 +968,24 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         }
 
     def _deploy_rpc(self, worker: int, spec: SegmentSpec,
-                    states: Optional[Dict[str, Any]] = None) -> None:
-        self._call(
-            worker,
-            {
-                "op": "deploy",
-                "spec": self._encode_spec(spec),
-                "tasks": {
-                    tid: {"type": self.task_defs[tid].type,
-                          "config": self.task_defs[tid].config}
-                    for tid in spec.task_ids
-                },
-                "states": states,
+                    states: Optional[Dict[str, Any]] = None,
+                    step0: int = 0) -> None:
+        msg = {
+            "op": "deploy",
+            "spec": self._encode_spec(spec),
+            "tasks": {
+                tid: {"type": self.task_defs[tid].type,
+                      "config": self.task_defs[tid].config}
+                for tid in spec.task_ids
             },
-        )
+            "states": states,
+        }
+        if self.snapshot_mode == "spill":
+            msg["spill"] = self._spill_file(worker)
+            msg["step0"] = int(step0)
+        self._call(worker, msg)
+        if states is not None:
+            self._shadow[spec.name] = states
 
     def _build(
         self,
@@ -569,6 +1024,10 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         worker = self.device_of.get(seg.spec.name)
         if worker is not None:
             self._call(worker, {"op": "kill", "segment": seg.spec.name})
+        self._shadow.pop(seg.spec.name, None)
+        # no spill cleanup: the worker prunes the segment's entry from its
+        # combined file on the next write, and a lingering entry is inert
+        # (recovery only consults segments still assigned to the worker)
 
     def _begin_concurrent_step(self) -> None:
         # same per-topic sequencing scheme as the in-process jit backend:
@@ -600,22 +1059,74 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
             "targets": targets,
         }
 
+    def _snap_now(self) -> bool:
+        return self.shadow_states and self.step_count % max(self.snapshot_every, 1) == 0
+
+    def _harvest_snaps(self, reply: Dict[str, Any]) -> None:
+        for name, states in (reply.get("states") or {}).items():
+            self._shadow[name] = states
+        if "spill_ms" in reply:
+            # worker-measured durability cost of this batch's spill writes —
+            # EWMA'd so worker_health can report supervision overhead live
+            prev = self._spill_ewma
+            val = float(reply["spill_ms"])
+            self._spill_ewma = val if prev is None else 0.8 * prev + 0.2 * val
+
+    def _consume_skip(self, seg: RemoteSegment) -> bool:
+        """Recovery determined this step already completed inside the dead
+        worker (outputs published, spill written): count it done."""
+        if seg._skip_steps <= 0:
+            return False
+        seg._skip_steps -= 1
+        seg.steps_run += 1
+        seg._states_cache = None
+        return True
+
     def _step_one(self, seg: RemoteSegment) -> Optional[float]:
-        reply = self._call(
-            self.device_of[seg.spec.name], {"op": "step", **self._step_entry(seg)}
-        )
+        if self._consume_skip(seg):
+            return 0.0
+        # bounded retry: a fatal worker failure mid-step triggers in-place
+        # recovery (redeploy from spill/shadow snapshots) and ONE
+        # re-dispatch per attempt — deterministic re-steps keep sink
+        # counts exact
+        for attempt in range(3):
+            try:
+                reply = self._call(
+                    self.device_of[seg.spec.name],
+                    {"op": "step", "snap": self._snap_now(),
+                     **self._step_entry(seg)},
+                )
+                break
+            except WorkerError as e:
+                if attempt == 2 or not self._step_recover(seg.spec.name, e):
+                    raise
+        self._harvest_snaps(reply)
         seg.steps_run += 1
         seg._states_cache = None
         return float(reply["ms"])  # worker-measured compute, not RPC wait
 
     def _step_wave_on_worker(self, worker: int, names: List[str]) -> Dict[str, float]:
-        entries = [self._step_entry(self.segments[n]) for n in names]
-        reply = self._call(worker, {"op": "step_many", "segments": entries})
+        seg_ms: Dict[str, float] = {}
+        todo: List[str] = []
         for n in names:
+            if self._consume_skip(self.segments[n]):
+                seg_ms[n] = 0.0
+            else:
+                todo.append(n)
+        if not todo:
+            return seg_ms
+        entries = [self._step_entry(self.segments[n]) for n in todo]
+        reply = self._call(
+            worker,
+            {"op": "step_many", "segments": entries, "snap": self._snap_now()},
+        )
+        self._harvest_snaps(reply)
+        for n in todo:
             seg = self.segments[n]
             seg.steps_run += 1
             seg._states_cache = None
-        return {n: float(ms) for n, ms in reply["ms"].items()}
+        seg_ms.update({n: float(ms) for n, ms in reply["ms"].items()})
+        return seg_ms
 
     def _step_segments_concurrent(self) -> Dict[str, float]:
         """Wave-batched concurrent dispatch.
@@ -640,17 +1151,33 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
             )
         self._begin_concurrent_step()
         try:
+            from concurrent.futures import FIRST_COMPLETED, wait
+
             seg_ms: Dict[str, float] = {}
             for wave in self.segment_waves():
                 by_worker: Dict[int, List[str]] = {}
                 for name in wave:
                     by_worker.setdefault(self.device_of[name], []).append(name)
-                futures = [
-                    self._pool.submit(self._step_wave_on_worker, w, names)
+                # a dead worker fails its whole wave chunk at once; with
+                # self-healing on, recover it and re-dispatch that chunk —
+                # the rest of the wave keeps running meanwhile
+                futures = {
+                    self._pool.submit(self._step_wave_on_worker, w, names):
+                    (w, names, 0)
                     for w, names in sorted(by_worker.items())
-                ]
-                for fut in futures:
-                    seg_ms.update(fut.result())
+                }
+                while futures:
+                    done, _ = wait(futures, return_when=FIRST_COMPLETED)
+                    for fut in done:
+                        w, names, tries = futures.pop(fut)
+                        try:
+                            seg_ms.update(fut.result())
+                        except WorkerError as e:
+                            if tries >= 2 or not self._step_recover(names[0], e):
+                                raise
+                            futures[self._pool.submit(
+                                self._step_wave_on_worker, w, names
+                            )] = (w, names, tries + 1)
             return seg_ms
         finally:
             self._end_concurrent_step()
@@ -694,6 +1221,8 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         }
         if getattr(self.policy, "name", ""):
             cfg["placement"] = self.policy.name
+        if getattr(self.launcher, "name", "local") != "local":
+            cfg["launcher"] = self.launcher.name
         return cfg
 
     # -- lifecycle ---------------------------------------------------------------
@@ -705,23 +1234,26 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         stepping (restore from a checkpoint to resume)."""
         super().close()
         if self._spawned:
-            for i, conn in enumerate(self._conns):
+            for i, handle in enumerate(self._procs):
                 try:
                     with self._conn_locks[i]:
-                        conn.send({"op": "shutdown"})
-                        conn.recv()
+                        handle.conn.send({"op": "shutdown"})
+                        handle.conn.recv()
                 except (EOFError, BrokenPipeError, OSError):
                     pass
-                conn.close()
-            for proc in self._procs:
-                proc.join(timeout=10)
-                if proc.is_alive():  # pragma: no cover - stuck worker
-                    proc.terminate()
-                    proc.join(timeout=5)
+                handle.close()
+            for handle in self._procs:
+                handle.join(timeout=10)
+                if handle.is_alive():  # pragma: no cover - stuck worker
+                    handle.terminate()
+                    handle.join(timeout=5)
             self._procs.clear()
-            self._conns.clear()
             self._conn_locks.clear()
+            self._gen.clear()
             self._spawned = False
+        if self._spill_dir is not None:
+            shutil.rmtree(self._spill_dir, ignore_errors=True)
+            self._spill_dir = None
         self.transport.close()
 
     def __del__(self):  # pragma: no cover - GC safety net

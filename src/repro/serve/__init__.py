@@ -12,7 +12,7 @@ import importlib
 from typing import TYPE_CHECKING
 
 from . import protocol
-from .client import ServeClient
+from .client import ServeClient, SubmitTimeout
 from .frontend import (
     AdmissionResult,
     ServeFrontend,
@@ -40,6 +40,7 @@ __all__ = [
     "ServeClient",
     "ServeEngine",
     "ServeFrontend",
+    "SubmitTimeout",
     "TenantLedger",
     "TenantPipeline",
     "TenantQuota",

@@ -12,6 +12,7 @@ could otherwise double-submit.
 """
 from __future__ import annotations
 
+import random
 import socket
 import time
 from typing import Any, Dict, Optional, Tuple, Union
@@ -19,6 +20,21 @@ from typing import Any, Dict, Optional, Tuple, Union
 from repro.core.graph import Dataflow
 
 from . import protocol
+
+
+class SubmitTimeout(TimeoutError):
+    """``submit(wait=True)`` exhausted ``max_wait`` while the frontend kept
+    answering RETRY_AFTER. Carries the last server response so callers can
+    inspect the final backpressure hint instead of a silent non-admission."""
+
+    def __init__(self, tenant: str, max_wait: float, last: Dict[str, Any]):
+        self.tenant = tenant
+        self.max_wait = max_wait
+        self.last = last
+        super().__init__(
+            f"submit for tenant {tenant!r} still backpressured after "
+            f"{max_wait:.1f}s (last status: {last.get('status')})"
+        )
 
 
 class ServeClient:
@@ -82,21 +98,31 @@ class ServeClient:
         max_wait: float = 60.0,
     ) -> Dict[str, Any]:
         """Submit one dataflow for ``tenant``. With ``wait=True`` the client
-        sleeps out RETRY_AFTER backpressure (up to ``max_wait`` seconds)
-        and resubmits; QUEUED and REJECTED return immediately either way."""
+        sleeps out RETRY_AFTER backpressure with jittered exponential
+        backoff (base delay from the server's ``retry_after`` hint, capped
+        at 5s) and resubmits; QUEUED and REJECTED return immediately either
+        way. Raises :class:`SubmitTimeout` once ``max_wait`` elapses with
+        the server still answering RETRY_AFTER — waiting callers never see
+        a RETRY_AFTER result, and never hang past the deadline."""
         from repro.api.builder import as_dataflow
 
         payload = protocol.encode_dataflow(as_dataflow(df))
         deadline = time.monotonic() + max_wait
+        attempt = 0
         while True:
             result = self._call(protocol.SUBMIT, tenant=tenant, dataflow=payload)
-            if not (
-                wait
-                and result.get("status") == protocol.RETRY_AFTER
-                and time.monotonic() < deadline
-            ):
+            if not (wait and result.get("status") == protocol.RETRY_AFTER):
                 return result
-            time.sleep(float(result.get("retry_after", 0.5)))
+            now = time.monotonic()
+            if now >= deadline:
+                raise SubmitTimeout(tenant, max_wait, result)
+            base = float(result.get("retry_after", 0.5))
+            # full backoff doubles per attempt; jitter in [0.5, 1.0) spreads
+            # synchronized waiters so they don't stampede the frontend
+            delay = min(base * (2.0 ** attempt), 5.0)
+            delay *= 0.5 + random.random() * 0.5
+            time.sleep(min(delay, max(deadline - now, 0.0)))
+            attempt += 1
 
     def remove(self, tenant: str, name: str) -> Dict[str, Any]:
         return self._call(protocol.REMOVE, tenant=tenant, name=name)

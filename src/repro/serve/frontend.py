@@ -247,6 +247,9 @@ class ServeFrontend:
         self._conns_lock = threading.Lock()
         self._closed = False
         self._shutdown_event = threading.Event()
+        # set by the conn loop once a SHUTDOWN reply is on the wire, so the
+        # stop thread doesn't close the socket under the in-flight response
+        self._stop_ack: Optional[threading.Event] = None
 
     # -- quota / ledger helpers ------------------------------------------------
     def quota_for(self, tenant: str) -> TenantQuota:
@@ -512,6 +515,9 @@ class ServeFrontend:
                 "draining": self.draining,
                 "strategy": self.session.strategy,
                 "backend": self.session.backend_name,
+                # cluster plane: worker liveness/respawns/autoscale for the
+                # multiproc backend, null for in-process data planes
+                "worker_health": self.session.worker_health(),
             }
 
     def stats(self, tenant: Optional[str] = None) -> Dict[str, Any]:
@@ -535,7 +541,7 @@ class ServeFrontend:
     # -- durability ----------------------------------------------------------------
     def _ledger_payload(self) -> Dict[str, Any]:
         return {
-            "version": 1,
+            "version": 2,
             "slots": self.slots,
             "slots_used": self.slots_used,
             "naive_slots": self.naive_slots,
@@ -545,6 +551,14 @@ class ServeFrontend:
             "ledgers": {t: l.to_json() for t, l in self.ledgers.items()},
             "quotas": {t: q.to_json() for t, q in self.quotas.items()},
             "default_quota": self.default_quota.to_json(),
+            # the QUEUED admission queue, in arrival order — encoded
+            # dataflows so a restart re-enqueues instead of dropping them
+            "pending": [
+                {"tenant": p.tenant, "seq": p.seq,
+                 "dataflow": protocol.encode_dataflow(p.df)}
+                for p in self._pending
+            ],
+            "pending_seq": self._seq,
         }
 
     def _load_ledger_payload(self, payload: Dict[str, Any]) -> None:
@@ -561,6 +575,16 @@ class ServeFrontend:
             t: TenantQuota.from_json(q) for t, q in payload["quotas"].items()
         }
         self.default_quota = TenantQuota.from_json(payload["default_quota"])
+        # version-1 sidecars have no pending queue — tolerate their absence
+        self._pending = [
+            _Pending(tenant=p["tenant"],
+                     df=protocol.decode_dataflow(p["dataflow"]),
+                     seq=int(p["seq"]))
+            for p in payload.get("pending", [])
+        ]
+        self._seq = int(payload.get("pending_seq", self._seq))
+        if self._pending:
+            self._seq = max(self._seq, max(p.seq for p in self._pending) + 1)
 
     def checkpoint(self, checkpoint_dir: Optional[str] = None) -> str:
         """One durable checkpoint: session state via the checkpoint store,
@@ -581,14 +605,16 @@ class ServeFrontend:
     def restore(cls, checkpoint_dir: str, **kwargs: Any) -> "ServeFrontend":
         """Rebuild frontend + session from ``checkpoint_dir``: the session
         restores from the newest valid checkpoint
-        (:meth:`ReuseSession.restore`), the tenant ledgers from the
-        sidecar. Queued-but-unadmitted submissions are *not* durable —
-        clients see QUEUED as at-most-once and resubmit after a restart."""
+        (:meth:`ReuseSession.restore`), the tenant ledgers — including the
+        QUEUED admission queue — from the sidecar. Re-enqueued submissions
+        go through one fair-share drain pass immediately, so whatever now
+        fits is admitted before the first post-restore request arrives."""
         from repro.api import ReuseSession
 
         session_kwargs = {
             k: kwargs.pop(k)
-            for k in ("backend", "step_mode", "max_workers")
+            for k in ("backend", "step_mode", "max_workers", "supervise",
+                      "autoscale", "on_worker_event", "transport", "workers")
             if k in kwargs
         }
         session = ReuseSession.restore(checkpoint_dir, **session_kwargs)
@@ -597,6 +623,8 @@ class ServeFrontend:
         if os.path.exists(sidecar):
             with open(sidecar, "r", encoding="utf-8") as fh:
                 frontend._load_ledger_payload(json.load(fh))
+            with frontend._lock:
+                frontend._drain_pending()
         return frontend
 
     # -- lifecycle ---------------------------------------------------------------
@@ -734,6 +762,10 @@ class ServeFrontend:
                     protocol.send_response(conn, response)
                 except (ConnectionError, OSError):
                     break
+                if request.get("op") == protocol.SHUTDOWN:
+                    ack = self._stop_ack
+                    if ack is not None:
+                        ack.set()
         finally:
             with self._conns_lock:
                 self._conns.discard(conn)
@@ -770,8 +802,18 @@ class ServeFrontend:
                     and self.session._system.checkpoint_store is not None
                 ):
                     out["path"] = self.checkpoint()
-            # Stop from a helper thread so this response still goes out.
-            threading.Thread(target=self.stop, daemon=True).start()
+            # Stop from a helper thread, but only after the conn loop has
+            # flushed this response (it sets _stop_ack) — otherwise stop()
+            # can close the socket under the reply and the client sees
+            # ConnectionError instead of {"ok": true}.
+            ack = threading.Event()
+            self._stop_ack = ack
+
+            def _stop_after_reply() -> None:
+                ack.wait(timeout=2.0)
+                self.stop()
+
+            threading.Thread(target=_stop_after_reply, daemon=True).start()
             self._shutdown_event.set()
             return out
         raise DataflowError(f"unknown op {op!r} (expected one of {sorted(protocol.VERBS)})")

@@ -16,7 +16,13 @@ from helpers import chain_df, fig1
 from repro.api import ReuseSession
 from repro.core import DataflowError
 from repro.runtime.transport import TcpBrokerServer, TcpTransport
-from repro.serve import ServeClient, ServeFrontend, TenantQuota, protocol
+from repro.serve import (
+    ServeClient,
+    ServeFrontend,
+    SubmitTimeout,
+    TenantQuota,
+    protocol,
+)
 from repro.workloads import opmw_workload, tenant_copy, tenant_trace
 
 
@@ -353,6 +359,53 @@ class TestWireProtocol:
             fe2.close()
 
 
+# -- client-side backpressure handling -------------------------------------------
+
+
+class TestClientBackoff:
+    def test_wait_rides_out_backpressure_until_admitted(self):
+        fe = frontend(slots=6, retry_after=0.1,
+                      default_quota=TenantQuota(max_slots=6, max_pending=0))
+        host, port = fe.start()
+        try:
+            with ServeClient((host, port)) as c:
+                r = c.submit("t1", cost_df("block", "a", 6))
+                assert r["status"] == protocol.ADMITTED
+
+            def free_capacity():
+                time.sleep(0.4)
+                with ServeClient((host, port)) as c2:
+                    c2.remove("t1", "block")
+
+            t = threading.Thread(target=free_capacity)
+            t.start()
+            with ServeClient((host, port)) as c3:
+                r = c3.submit("t2", cost_df("want", "b", 6),
+                              wait=True, max_wait=20.0)
+            t.join()
+            assert r["status"] == protocol.ADMITTED  # never RETRY_AFTER
+        finally:
+            fe.close()
+
+    def test_wait_timeout_raises_typed_error_with_last_response(self):
+        fe = frontend(slots=6, retry_after=0.05,
+                      default_quota=TenantQuota(max_slots=6, max_pending=0))
+        host, port = fe.start()
+        try:
+            with ServeClient((host, port)) as c:
+                assert c.submit("t1", cost_df("block", "a", 6))["status"] == protocol.ADMITTED
+                t0 = time.monotonic()
+                with pytest.raises(SubmitTimeout) as ei:
+                    c.submit("t2", cost_df("late", "b", 6),
+                             wait=True, max_wait=0.4)
+                elapsed = time.monotonic() - t0
+            assert elapsed < 5.0  # bounded: no hang past the deadline
+            assert ei.value.tenant == "t2"
+            assert ei.value.last.get("status") == protocol.RETRY_AFTER
+        finally:
+            fe.close()
+
+
 # -- tcp broker shutdown hygiene (regression) ------------------------------------
 
 
@@ -451,8 +504,46 @@ class TestDurability:
         fe.close()
         with open(os.path.join(ckpt_dir, "frontend-ledger.json")) as fh:
             payload = json.load(fh)
-        assert payload["version"] == 1
+        assert payload["version"] == 2
         assert "t1" in payload["ledgers"]
+        assert payload["pending"] == []  # v2: the QUEUED queue is durable
+
+    def test_queued_submissions_survive_restart(self, ckpt_dir):
+        fe = frontend(slots=6, checkpoint_dir=ckpt_dir,
+                      default_quota=TenantQuota(max_slots=6, max_pending=4))
+        assert fe.submit("t1", cost_df("block", "a", 6)).status == protocol.ADMITTED
+        assert fe.submit("t2", cost_df("next", "b", 4)).status == protocol.QUEUED
+        fe.checkpoint()
+        fe.close()
+        restored = ServeFrontend.restore(ckpt_dir)
+        try:
+            # still queued (nothing freed), not silently dropped
+            assert [p.df.name for p in restored._pending] == ["next"]
+            out = restored.remove("t1", "block")
+            assert [a["name"] for a in out["admitted"]] == ["next"]
+            assert restored.tenant_of["next"] == "t2"
+        finally:
+            restored.close()
+
+    def test_version1_sidecar_without_pending_is_tolerated(self, ckpt_dir):
+        fe = frontend(checkpoint_dir=ckpt_dir)
+        fe.submit("t1", fig1()[0])
+        fe.checkpoint()
+        fe.close()
+        sidecar = os.path.join(ckpt_dir, "frontend-ledger.json")
+        with open(sidecar) as fh:
+            payload = json.load(fh)
+        payload.pop("pending")
+        payload.pop("pending_seq")
+        payload["version"] = 1
+        with open(sidecar, "w") as fh:
+            json.dump(payload, fh)
+        restored = ServeFrontend.restore(ckpt_dir)
+        try:
+            assert restored._pending == []
+            assert restored.submit("t2", fig1()[1]).status == protocol.ADMITTED
+        finally:
+            restored.close()
 
 
 # -- tenant workload -------------------------------------------------------------
