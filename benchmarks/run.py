@@ -7,6 +7,7 @@ console summary below is the EXPERIMENTS.md source of truth.
   defrag     defrag_benefit    paper future-work, implemented (real data plane)
   serving    serving_reuse     paper technique over multi-tenant LM pipelines
   roofline   roofline_bench    40-cell dry-run aggregation + hillclimb picks
+  hotpath    hotpath_bench     zero-copy fetch / chain batching / segment fusion
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ def main() -> int:
 
     from benchmarks import (
         defrag_benefit,
+        hotpath_bench,
         merge_latency,
         roofline_bench,
         serving_reuse,
@@ -38,8 +40,10 @@ def main() -> int:
     serving_reuse.main()
     print("\n=== roofline aggregation (dry-run records) ===")
     roofline_bench.main()
+    print("\n=== hot path: zero-copy fetch / chain batching / fusion ===")
+    hotpath_rc = hotpath_bench.main([])
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
-    return 0
+    return hotpath_rc
 
 
 if __name__ == "__main__":

@@ -379,6 +379,16 @@ class ReuseSession:
         self._emit("defrag", event)
         return event
 
+    def fuse(self, min_length: int = 2) -> Dict[str, List[str]]:
+        """Fuse linear same-DAG segment chains into single compiled segments.
+
+        The depth-only sibling of :meth:`defragment`: private segment-to-
+        segment pipes collapse into one donated-buffer jitted step, while
+        parallel waves and paused residue stay untouched. Returns
+        ``{fused segment name: [member segment names replaced]}``.
+        """
+        return self._require_system("fuse").fuse(min_length=min_length)
+
     # -- execution -------------------------------------------------------------
     def step(self):
         report = self._require_system("step").step()

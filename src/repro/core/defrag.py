@@ -15,7 +15,7 @@ state carry-over and recompilation — lives in
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Mapping, Optional, Set
 
 from .graph import Dataflow
 from .signatures import compute_signatures
@@ -49,6 +49,79 @@ def canonical_parents(df: Dataflow) -> Dict[str, List[str]]:
     """
     sigs = compute_signatures(df)
     return {t: sorted(df.parents(t), key=lambda p: sigs[p]) for t in df.tasks}
+
+
+@dataclass
+class FusionChain:
+    """A maximal linear run of same-DAG segments to compile into one."""
+
+    dag_name: str
+    members: List[str]  # segment names, upstream -> downstream
+
+
+@dataclass
+class FusionPlan:
+    chains: List[FusionChain] = field(default_factory=list)
+
+    @property
+    def total_segments(self) -> int:
+        return sum(len(c.members) for c in self.chains)
+
+
+def plan_fusion(
+    seg_deps: Mapping[str, Set[str]],
+    dag_of: Mapping[str, str],
+    min_length: int = 2,
+) -> FusionPlan:
+    """Find maximal linear segment chains worth fusing.
+
+    A pair ``(a, b)`` is a *sole link* when ``b``'s only dependency is
+    ``a`` and ``a``'s only dependent is ``b`` — the boundary stream
+    between them is a private pipe with no fan-in or fan-out. Fusing
+    exactly these chains collapses the pipe into an XLA temporary
+    without serialising anything that was running in parallel: wide
+    waves stay wide, only depth is fused. Segment dependencies only
+    arise from boundary streams *within* one merged running DAG, so a
+    chain never spans DAGs; ``dag_of`` labels the chain with its newest
+    member's running-DAG name (merges rename the running DAG, so
+    members carry different historical names).
+
+    Pure planning (graph work only) like :func:`plan_defrag`; enactment
+    lives in :meth:`repro.runtime.system.StreamSystem.fuse`.
+    """
+    dependents: Dict[str, List[str]] = {name: [] for name in seg_deps}
+    for name in sorted(seg_deps):
+        for dep in seg_deps[name]:
+            if dep in dependents:
+                dependents[dep].append(name)
+
+    def sole_link(a: str, b: str) -> bool:
+        return set(seg_deps.get(b, ())) == {a} and dependents.get(a) == [b]
+
+    def successor(a: str) -> Optional[str]:
+        down = dependents.get(a, [])
+        if len(down) == 1 and sole_link(a, down[0]):
+            return down[0]
+        return None
+
+    plan = FusionPlan()
+    for name in sorted(seg_deps):
+        # chain heads: extendable forward, not extendable backward
+        if successor(name) is None:
+            continue
+        preds = seg_deps.get(name, set())
+        if len(preds) == 1 and sole_link(next(iter(preds)), name):
+            continue  # interior node — its head starts the chain
+        members = [name]
+        nxt = successor(name)
+        while nxt is not None:
+            members.append(nxt)
+            nxt = successor(nxt)
+        if len(members) >= min_length:
+            plan.chains.append(
+                FusionChain(dag_name=dag_of.get(members[-1], ""), members=members)
+            )
+    return plan
 
 
 def plan_defrag(running: Dict[str, Dataflow]) -> DefragPlan:

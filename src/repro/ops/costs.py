@@ -37,6 +37,7 @@ RIOT_COSTS: Dict[str, float] = {
     "avg": 1.0,
     "moment2": 1.4,
     "distinct_count": 1.1,
+    "rmsnorm": 1.2,
     # PREDICT
     "linreg": 1.6,
     "dtree": 1.3,

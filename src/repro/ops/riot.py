@@ -225,6 +225,27 @@ def second_order_moment(cfg: Dict[str, Any]) -> Operator:
     return Operator("moment2", init_state, apply, cost_weight=RIOT_COSTS["moment2"])
 
 
+@register("rmsnorm")
+def rmsnorm_op(cfg: Dict[str, Any]) -> Operator:
+    """RMS-normalize the observation channels via the kernel library.
+
+    Dispatches through :func:`repro.kernels.ops.rmsnorm` — the Pallas
+    kernel on TPU, the reference einsum elsewhere — so fusion-compiled
+    segment chains exercise real accelerator kernels where they exist.
+    """
+    eps = float(cfg.get("eps", 1e-6))
+    gain = float(cfg.get("gain", 1.0))
+
+    def fn(x: jnp.ndarray) -> jnp.ndarray:
+        from repro.kernels import ops as kernel_ops
+
+        scale = jnp.full((5,), gain, dtype=x.dtype)
+        vals = kernel_ops.rmsnorm(x[:, VAL], scale, eps=eps)
+        return x.at[:, VAL].set(vals)
+
+    return stateless("rmsnorm", fn, cost=RIOT_COSTS["rmsnorm"])
+
+
 @register("distinct_count")
 def distinct_count(cfg: Dict[str, Any]) -> Operator:
     """Approximate distinct count (linear-counting bitset)."""

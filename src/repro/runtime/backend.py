@@ -75,6 +75,13 @@ class SegmentSpec:
     publish: Set[str]
     batch_of: Dict[str, int]  # per-task output batch size
     created_at: int = 0  # launch sequence number (segments step in this order)
+    # Fusion-compiled hot path: the jit planes compile this segment's step
+    # with XLA buffer donation (pre-step states donated to post-step
+    # states), so intermediate buffers never materialize. Donation
+    # invalidates the donated arrays after each step — callers must not
+    # retain references to a fused segment's states across steps (the
+    # system layer therefore skips fusion under background checkpointing).
+    fused: bool = False
 
 
 @dataclass
@@ -587,6 +594,7 @@ class ExecutionBackend:
                     "publish": sorted(self.forwarding.get(name, set())),
                     "batch_of": {t: int(b) for t, b in spec.batch_of.items()},
                     "created_at": int(spec.created_at),
+                    "fused": bool(spec.fused),
                     "tasks": {
                         t: {"type": self.task_defs[t].type, "config": self.task_defs[t].config}
                         for t in spec.task_ids
@@ -638,6 +646,7 @@ class ExecutionBackend:
                 parents={t: list(ps) for t, ps in rec["parents"].items()},
                 publish=set(rec["publish"]),
                 batch_of={t: int(b) for t, b in rec["batch_of"].items()},
+                fused=bool(rec.get("fused", False)),
             )
             # Synthetic task-definition container: deploy only reads
             # dataflow.tasks[tid] (operator/cost construction), so the
@@ -750,6 +759,37 @@ class ExecutionBackend:
                     carried[tid] = seg.states[tid]
             self.kill(name)
         return self.deploy(fused_spec, dataflow, init_states=carried)
+
+    def fuse_segments(
+        self,
+        fused_spec: SegmentSpec,
+        dataflow: Dataflow,
+        members: List[str],
+    ) -> Any:
+        """Replace ``members`` (a linear same-DAG segment chain) by ONE
+        fusion-compiled segment, carrying task states over.
+
+        The enactment twin of :func:`repro.core.defrag.plan_fusion` — like
+        :meth:`defragment` but member-scoped (other segments of the DAG
+        stay deployed untouched), and the replacement deploys with
+        ``fused_spec.fused`` set so the jit planes compile its whole task
+        chain into a single donated-buffer step: the chain's intermediate
+        streams become XLA temporaries that never materialize on a topic.
+        """
+        carried: Dict[str, PyTree] = {}
+        # kill() forgets member pause flags and deploy() starts all-active,
+        # so paused tasks inside the chain must be re-paused afterwards.
+        repause = {t for t in fused_spec.task_ids if t in self.paused}
+        for name in members:
+            seg = self.segments[name]
+            for tid in fused_spec.task_ids:
+                if tid in seg.spec.task_ids:
+                    carried[tid] = seg.states[tid]
+            self.kill(name)
+        seg = self.deploy(fused_spec, dataflow, init_states=carried)
+        if repause:
+            self.pause(repause)
+        return seg
 
 
 # -- backend registry ----------------------------------------------------------

@@ -30,6 +30,29 @@ from __future__ import annotations
 import threading
 from typing import Any, Dict
 
+import numpy as np
+
+
+class TransportError(RuntimeError):
+    """A transport cannot carry the requested payload or span the caller."""
+
+
+class TopicDropped(TransportError, KeyError):
+    """The topic carries no data: never published, or dropped mid-wait.
+
+    Subclasses ``KeyError`` so pre-taxonomy handlers (``except KeyError``)
+    keep working across every transport, while supervisor hang-detection
+    can classify any transport stall with one ``except TransportError``.
+    """
+
+    def __str__(self) -> str:
+        # KeyError.__str__ repr-quotes the message; keep it readable.
+        return RuntimeError.__str__(self)
+
+
+class TransportTimeout(TransportError, TimeoutError):
+    """A bounded wait (``fetch_synced``) expired before its condition."""
+
 
 def topic_for(task_id: str) -> str:
     """The derived-stream topic of a running task (paper: unique data topic)."""
@@ -75,16 +98,26 @@ class Broker:
             self.bytes_published += batch.size * batch.dtype.itemsize
             self.publishes += 1
 
-    def fetch(self, topic: str) -> Any:
+    def fetch(self, topic: str, copy: bool = False) -> Any:
         st = self._state(topic)
         if st is None:
-            raise KeyError(f"no data published on topic {topic!r}")
+            raise TopicDropped(f"no data published on topic {topic!r}")
         with st.cond:
             if st.buffer is None:
-                raise KeyError(f"no data published on topic {topic!r}")
-            return st.buffer
+                raise TopicDropped(f"no data published on topic {topic!r}")
+            return self._maybe_copy(st.buffer, copy)
 
-    def fetch_synced(self, topic: str, min_seq: int, timeout: float = 60.0) -> Any:
+    @staticmethod
+    def _maybe_copy(buffer: Any, copy: bool) -> Any:
+        """In-process topics pass buffers by reference (zero-copy fan-out);
+        ``copy=True`` is the uniform escape hatch for callers that mutate."""
+        if not copy:
+            return buffer
+        return np.array(buffer, copy=True)
+
+    def fetch_synced(
+        self, topic: str, min_seq: int, timeout: float = 60.0, copy: bool = False
+    ) -> Any:
         """Fetch once the topic's sequence reaches ``min_seq``.
 
         The per-producer synchronization point of concurrent stepping: the
@@ -97,13 +130,13 @@ class Broker:
         with st.cond:
             ok = st.cond.wait_for(lambda: st.dropped or st.seq >= min_seq, timeout)
             if st.dropped or st.buffer is None:
-                raise KeyError(f"topic {topic!r} dropped while awaited")
+                raise TopicDropped(f"topic {topic!r} dropped while awaited")
             if not ok:  # pragma: no cover - defensive
-                raise TimeoutError(
+                raise TransportTimeout(
                     f"topic {topic!r} never reached sequence {min_seq} "
                     f"(at {st.seq}) within {timeout}s"
                 )
-            return st.buffer
+            return self._maybe_copy(st.buffer, copy)
 
     def seq(self, topic: str) -> int:
         """Publish count of ``topic`` (0 if it never existed)."""

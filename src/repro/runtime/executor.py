@@ -95,7 +95,7 @@ class InProcessJitBackend(ExecutionBackend):
         for tid in seg.spec.task_ids:
             self.broker.drop(topic_for(tid))
 
-    def _fetch_inputs(self, seg: Segment) -> Dict[str, Any]:
+    def _fetch_inputs(self, seg: Segment, copy: bool = False) -> Dict[str, Any]:
         """Boundary inputs for one segment (hook — sharded moves them on-device).
 
         During a concurrent step each topic read synchronizes on *its*
@@ -106,12 +106,34 @@ class InProcessJitBackend(ExecutionBackend):
         """
         targets = self._topic_target
         if targets is None:
-            return {t: self.broker.fetch(t) for t in seg.boundary_topics}
+            return {t: self.broker.fetch(t, copy=copy) for t in seg.boundary_topics}
         return {
-            t: self.broker.fetch_synced(t, targets[t]) if t in targets
-            else self.broker.fetch(t)
+            t: self.broker.fetch_synced(t, targets[t], copy=copy) if t in targets
+            else self.broker.fetch(t, copy=copy)
             for t in seg.boundary_topics
         }
+
+    def _gather_inputs(self, seg: Segment) -> Tuple[Dict[str, Any], Dict[str, int]]:
+        """Boundary inputs plus revalidation tokens for the zero-copy path.
+
+        On transports exposing :meth:`fetch_view` (shm), inputs are
+        read-only views into the ring and ``tokens`` maps each topic to the
+        sequence observed — ``_step_one`` revalidates them after computing
+        and recomputes from private copies if the ring lapped mid-step.
+        Fused segments skip the view path entirely: donation invalidates
+        the pre-step states, so a recompute is impossible — they pay one
+        private copy per boundary topic instead.
+        """
+        fused = bool(getattr(seg.spec, "fused", False))
+        views = None if fused else getattr(self.transport, "fetch_view", None)
+        if views is None:
+            return self._fetch_inputs(seg, copy=fused), {}
+        targets = self._topic_target or {}
+        inputs: Dict[str, Any] = {}
+        tokens: Dict[str, int] = {}
+        for t in seg.boundary_topics:
+            inputs[t], tokens[t] = views(t, min_seq=targets.get(t))
+        return inputs, tokens
 
     def _begin_concurrent_step(self) -> None:
         # one sequences() snapshot instead of a seq() per topic — on the
@@ -128,8 +150,19 @@ class InProcessJitBackend(ExecutionBackend):
         self._topic_target = None
 
     def _step_one(self, seg: Segment) -> Optional[float]:
-        inputs = self._fetch_inputs(seg)
+        inputs, tokens = self._gather_inputs(seg)
         new_states, outputs = seg.step_fn(seg.states, seg.active, inputs)
+        if tokens:
+            # Zero-copy stale-view check: the CPU jit may alias the host
+            # views, so the computation must finish before we can trust it;
+            # if any source slot lapped mid-step, recompute from private
+            # copies and the untouched pre-step states. Publishes and the
+            # state commit happen only after validation (exactly-once).
+            jax.block_until_ready((new_states, outputs))
+            if not all(self.transport.view_valid(t, s) for t, s in tokens.items()):
+                for t in tokens:
+                    inputs[t] = self.transport.fetch(t, copy=True)
+                new_states, outputs = seg.step_fn(seg.states, seg.active, inputs)
         seg.states = new_states
         for tid in self.forwarding[seg.name]:
             if tid in outputs:

@@ -109,6 +109,37 @@ def compute_waves(
     return waves
 
 
+def compute_chains(
+    deps: Mapping[str, AbstractSet[str]],
+    assignment: Mapping[str, Any],
+    order: Optional[Mapping[str, int]] = None,
+) -> Tuple[Dict[Any, List[str]], Dict[str, int]]:
+    """Flatten the dependency waves into one chain per execution slot.
+
+    ``assignment`` maps segment → slot (worker id, device). Returns
+    ``(chains, wave_of)``: each chain lists its slot's segments in global
+    wave order (wave index, then launch order) — the order a worker must
+    execute them so every intra-chain dependency is already satisfied when
+    reached, and every cross-slot dependency points at an *earlier* wave.
+
+    That ordering is what makes one-command-per-worker-per-step dispatch
+    deadlock-free: consider the earliest (by wave, then order) entry
+    blocked on a cross-slot producer. The producer sits in a strictly
+    earlier wave, so every entry its slot must execute first is earlier
+    still — by minimality none of them is blocked, so the producer's slot
+    makes progress and eventually publishes. Inductively, all chains
+    drain.
+    """
+    waves = compute_waves(deps, order=order)
+    chains: Dict[Any, List[str]] = {}
+    wave_of: Dict[str, int] = {}
+    for i, wave in enumerate(waves):
+        for name in wave:
+            wave_of[name] = i
+            chains.setdefault(assignment.get(name), []).append(name)
+    return chains, wave_of
+
+
 def run_ready_queue(
     deps: Mapping[str, AbstractSet[str]],
     runner: Callable[[str], float],

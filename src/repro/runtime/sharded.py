@@ -84,15 +84,23 @@ class ShardedBackend(PlacedBackendMixin, InProcessJitBackend):
         seg.active = jax.device_put(seg.active, dev)
         return seg
 
-    def _fetch_inputs(self, seg: Segment) -> Dict[str, Any]:
+    def _fetch_inputs(self, seg: Segment, copy: bool = False) -> Dict[str, Any]:
         """Move boundary batches onto the consuming segment's device (one
         transfer per cross-segment hop); per-topic synchronization comes
         from the base fetch (concurrent steps sync on producers only)."""
         dev = self.devices[self.device_of[seg.spec.name]]
         return {
             t: jax.device_put(batch, dev)
-            for t, batch in super()._fetch_inputs(seg).items()
+            for t, batch in super()._fetch_inputs(seg, copy=copy).items()
         }
+
+    def _gather_inputs(self, seg: Segment):
+        # No view path here: device_put on the host platform may alias
+        # numpy memory, so shm ring views must be privatized *before* the
+        # transfer — fetch with copy=True on lappable transports instead
+        # of revalidating after the fact.
+        copy = getattr(self.transport, "fetch_view", None) is not None
+        return self._fetch_inputs(seg, copy=copy), {}
 
     # -- durability hooks ---------------------------------------------------------
     def _dump_extra(self) -> Dict[str, Any]:

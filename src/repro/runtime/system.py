@@ -34,7 +34,7 @@ import os
 from typing import Any, Dict, List, Optional, Sequence, Set, Union
 
 from repro.core import MergeStrategy, ReuseManager
-from repro.core.defrag import canonical_parents, plan_defrag
+from repro.core.defrag import canonical_parents, plan_defrag, plan_fusion
 from repro.core.graph import Dataflow
 from repro.core.manager import RemovalReceipt, SubmissionReceipt
 
@@ -258,6 +258,71 @@ class StreamSystem:
         for sub in self._segments_of:
             self._segments_of[sub] = []
         return killed
+
+    def fuse(self, min_length: int = 2) -> Dict[str, List[str]]:
+        """Fuse linear same-DAG segment chains into single compiled segments.
+
+        Enacts :func:`repro.core.defrag.plan_fusion`: each maximal chain of
+        segments joined by private (no fan-in/fan-out) boundary streams is
+        replaced by ONE segment whose whole task chain compiles to a single
+        jitted step with XLA buffer donation — the chain's intermediate
+        streams become executable temporaries instead of broker topics.
+        Unlike :meth:`defragment` this is member-scoped (parallel waves stay
+        untouched) and keeps paused residue deployed (and paused).
+
+        Returns ``{fused segment name: [member names replaced]}``.
+        """
+        dag_of = {n: s.spec.dag_name for n, s in self.backend.segments.items()}
+        plan = plan_fusion(self.backend.seg_deps, dag_of, min_length=min_length)
+        fused: Dict[str, List[str]] = {}
+        for chain in plan.chains:
+            members = chain.members
+            specs = [self.backend.segments[m].spec for m in members]
+            # Chain order is upstream→downstream and member task_ids are
+            # topological, so concatenation is topological for the union.
+            combined: List[str] = []
+            parents: Dict[str, List[str]] = {}
+            batch_of: Dict[str, int] = {}
+            for s in specs:
+                combined.extend(s.task_ids)
+                parents.update({t: list(s.parents[t]) for t in s.task_ids})
+                batch_of.update(s.batch_of)
+            # Keep every member's *current* forwarding set: intra-chain
+            # consumers go in-segment, but a forwarded topic may also feed
+            # external segments (fan-out at the task level) or observers.
+            publish: Set[str] = set()
+            for m in members:
+                publish |= self.backend.forwarding.get(m, set())
+            # Synthetic task-definition container (as in checkpoint
+            # restore): fused chains may hold paused tasks that the
+            # manager's running DAG no longer lists.
+            df = Dataflow(chain.dag_name)
+            for tid in combined:
+                df.add_task(self.backend.task_defs[tid])
+            spec = SegmentSpec(
+                name=self._mint_segment(),
+                dag_name=chain.dag_name,
+                task_ids=combined,
+                parents=parents,
+                publish=publish,
+                batch_of=batch_of,
+                # Donation hazard: the background checkpointer's deferred
+                # encode holds references to step-k states that a donated
+                # step k+1 would invalidate — fall back to plain fusion.
+                fused=not self.checkpoint_background,
+            )
+            self.backend.fuse_segments(spec, df, members)
+            members_set = set(members)
+            for sub, segs in self._segments_of.items():
+                if any(s in members_set for s in segs):
+                    merged: List[str] = []
+                    for s in segs:
+                        repl = spec.name if s in members_set else s
+                        if repl not in merged:
+                            merged.append(repl)
+                    self._segments_of[sub] = merged
+            fused[spec.name] = list(members)
+        return fused
 
     # -- execution -----------------------------------------------------------------
     def step(self) -> StepReport:

@@ -45,6 +45,7 @@ import fcntl
 import json
 import mmap
 import os
+import random
 import shutil
 import socket
 import struct
@@ -52,15 +53,31 @@ import tempfile
 import threading
 import time
 import uuid
-from typing import Any, Dict, List, Optional, Tuple, Type, Union
+from typing import Any, Dict, List, Optional, Set, Tuple, Type, Union
 
 import numpy as np
 
-from .broker import Broker
+# The error taxonomy lives in broker.py (the transports wrap a Broker, so
+# the in-process transport raises the same types for free) and is
+# re-exported here: TransportError > TopicDropped (also a KeyError) >
+# TransportTimeout (also a TimeoutError). Supervisor hang-detection can
+# classify any transport stall with one `except TransportError`.
+from .broker import Broker, TopicDropped, TransportError, TransportTimeout
 
-
-class TransportError(RuntimeError):
-    """A transport cannot carry the requested payload or span the caller."""
+__all__ = [
+    "Transport",
+    "TransportError",
+    "TopicDropped",
+    "TransportTimeout",
+    "InProcTransport",
+    "ShmTransport",
+    "TcpTransport",
+    "TcpBrokerServer",
+    "register_transport",
+    "available_transports",
+    "resolve_transport",
+    "connect_transport",
+]
 
 
 class Transport:
@@ -76,10 +93,20 @@ class Transport:
     def publish(self, topic: str, batch: Any) -> None:
         raise NotImplementedError
 
-    def fetch(self, topic: str) -> Any:
+    def fetch(self, topic: str, copy: bool = False) -> Any:
+        """Latest batch on ``topic``.
+
+        Zero-copy by default: transports may return a **read-only view**
+        into their own buffers (the shm ring, the wire receive buffer);
+        such a view is bit-stable only until the producer laps the ring —
+        callers that hold batches across steps, or mutate them, pass
+        ``copy=True`` for a private writable array.
+        """
         raise NotImplementedError
 
-    def fetch_synced(self, topic: str, min_seq: int, timeout: float = 60.0) -> Any:
+    def fetch_synced(
+        self, topic: str, min_seq: int, timeout: float = 60.0, copy: bool = False
+    ) -> Any:
         raise NotImplementedError
 
     def drop(self, topic: str) -> None:
@@ -135,9 +162,23 @@ def _encode_batch(batch: Any) -> Tuple[Dict[str, Any], bytes]:
     return {"dtype": arr.dtype.str, "shape": list(arr.shape)}, arr.tobytes()
 
 
-def _decode_batch(header: Dict[str, Any], payload: bytes) -> np.ndarray:
+def _decode_batch(
+    header: Dict[str, Any], payload: Any, copy: bool = False
+) -> np.ndarray:
+    """Payload bytes → event batch.
+
+    Zero-copy by default: the returned array is a **read-only**
+    ``frombuffer`` view over ``payload`` (bytes, memoryview, or mmap
+    slice); ``copy=True`` materializes a private writable array for the
+    callers that mutate or outlive the buffer.
+    """
     arr = np.frombuffer(payload, dtype=np.dtype(header["dtype"]))
-    return arr.reshape(header["shape"]).copy()  # frombuffer views are read-only
+    arr = arr.reshape(header["shape"])
+    if copy:
+        return arr.copy()
+    if arr.flags.writeable:  # writable source buffer (e.g. an mmap slice)
+        arr.flags.writeable = False
+    return arr
 
 
 # -- inproc ---------------------------------------------------------------------
@@ -184,6 +225,7 @@ _HDR_SIZE = 64
 _SLOT_HDR = struct.Struct("<16sIIQQQQQ")  # dtype, ndim, pad, shape[4], nbytes
 _SLOT_HDR_SIZE = 64
 _SHM_NSLOTS = 4
+_SHM_READ_RETRIES = 64
 
 
 def _shm_root() -> str:
@@ -231,6 +273,10 @@ class _ShmTopic:
     def close(self) -> None:
         try:
             self.mm.close()
+        except BufferError:
+            # A zero-copy fetch view still references this mapping; the OS
+            # mapping is released when the last view is garbage-collected.
+            pass
         finally:
             self.file.close()
 
@@ -378,35 +424,95 @@ class ShmTransport(Transport):
         _HDR.pack_into(st.mm, 0, _SHM_MAGIC, _SHM_VERSION, seq + 1, 0,
                        nslots, slot_bytes, tb + len(payload))
 
-    def _read_latest(self, st: _ShmTopic, topic: str) -> np.ndarray:
-        for _ in range(64):
+    def _read_latest(
+        self, st: _ShmTopic, topic: str, copy: bool = False
+    ) -> Tuple[np.ndarray, int]:
+        """Seqlock read of the latest slot → ``(batch, seq)``.
+
+        Validity: the slot of publish #``seq`` is rewritten only while
+        publish #``seq + nslots`` is in flight, during which the sequence
+        word already reads ``seq + nslots - 1`` — so a slot image (copy
+        *or* view) is consistent iff the post-read sequence is strictly
+        below ``seq + nslots - 1``. An exactly-one-lap writer (post-read
+        sequence ``== seq + nslots - 1``) may already be tearing the slot,
+        hence the strict bound.
+
+        Under a sustained fast writer every attempt can land inside the
+        tear window; a tight retry loop then fails spuriously on a
+        perfectly healthy topic. Retries therefore back off with a
+        jittered micro-sleep (~1 µs doubling to ~1 ms) so the reader
+        desynchronizes from the writer cadence and lands in a gap.
+        """
+        delay = 1e-6
+        for attempt in range(_SHM_READ_RETRIES):
+            if attempt:
+                time.sleep(delay * (0.5 + random.random()))
+                delay = min(delay * 2.0, 1e-3)
             seq = st.read_seq()
             if st.read_dropped() or seq == 0:
-                raise KeyError(f"no data published on topic {topic!r}")
+                raise TopicDropped(f"no data published on topic {topic!r}")
             off = st.slot_offset(seq)
             dtype_b, ndim, _pad, s0, s1, s2, s3, nbytes = _SLOT_HDR.unpack_from(
                 st.mm, off
             )
-            payload = bytes(st.mm[off + _SLOT_HDR_SIZE: off + _SLOT_HDR_SIZE + nbytes])
-            # Slot for publish #seq is rewritten while publish #(seq+nslots)
-            # is in flight, during which the sequence word still reads
-            # seq+nslots-1 — so the copy is consistent only strictly below.
+            start = off + _SLOT_HDR_SIZE
+            payload: Any = (
+                bytes(st.mm[start: start + nbytes]) if copy
+                else memoryview(st.mm)[start: start + nbytes]
+            )
             if st.read_seq() < seq + st.nslots - 1:
                 shape = [s0, s1, s2, s3][:ndim]
-                return _decode_batch(
+                batch = _decode_batch(
                     {"dtype": dtype_b.rstrip(b"\x00").decode("ascii"),
                      "shape": shape},
                     payload,
+                    copy=copy,
                 )
-        raise TransportError(f"topic {topic!r} ring lapped 64 reads in a row")
+                return batch, seq
+        raise TransportError(
+            f"topic {topic!r} ring lapped {_SHM_READ_RETRIES} reads in a row"
+        )
 
-    def fetch(self, topic: str) -> np.ndarray:
+    def fetch(self, topic: str, copy: bool = False) -> np.ndarray:
+        """Latest batch; a **read-only view into the ring** unless
+        ``copy=True``. A view stays bit-identical until the producer laps
+        the ring (``nslots - 2`` further publishes with an in-flight
+        writer; see :meth:`view_valid`)."""
         st = self._attach(topic)
         if st is None:
-            raise KeyError(f"no data published on topic {topic!r}")
-        return self._read_latest(st, topic)
+            raise TopicDropped(f"no data published on topic {topic!r}")
+        return self._read_latest(st, topic, copy=copy)[0]
 
-    def fetch_synced(self, topic: str, min_seq: int, timeout: float = 60.0) -> np.ndarray:
+    def fetch_view(
+        self, topic: str, min_seq: Optional[int] = None, timeout: float = 60.0
+    ) -> Tuple[np.ndarray, int]:
+        """Zero-copy fetch returning ``(view, seq)``.
+
+        The sequence token feeds :meth:`view_valid`: a scheduler that
+        consumed the view (e.g. fed it to a jitted step that may alias
+        host buffers) revalidates after the fact and re-fetches with
+        ``copy=True`` if the ring lapped mid-use. ``min_seq`` adds the
+        :meth:`fetch_synced` producer wait before the read.
+        """
+        if min_seq is not None:
+            st = self._await_seq(topic, min_seq, timeout)
+        else:
+            st = self._attach(topic)
+            if st is None:
+                raise TopicDropped(f"no data published on topic {topic!r}")
+        return self._read_latest(st, topic, copy=False)
+
+    def view_valid(self, topic: str, seq: int) -> bool:
+        """Whether a view obtained at publish #``seq`` is still bit-valid
+        (same strict one-lap bound as the seqlock read)."""
+        st = self._attach(topic)
+        if st is None or st.read_dropped():
+            return False
+        return st.read_seq() < seq + st.nslots - 1
+
+    def _await_seq(self, topic: str, min_seq: int, timeout: float) -> _ShmTopic:
+        """Spin (with backoff) until ``topic`` reaches ``min_seq``; returns
+        the attached topic, ready for a seqlock read."""
         deadline = time.monotonic() + timeout
         delay = 0.0001
         seen = False
@@ -415,18 +521,24 @@ class ShmTransport(Transport):
             if st is not None:
                 seen = True
                 if st.read_dropped():
-                    raise KeyError(f"topic {topic!r} dropped while awaited")
+                    raise TopicDropped(f"topic {topic!r} dropped while awaited")
                 if st.read_seq() >= min_seq:
-                    return self._read_latest(st, topic)
+                    return st
             elif seen:
                 # the incarnation we were waiting on was dropped (file gone)
-                raise KeyError(f"topic {topic!r} dropped while awaited")
+                raise TopicDropped(f"topic {topic!r} dropped while awaited")
             if time.monotonic() > deadline:  # pragma: no cover - defensive
-                raise TimeoutError(
+                raise TransportTimeout(
                     f"topic {topic!r} never reached sequence {min_seq} within {timeout}s"
                 )
             time.sleep(delay)
             delay = min(delay * 2, 0.002)
+
+    def fetch_synced(
+        self, topic: str, min_seq: int, timeout: float = 60.0, copy: bool = False
+    ) -> np.ndarray:
+        st = self._await_seq(topic, min_seq, timeout)
+        return self._read_latest(st, topic, copy=copy)[0]
 
     def drop(self, topic: str) -> None:
         with self._flock() as lk:
@@ -485,7 +597,9 @@ class ShmTransport(Transport):
         out = {}
         for topic in self._live_topics():
             try:
-                out[topic] = self.fetch(topic)
+                # private copies: checkpoint encoders may hold these past
+                # further publishes (deferred background encode)
+                out[topic] = self.fetch(topic, copy=True)
             except KeyError:
                 continue
         return out
@@ -813,9 +927,9 @@ class TcpTransport(Transport):
             _send_msg(sock, header, payload)
             reply, out = _recv_msg(sock)
         if "key_error" in reply:
-            raise KeyError(reply["key_error"])
+            raise TopicDropped(reply["key_error"])
         if "timeout_error" in reply:  # pragma: no cover - defensive
-            raise TimeoutError(reply["timeout_error"])
+            raise TransportTimeout(reply["timeout_error"])
         return reply, out
 
     # -- data path -------------------------------------------------------------
@@ -824,16 +938,22 @@ class TcpTransport(Transport):
         header.update(op="publish", topic=topic)
         self._call(header, payload, retry=False)
 
-    def fetch(self, topic: str) -> np.ndarray:
+    def fetch(self, topic: str, copy: bool = False) -> np.ndarray:
+        """Latest batch; a read-only ``frombuffer`` view over the receive
+        buffer by default (the buffer is private to this call, so unlike
+        shm views it can never go stale — ``copy=True`` only buys
+        writability)."""
         reply, payload = self._call({"op": "fetch", "topic": topic})
-        return _decode_batch(reply, payload)
+        return _decode_batch(reply, payload, copy=copy)
 
-    def fetch_synced(self, topic: str, min_seq: int, timeout: float = 60.0) -> np.ndarray:
+    def fetch_synced(
+        self, topic: str, min_seq: int, timeout: float = 60.0, copy: bool = False
+    ) -> np.ndarray:
         reply, payload = self._call(
             {"op": "fetch_synced", "topic": topic, "min_seq": min_seq,
              "timeout": timeout}
         )
-        return _decode_batch(reply, payload)
+        return _decode_batch(reply, payload, copy=copy)
 
     def drop(self, topic: str) -> None:
         self._call({"op": "drop", "topic": topic}, retry=False)

@@ -126,8 +126,12 @@ class _DrySegmentLite:
             if tid in self.active:
                 self.active[tid] = True
 
-    def step(self, transport: Transport, forward: List[str], targets: Optional[Dict[str, int]]) -> None:
+    def step(self, transport: Transport, forward: List[str],
+             targets: Optional[Dict[str, int]],
+             local: Optional[Dict[str, Any]] = None) -> None:
         for topic in self.boundary_topics:
+            if local is not None and topic in local:
+                continue  # produced earlier in this worker's chain
             if targets and topic in targets:
                 transport.fetch_synced(topic, targets[topic])
             else:
@@ -142,10 +146,10 @@ class _DrySegmentLite:
         np = self.np
         for tid in forward:
             if tid in self.active and tid not in self.sink_ids:
-                transport.publish(
-                    topic_for(tid),
-                    np.zeros((self.spec.batch_of[tid], 8), np.float32),
-                )
+                batch = np.zeros((self.spec.batch_of[tid], 8), np.float32)
+                if local is not None:
+                    local[topic_for(tid)] = batch
+                transport.publish(topic_for(tid), batch)
 
 
 class _JitSegmentRunner:
@@ -188,24 +192,59 @@ class _JitSegmentRunner:
     def states(self) -> Dict[str, Any]:
         return self.seg.states
 
-    def step(self, transport: Transport, forward: List[str], targets: Optional[Dict[str, int]]) -> None:
+    def step(self, transport: Transport, forward: List[str],
+             targets: Optional[Dict[str, int]],
+             local: Optional[Dict[str, Any]] = None) -> None:
         import jax
         import numpy as np
 
         seg = self.seg
-        inputs = {}
+        inputs: Dict[str, Any] = {}
+        tokens: Dict[str, int] = {}
+        # zero-copy hot path: a view-capable transport (shm) hands back
+        # read-only views into its ring plus a sequence token per topic.
+        # Fused segments donate their pre-step states, so the stale-view
+        # recompute below is unavailable to them — they take private
+        # copies up front instead.
+        fused = bool(getattr(seg.spec, "fused", False))
+        views = None if fused else getattr(transport, "fetch_view", None)
         for topic in seg.boundary_topics:
-            if targets and topic in targets:
-                inputs[topic] = transport.fetch_synced(topic, targets[topic])
+            if local is not None and topic in local:
+                # produced earlier in this worker's chain — resolved
+                # locally, no transport round-trip
+                inputs[topic] = local[topic]
+            elif views is not None:
+                target = targets.get(topic) if targets else None
+                inputs[topic], tokens[topic] = views(topic, min_seq=target)
+            elif targets and topic in targets:
+                inputs[topic] = transport.fetch_synced(
+                    topic, targets[topic], copy=fused
+                )
             else:
-                inputs[topic] = transport.fetch(topic)
+                inputs[topic] = transport.fetch(topic, copy=fused)
         new_states, outputs = seg.step_fn(seg.states, seg.active, inputs)
+        if tokens:
+            # Stale-view revalidation: on CPU, jax may alias the host views
+            # instead of copying them onto a device, so a producer lapping
+            # the ring *during* the step could have torn an input. Block
+            # until the step has fully consumed its inputs, then check each
+            # view's lap token; on staleness recompute from the pre-step
+            # states with private copies. Publishes and the state commit
+            # happen only after validation — exactly-once either way.
+            jax.block_until_ready((new_states, outputs))
+            if not all(transport.view_valid(t, s) for t, s in tokens.items()):
+                for t in tokens:
+                    inputs[t] = transport.fetch(t, copy=True)
+                new_states, outputs = seg.step_fn(seg.states, seg.active, inputs)
         seg.states = new_states
         for tid in forward:
             if tid in outputs:
                 # host transfer is the publish cost of crossing a process
                 # boundary; np.asarray also blocks on the value
-                transport.publish(topic_for(tid), np.asarray(outputs[tid]))
+                batch = np.asarray(outputs[tid])
+                if local is not None:
+                    local[topic_for(tid)] = batch
+                transport.publish(topic_for(tid), batch)
         # block on the whole segment so the measured ms is compute, not
         # async dispatch (same rationale as the in-process jit backend)
         jax.block_until_ready(new_states)
@@ -221,6 +260,7 @@ def _decode_spec(rec: Dict[str, Any]) -> SegmentSpec:
         publish=set(rec["publish"]),
         batch_of={t: int(b) for t, b in rec["batch_of"].items()},
         created_at=int(rec.get("created_at", 0)),
+        fused=bool(rec.get("fused", False)),
     )
 
 
@@ -403,13 +443,25 @@ def _worker_main(conn, worker_id: int, transport_spec: Dict[str, Any],
                     reply["spill_ms"] = (time.perf_counter() - t1) * 1e3
                 if msg.get("snap"):
                     reply["states"] = {name: _encode_states(runner)}
-            elif op == "step_many":
-                # wave-batched dispatch: step every named segment (they are
-                # mutually independent members of one wave, in launch
-                # order) under a single command round-trip — per-segment
-                # Python dispatch runs inside this process, so coordinator
-                # RPC overhead amortizes to one round-trip per worker per
-                # wave instead of one per segment
+            elif op in ("step_many", "step_chain"):
+                # wave-batched dispatch: step every named segment (for
+                # "step_many", mutually independent members of one wave, in
+                # launch order) under a single command round-trip —
+                # per-segment Python dispatch runs inside this process, so
+                # coordinator RPC overhead amortizes to one round-trip per
+                # worker per wave instead of one per segment.
+                #
+                # "step_chain" goes further: the entries span *consecutive
+                # waves* of one step, in global wave order, so a deep
+                # same-worker chain costs one round-trip per worker per
+                # STEP. Intra-chain boundary streams are resolved through
+                # the ``local`` dict (publisher stores, consumer reads) —
+                # no transport hop at all — while cross-worker reads still
+                # ride the per-topic sequence targets (a blocked
+                # fetch_synced waits on a producer in an earlier wave,
+                # which its worker reaches by the same global order, so
+                # chains never deadlock).
+                local = {} if op == "step_chain" else None
                 ms: Dict[str, float] = {}
                 snaps: Dict[str, Dict[str, Any]] = {}
                 spill_ms = 0.0
@@ -418,7 +470,8 @@ def _worker_main(conn, worker_id: int, transport_spec: Dict[str, Any],
                     name = entry["segment"]
                     runner = segments[name]
                     t0 = time.perf_counter()
-                    runner.step(transport, entry["forward"], entry.get("targets"))
+                    runner.step(transport, entry["forward"],
+                                entry.get("targets"), local=local)
                     ms[name] = (time.perf_counter() - t0) * 1e3
                     if name in spill_step:
                         spill_step[name] += 1
@@ -590,6 +643,7 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         max_workers: Optional[int] = None,
         launcher: Any = "local",
         rpc_timeout: Optional[float] = None,
+        chain_batching: bool = True,
     ):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
@@ -627,6 +681,14 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         self._conn_locks: List[threading.RLock] = []
         self._gen: List[int] = []  # incarnation counter per slot
         self._topic_target: Optional[Dict[str, int]] = None
+        # Worker-local dependency batching (concurrent mode): flatten each
+        # step's waves into one per-worker chain shipped as a single
+        # "step_chain" RPC — one round-trip per worker per step, not per
+        # wave, with intra-chain boundary streams resolved inside the
+        # worker. Disabled automatically while rpc_timeout is armed: the
+        # hang bound is calibrated for per-wave replies, and a chain reply
+        # legitimately takes a whole step.
+        self.chain_batching = bool(chain_batching)
         self._spawned = False
         # -- cluster plane state (driven by repro.cluster) --------------------
         self.rpc_timeout = rpc_timeout  # hang bound on RPC replies (None = wait)
@@ -965,6 +1027,7 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
             "publish": sorted(spec.publish),
             "batch_of": {t: int(b) for t, b in spec.batch_of.items()},
             "created_at": int(spec.created_at),
+            "fused": bool(spec.fused),
         }
 
     def _deploy_rpc(self, worker: int, spec: SegmentSpec,
@@ -1105,7 +1168,9 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         seg._states_cache = None
         return float(reply["ms"])  # worker-measured compute, not RPC wait
 
-    def _step_wave_on_worker(self, worker: int, names: List[str]) -> Dict[str, float]:
+    def _step_wave_on_worker(
+        self, worker: int, names: List[str], op: str = "step_many"
+    ) -> Dict[str, float]:
         seg_ms: Dict[str, float] = {}
         todo: List[str] = []
         for n in names:
@@ -1118,7 +1183,7 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         entries = [self._step_entry(self.segments[n]) for n in todo]
         reply = self._call(
             worker,
-            {"op": "step_many", "segments": entries, "snap": self._snap_now()},
+            {"op": op, "segments": entries, "snap": self._snap_now()},
         )
         self._harvest_snaps(reply)
         for n in todo:
@@ -1128,11 +1193,56 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         seg_ms.update({n: float(ms) for n, ms in reply["ms"].items()})
         return seg_ms
 
+    def _use_chains(self) -> bool:
+        # step_chain replies arrive once a worker's WHOLE chain is done, so
+        # a per-wave-calibrated hang bound would misfire — fall back to
+        # per-wave step_many while the supervisor's rpc_timeout is armed.
+        return self.chain_batching and self.rpc_timeout is None
+
+    def _worker_chains(self) -> Dict[int, List[str]]:
+        """Each step's waves flattened into one per-worker chain, in global
+        wave order (see :func:`~repro.runtime.scheduler.compute_chains`)."""
+        from .scheduler import compute_chains
+
+        order = {n: s.spec.created_at for n, s in self.segments.items()}
+        chains, _ = compute_chains(self.seg_deps, dict(self.device_of), order=order)
+        return chains
+
+    def _dispatch_chunks(
+        self, by_worker: Dict[int, List[str]], op: str
+    ) -> Dict[str, float]:
+        """Dispatch one command per worker concurrently, with in-place
+        recovery: a dead worker fails its whole chunk at once; with
+        self-healing on, recover it and re-dispatch that chunk — the rest
+        of the step keeps running meanwhile (deterministic re-steps and
+        the spill skip counters keep sink counts exactly-once)."""
+        from concurrent.futures import FIRST_COMPLETED, wait
+
+        seg_ms: Dict[str, float] = {}
+        futures = {
+            self._pool.submit(self._step_wave_on_worker, w, names, op):
+            (w, names, 0)
+            for w, names in sorted(by_worker.items())
+        }
+        while futures:
+            done, _ = wait(futures, return_when=FIRST_COMPLETED)
+            for fut in done:
+                w, names, tries = futures.pop(fut)
+                try:
+                    seg_ms.update(fut.result())
+                except WorkerError as e:
+                    if tries >= 2 or not self._step_recover(names[0], e):
+                        raise
+                    futures[self._pool.submit(
+                        self._step_wave_on_worker, w, names, op
+                    )] = (w, names, tries + 1)
+        return seg_ms
+
     def _step_segments_concurrent(self) -> Dict[str, float]:
-        """Wave-batched concurrent dispatch.
+        """Wave- or chain-batched concurrent dispatch.
 
         The generic ready-queue issues one RPC per segment; across a pipe
-        that round-trip is the dominant cost for small segments. Here each
+        that round-trip is the dominant cost for small segments. Each
         dependency wave becomes ONE ``step_many`` command per worker
         (segments within a wave are mutually independent, so the worker
         may step its share back-to-back), dispatched to all workers
@@ -1140,6 +1250,13 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         overhead is waves × workers round-trips per step instead of one
         per segment. Cross-worker boundary reads stay guarded by the
         per-topic sequence targets exactly as in per-segment dispatch.
+
+        With ``chain_batching`` on (and no rpc_timeout armed) the waves
+        are flattened further into one ``step_chain`` command per worker
+        per STEP: the worker steps its segments in global wave order and
+        resolves intra-chain boundary streams locally, so a deep
+        same-worker chain pays one round-trip total and zero transport
+        hops between its own segments.
         """
         if not self.segments:
             return {}
@@ -1151,33 +1268,14 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
             )
         self._begin_concurrent_step()
         try:
-            from concurrent.futures import FIRST_COMPLETED, wait
-
+            if self._use_chains():
+                return self._dispatch_chunks(self._worker_chains(), "step_chain")
             seg_ms: Dict[str, float] = {}
             for wave in self.segment_waves():
                 by_worker: Dict[int, List[str]] = {}
                 for name in wave:
                     by_worker.setdefault(self.device_of[name], []).append(name)
-                # a dead worker fails its whole wave chunk at once; with
-                # self-healing on, recover it and re-dispatch that chunk —
-                # the rest of the wave keeps running meanwhile
-                futures = {
-                    self._pool.submit(self._step_wave_on_worker, w, names):
-                    (w, names, 0)
-                    for w, names in sorted(by_worker.items())
-                }
-                while futures:
-                    done, _ = wait(futures, return_when=FIRST_COMPLETED)
-                    for fut in done:
-                        w, names, tries = futures.pop(fut)
-                        try:
-                            seg_ms.update(fut.result())
-                        except WorkerError as e:
-                            if tries >= 2 or not self._step_recover(names[0], e):
-                                raise
-                            futures[self._pool.submit(
-                                self._step_wave_on_worker, w, names
-                            )] = (w, names, tries + 1)
+                seg_ms.update(self._dispatch_chunks(by_worker, "step_many"))
             return seg_ms
         finally:
             self._end_concurrent_step()

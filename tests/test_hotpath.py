@@ -1,0 +1,289 @@
+"""Hot-path tests: segment fusion, worker chain batching, buffer donation.
+
+Four layers:
+  * pure planning — :func:`repro.runtime.scheduler.compute_chains` (worker-
+    local dependency batching) and :func:`repro.core.defrag.plan_fusion`
+    (maximal private-pipe segment chains);
+  * donation — fused segments compile with XLA buffer donation and the
+    executable's memory analysis proves the aliasing holds (and that
+    unfused segments don't alias);
+  * semantics — fused and unfused deployments produce bit-identical sink
+    digests across transports, step modes and backends, including the
+    worker ``step_chain`` batching on/off;
+  * guards — background checkpointing disables donation, fuse() is a
+    no-op when there is nothing linear to fuse.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.defrag import plan_fusion
+from repro.runtime.scheduler import compute_chains
+
+from helpers import chain_df, fig1
+
+
+# -- planning ------------------------------------------------------------------
+
+
+class TestComputeChains:
+    def test_chains_follow_global_wave_order(self):
+        deps = {"a": set(), "b": {"a"}, "c": {"a"}, "d": {"b", "c"}}
+        order = {"a": 0, "b": 1, "c": 2, "d": 3}
+        chains, wave_of = compute_chains(
+            deps, {"a": 0, "b": 0, "c": 1, "d": 0}, order=order
+        )
+        assert chains == {0: ["a", "b", "d"], 1: ["c"]}
+        assert wave_of == {"a": 0, "b": 1, "c": 1, "d": 2}
+
+    def test_single_worker_gets_one_chain(self):
+        deps = {"a": set(), "b": {"a"}, "c": {"b"}}
+        chains, _ = compute_chains(deps, {"a": 7, "b": 7, "c": 7})
+        assert chains == {7: ["a", "b", "c"]}
+
+
+class TestPlanFusion:
+    def test_linear_chain_found(self):
+        deps = {"s1": set(), "s2": {"s1"}, "s3": {"s2"}}
+        plan = plan_fusion(deps, {"s1": "run1", "s2": "run2", "s3": "run3"})
+        assert [c.members for c in plan.chains] == [["s1", "s2", "s3"]]
+        # labeled with the *newest* member's running-DAG name (merges
+        # rename the running DAG as it grows)
+        assert plan.chains[0].dag_name == "run3"
+        assert plan.total_segments == 3
+
+    def test_fan_out_blocks_fusion_but_downstream_chain_survives(self):
+        # a feeds b AND c → a joins no chain; b→d is still a private pipe
+        deps = {"a": set(), "b": {"a"}, "c": {"a"}, "d": {"b"}}
+        plan = plan_fusion(deps, {n: "r" for n in deps})
+        assert [c.members for c in plan.chains] == [["b", "d"]]
+
+    def test_fan_in_blocks_fusion(self):
+        deps = {"a": set(), "b": set(), "c": {"a", "b"}}
+        assert plan_fusion(deps, {n: "r" for n in deps}).chains == []
+
+    def test_min_length_respected(self):
+        deps = {"a": set(), "b": {"a"}}
+        assert plan_fusion(deps, {n: "r" for n in deps}, min_length=3).chains == []
+        plan = plan_fusion(deps, {n: "r" for n in deps}, min_length=2)
+        assert [c.members for c in plan.chains] == [["a", "b"]]
+
+
+# -- donation ------------------------------------------------------------------
+
+
+class TestDonation:
+    def test_fused_segment_aliases_buffers_unfused_does_not(self):
+        from repro.runtime.segment import donation_report
+        from repro.runtime.system import StreamSystem
+
+        A, B, C, _ = fig1()
+        system = StreamSystem(strategy="signature", backend="inprocess")
+        for df in (A, B, C):
+            system.submit(df.copy())
+        system.run(2)
+        unfused = list(system.backend.segments.values())[0]
+        rep0 = donation_report(unfused, _boundary_inputs(system, unfused))
+        assert not rep0["fused"]
+        assert not rep0["donation_holds"]
+        assert rep0["alias_size_in_bytes"] == 0
+
+        fused = system.fuse()
+        assert len(fused) == 1
+        (name,) = fused
+        seg = system.backend.segments[name]
+        assert seg.spec.fused
+        rep1 = donation_report(seg, _boundary_inputs(system, seg))
+        assert rep1["donation_holds"]
+        assert rep1["alias_size_in_bytes"] > 0
+        # donated states mean the step allocates less than argument+output
+        assert (
+            rep1["total_allocation_size"]
+            < rep1["argument_size_in_bytes"]
+            + rep1["output_size_in_bytes"]
+            + rep1["temp_size_in_bytes"]
+        )
+        system.close()
+
+    def test_background_checkpointing_disables_donation(self, tmp_path):
+        from repro.runtime.system import StreamSystem
+
+        A, B, _, _ = fig1()
+        system = StreamSystem(
+            strategy="signature",
+            backend="inprocess",
+            checkpoint_dir=str(tmp_path),
+            checkpoint_every=1,
+            checkpoint_background=True,
+        )
+        system.submit(A.copy())
+        system.submit(B.copy())
+        system.run(2)
+        fused = system.fuse()
+        assert fused  # the chain still fuses into one segment...
+        for name in fused:
+            # ...but without donation: the deferred checkpoint encoder
+            # holds step-k state references a donated step would invalidate
+            assert not system.backend.segments[name].spec.fused
+        system.run(2)
+        system.quiesce()
+        system.close()
+
+
+def _boundary_inputs(system, seg):
+    return {t: np.asarray(system.backend.transport.fetch(t)) for t in seg.boundary_topics}
+
+
+# -- semantics: fused == unfused, chained == unchained -------------------------
+
+
+CHURN = [("add", "A"), ("add", "B"), ("add", "C"), ("remove", "B"), ("add", "D")]
+
+
+def _run_churn(transport, step_mode, fuse, **kw):
+    from repro.runtime.system import StreamSystem
+
+    dags = {d.name: d for d in fig1()}
+    system = StreamSystem(
+        strategy="signature",
+        transport=transport,
+        step_mode=step_mode,
+        **kw,
+    )
+    for op, name in CHURN:
+        if op == "add":
+            system.submit(dags[name].copy())
+        else:
+            system.remove(name)
+        system.step()
+    if fuse:
+        system.fuse()
+    system.run(3)
+    digests = {n: system.sink_digests(n) for n in sorted(system.manager.submitted)}
+    system.close()
+    return digests
+
+
+class TestFusedDigestIdentity:
+    @pytest.mark.parametrize("transport", ["inproc", "shm", "tcp"])
+    @pytest.mark.parametrize("step_mode", ["sync", "concurrent"])
+    def test_fig1_churn_all_transports_both_modes(self, transport, step_mode):
+        ref = _run_churn(transport, step_mode, fuse=False, backend="inprocess")
+        got = _run_churn(transport, step_mode, fuse=True, backend="inprocess")
+        assert got == ref  # counts AND checksums — bit-identical sinks
+
+    def test_kernel_backed_op_fuses_bit_identically(self):
+        from repro.runtime.system import StreamSystem
+
+        stages = [("parse", {}), ("rmsnorm", {}), ("kalman", {"q": 0.1})]
+        A = chain_df("KA", "urban", stages)
+        B = chain_df("KB", "urban", stages + [("rmsnorm", {"eps": 1e-5})])
+
+        def run(fuse):
+            system = StreamSystem(strategy="signature", backend="inprocess")
+            system.submit(A.copy())
+            system.submit(B.copy())
+            system.run(2)
+            if fuse:
+                fused = system.fuse()
+                assert fused  # KB's suffix chain fused onto KA's segment
+            system.run(3)
+            out = {n: system.sink_digests(n) for n in ("KA", "KB")}
+            system.close()
+            return out
+
+        assert run(True) == run(False)
+
+    def test_fuse_noop_when_nothing_linear(self):
+        from repro.runtime.system import StreamSystem
+
+        dags = {d.name: d for d in fig1()}
+        system = StreamSystem(strategy="signature", backend="inprocess")
+        system.submit(dags["A"].copy())
+        system.submit(dags["D"].copy())  # disjoint DAGs — no private pipes
+        system.run(1)
+        assert system.fuse() == {}
+        fused = None
+        system.submit(dags["B"].copy())
+        system.step()
+        fused = system.fuse()
+        assert len(fused) == 1
+        assert system.fuse() == {}  # idempotent: the chain is gone
+        system.close()
+
+
+@pytest.mark.slow
+class TestOpmwTraceIdentity:
+    """Truncated OPMW random-walk trace: fused == unfused in both step
+    modes (the full rw1 trace runs in benchmarks/hotpath_bench.py)."""
+
+    @pytest.mark.parametrize("step_mode", ["sync", "concurrent"])
+    def test_rw_trace_fused_identity(self, step_mode):
+        from repro.api import ReuseSession
+        from repro.workloads import opmw_workload, replay, rw_trace
+
+        dags = opmw_workload()[:8]
+        events = rw_trace(dags, seed=11, steps=10)
+
+        def run(fuse):
+            session = ReuseSession(
+                execute=True, backend="inprocess", step_mode=step_mode
+            )
+            for i, _ in enumerate(replay(session, dags, events)):
+                session.step()
+                if fuse and i % 5 == 4:
+                    session.fuse()
+            session.run(2)
+            out = {
+                n: session.sink_digests(n)
+                for n in sorted(session.manager.submitted)
+            }
+            session.close()
+            return out
+
+        assert run(True) == run(False)
+
+
+@pytest.mark.slow
+class TestChainBatching:
+    def test_chain_on_off_digests_identical(self):
+        ref = _run_churn(
+            "shm", "concurrent", fuse=False,
+            backend="multiproc", workers=2,
+            backend_options={"chain_batching": False},
+        )
+        got = _run_churn(
+            "shm", "concurrent", fuse=False,
+            backend="multiproc", workers=2,
+            backend_options={"chain_batching": True},
+        )
+        assert got == ref
+
+    def test_chain_batching_composes_with_fusion(self):
+        ref = _run_churn(
+            "shm", "concurrent", fuse=False,
+            backend="multiproc", workers=2,
+            backend_options={"chain_batching": False},
+        )
+        got = _run_churn(
+            "shm", "concurrent", fuse=True,
+            backend="multiproc", workers=2,
+        )
+        assert got == ref
+
+    def test_chains_disabled_under_rpc_timeout(self):
+        from repro.runtime.system import StreamSystem
+
+        system = StreamSystem(
+            strategy="signature", backend="multiproc", workers=1,
+            step_mode="concurrent",
+        )
+        be = system.backend
+        assert be._use_chains()
+        be.rpc_timeout = 5.0  # supervised: per-wave RPCs keep hang detection
+        assert not be._use_chains()
+        be.rpc_timeout = None
+        be.chain_batching = False
+        assert not be._use_chains()
+        system.close()

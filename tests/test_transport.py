@@ -26,8 +26,10 @@ import pytest
 from repro.runtime.transport import (
     ShmTransport,
     TcpTransport,
+    TopicDropped,
     Transport,
     TransportError,
+    TransportTimeout,
     available_transports,
     connect_transport,
     register_transport,
@@ -175,6 +177,164 @@ class TestTransportConformance:
             transport.publish("stream/s", _batch(float(i)))
         assert np.asarray(transport.fetch("stream/s"))[0, 0] == 11.0
         assert transport.seq("stream/s") == 12
+
+
+class TestErrorTaxonomy:
+    """Typed transport errors, uniform across inproc / shm / tcp.
+
+    ``TopicDropped`` doubles as ``KeyError`` and ``TransportTimeout`` as
+    ``TimeoutError`` so pre-taxonomy handlers keep working.
+    """
+
+    def test_hierarchy(self):
+        assert issubclass(TopicDropped, TransportError)
+        assert issubclass(TopicDropped, KeyError)
+        assert issubclass(TransportTimeout, TransportError)
+        assert issubclass(TransportTimeout, TimeoutError)
+        assert issubclass(TransportError, RuntimeError)
+
+    def test_topic_dropped_message_not_repr_quoted(self):
+        # KeyError.__str__ reprs its arg; the taxonomy must not — the
+        # message crosses the tcp wire as text and round-trips verbatim.
+        msg = "topic 'stream/x' dropped"
+        assert str(TopicDropped(msg)) == msg
+
+    def test_fetch_unknown_topic_typed(self, transport):
+        with pytest.raises(TopicDropped):
+            transport.fetch("stream/nope")
+
+    def test_fetch_synced_timeout_typed(self, transport):
+        transport.publish("stream/s", _batch(1.0))
+        with pytest.raises(TransportTimeout):
+            transport.fetch_synced("stream/s", 99, timeout=0.05)
+
+    def test_drop_wakes_blocked_fetch_with_typed_error(self, transport):
+        transport.publish("stream/s", _batch(1.0))
+        err = []
+
+        def consumer():
+            try:
+                transport.fetch_synced("stream/s", 5, timeout=10)
+            except TopicDropped:
+                err.append("typed")
+
+        th = threading.Thread(target=consumer)
+        th.start()
+        time.sleep(0.05)
+        transport.drop("stream/s")
+        th.join(5)
+        assert err == ["typed"]
+
+
+class TestZeroCopyViews:
+    @pytest.mark.parametrize("name", SPANNING)
+    def test_fetch_is_readonly_by_default_copy_is_writable(self, name):
+        t = resolve_transport(name)
+        try:
+            b = np.arange(32, dtype=np.float32).reshape(4, 8)
+            t.publish("stream/v", b)
+            view = t.fetch("stream/v")
+            assert not view.flags.writeable
+            with pytest.raises(ValueError):
+                view[0, 0] = 9.0
+            assert np.array_equal(view, b)
+            copy = t.fetch("stream/v", copy=True)
+            assert copy.flags.writeable
+            copy[0, 0] = 9.0  # private — must not corrupt the transport
+            assert np.asarray(t.fetch("stream/v"))[0, 0] == 0.0
+        finally:
+            t.close()
+
+    def test_shm_view_lifetime_and_revalidation(self):
+        t = ShmTransport()
+        try:
+            t.publish("stream/v", _batch(1.0))
+            view, seq = t.fetch_view("stream/v")
+            assert seq == 1 and not view.flags.writeable
+            assert np.array_equal(view, _batch(1.0))
+            # valid while the writer stays within nslots-2 further publishes
+            t.publish("stream/v", _batch(2.0))
+            t.publish("stream/v", _batch(3.0))
+            assert t.view_valid("stream/v", seq)
+            assert np.array_equal(view, _batch(1.0))  # slot still untouched
+            t.publish("stream/v", _batch(4.0))  # writer reaches seq+nslots-1
+            assert not t.view_valid("stream/v", seq)
+            # the escape hatch: a private copy is always safe
+            fresh = t.fetch("stream/v", copy=True)
+            assert fresh.flags.writeable and fresh[0, 0] == 4.0
+        finally:
+            t.close()
+
+    def test_view_valid_unknown_topic_is_false(self):
+        t = ShmTransport()
+        try:
+            assert not t.view_valid("stream/nope", 1)
+        finally:
+            t.close()
+
+    def test_fetch_view_synced_waits_for_min_seq(self):
+        t = ShmTransport()
+        try:
+            t.publish("stream/v", _batch(1.0))
+            t.publish("stream/v", _batch(2.0))
+            view, seq = t.fetch_view("stream/v", min_seq=2)
+            assert seq == 2 and view[0, 0] == 2.0
+            with pytest.raises(TransportTimeout):
+                t.fetch_view("stream/v", min_seq=5, timeout=0.05)
+        finally:
+            t.close()
+
+    def test_inproc_copy_escape_hatch(self):
+        t = resolve_transport("inproc")
+        b = _batch(3.0)
+        t.publish("stream/v", b)
+        copy = t.fetch("stream/v", copy=True)
+        copy[0, 0] = -1.0
+        assert np.asarray(t.fetch("stream/v"))[0, 0] == 3.0
+
+
+def _stress_writer(spec, topic, rounds, batch):
+    t = connect_transport(spec)
+    for i in range(rounds):
+        t.publish(topic, np.full((batch, 8), float(i + 1), dtype=np.float32))
+    t.close()
+
+
+class TestSeqlockStress:
+    def test_reader_never_observes_torn_batch(self):
+        """A fast writer laps the 4-slot ring while the reader fetches.
+
+        Every publish is a uniform fill, so any torn read (slot payload
+        overwritten mid-copy without the seqlock catching it) shows up as
+        a non-uniform batch. The jittered-backoff retry in ``_read_latest``
+        must keep this deterministic: no tearing, no spurious lap errors.
+        """
+        rounds, batch = 1500, 64
+        t = ShmTransport()
+        try:
+            t.publish("stream/hot", np.full((batch, 8), 0.0, np.float32))
+            ctx = mp.get_context("spawn")
+            proc = ctx.Process(
+                target=_stress_writer,
+                args=(t.connect_info(), "stream/hot", rounds, batch),
+            )
+            proc.start()
+            last = 0.0
+            try:
+                while proc.is_alive() or last < float(rounds):
+                    got = t.fetch("stream/hot", copy=True)
+                    vals = np.unique(got)
+                    assert vals.size == 1, f"torn batch: {vals[:8]}"
+                    assert vals[0] >= last  # monotone: never a stale slot
+                    last = float(vals[0])
+                    if last >= float(rounds):
+                        break
+            finally:
+                proc.join(60)
+            assert proc.exitcode == 0
+            assert last == float(rounds)
+        finally:
+            t.close()
 
 
 class TestShmSpecifics:
