@@ -8,6 +8,7 @@ console summary below is the EXPERIMENTS.md source of truth.
   serving    serving_reuse     paper technique over multi-tenant LM pipelines
   roofline   roofline_bench    40-cell dry-run aggregation + hillclimb picks
   hotpath    hotpath_bench     zero-copy fetch / chain batching / segment fusion
+  optimizer  fusion_optimizer_bench  wave-aware fusion planner / compile cache
 """
 from __future__ import annotations
 
@@ -20,6 +21,7 @@ def main() -> int:
 
     from benchmarks import (
         defrag_benefit,
+        fusion_optimizer_bench,
         hotpath_bench,
         merge_latency,
         roofline_bench,
@@ -42,8 +44,10 @@ def main() -> int:
     roofline_bench.main()
     print("\n=== hot path: zero-copy fetch / chain batching / fusion ===")
     hotpath_rc = hotpath_bench.main([])
+    print("\n=== fusion optimizer: wave-aware planner / compile cache ===")
+    optimizer_rc = fusion_optimizer_bench.main([])
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
-    return hotpath_rc
+    return hotpath_rc or optimizer_rc
 
 
 if __name__ == "__main__":

@@ -122,6 +122,12 @@ class SessionStats:
     segments: int = 0
     steps_run: int = 0
     backend: Any = None  # ExecutionBackend registry name
+    # compiled-segment reuse cache counters (collaborative reuse at the
+    # XLA-executable level; zeros for backends that never compile)
+    compile_cache_hits: int = 0
+    compile_cache_misses: int = 0
+    compile_cache_evictions: int = 0
+    compile_cache_entries: int = 0
 
     @property
     def task_reduction(self) -> float:

@@ -379,15 +379,27 @@ class ReuseSession:
         self._emit("defrag", event)
         return event
 
-    def fuse(self, min_length: int = 2) -> Dict[str, List[str]]:
+    def fuse(self, min_length: int = 2, overhead_ms: float = 0.25) -> Dict[str, List[str]]:
         """Fuse linear same-DAG segment chains into single compiled segments.
 
         The depth-only sibling of :meth:`defragment`: private segment-to-
         segment pipes collapse into one donated-buffer jitted step, while
-        parallel waves and paused residue stay untouched. Returns
-        ``{fused segment name: [member segment names replaced]}``.
+        parallel waves and paused residue stay untouched. Candidate chains
+        are scored against the dry-run latency model first (wave-aware
+        planning — see :attr:`fusion_report` for every accept/reject), and
+        accepted cross-worker chains are migrated to one worker before
+        recompiling. Returns ``{fused segment name: [member names
+        replaced]}``.
         """
-        return self._require_system("fuse").fuse(min_length=min_length)
+        return self._require_system("fuse").fuse(
+            min_length=min_length, overhead_ms=overhead_ms
+        )
+
+    @property
+    def fusion_report(self):
+        """The last :meth:`fuse` call's planner verdicts
+        (:class:`repro.core.defrag.FusionReport`), or ``None``."""
+        return self._system.fusion_report if self._system is not None else None
 
     # -- execution -------------------------------------------------------------
     def step(self):
@@ -470,10 +482,12 @@ class ReuseSession:
         mgr = self.manager
         hist = Counter(mgr.reuse_counts().values()) if mgr.running else Counter()
         deployed = segments = steps = 0
+        cache = {"hits": 0, "misses": 0, "evictions": 0, "entries": 0}
         if self._system is not None:
             deployed = self._system.deployed_task_count
             segments = len(self._system.backend.segments)
             steps = self._system.backend.step_count
+            cache = self._system.backend.compile_cache_stats()
         return SessionStats(
             strategy=self.strategy,
             submitted_dataflows=len(mgr.submitted),
@@ -485,6 +499,10 @@ class ReuseSession:
             segments=segments,
             steps_run=steps,
             backend=self.backend_name,
+            compile_cache_hits=cache.get("hits", 0),
+            compile_cache_misses=cache.get("misses", 0),
+            compile_cache_evictions=cache.get("evictions", 0),
+            compile_cache_entries=cache.get("entries", 0),
         )
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic

@@ -1,0 +1,116 @@
+"""Pallas TPU multi-op fused kernels for planner-fused segment chains.
+
+When the fusion planner collapses a straight-line run of kernel-backed
+stream operators into one segment, the per-op XLA graph still streams
+each intermediate through HBM. These kernels collapse the whole run into
+one VMEM-resident pass:
+
+  * :func:`map_chain` — a chain of per-channel affine decode stages
+    (RIoTBench ``senml_parse``) applied back to back: one read, N
+    multiply-adds in registers, one write.
+  * :func:`affine_rmsnorm` — the same affine chain feeding an RMS-norm
+    tail (``senml_parse* → rmsnorm``): the norm consumes the affine
+    result straight out of VMEM.
+
+The stages are applied **sequentially**, never algebraically collapsed
+into one ⟨scale, offset⟩ pair — float rounding differs between
+``(x·s₁+o₁)·s₂+o₂`` and ``x·(s₁s₂)+…``, and the digest-identity contract
+(fused ≡ unfused, bitwise) requires replaying exactly the op sequence the
+unfused segments execute. ``stages`` is a static tuple of ``(scale,
+offset)`` pairs, so each distinct chain shape compiles once.
+
+Grid: (rows / block_rows,) — embarrassingly parallel over row tiles,
+mirroring :mod:`repro.kernels.rmsnorm`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Stages = Tuple[Tuple[float, float], ...]
+
+
+def _apply_stages(x: jnp.ndarray, stages: Stages) -> jnp.ndarray:
+    for scale, offset in stages:
+        x = x * jnp.float32(scale) + jnp.float32(offset)
+    return x
+
+
+def _map_chain_kernel(x_ref, o_ref, *, stages: Stages):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = _apply_stages(x, stages).astype(o_ref.dtype)
+
+
+def _affine_rmsnorm_kernel(x_ref, scale_ref, o_ref, *, stages: Stages, eps: float):
+    x = _apply_stages(x_ref[...].astype(jnp.float32), stages)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * scale_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _tile(x: jnp.ndarray, block_rows: int):
+    d = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    xr = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    return xr, rows, br, d, pad
+
+
+@functools.partial(jax.jit, static_argnames=("stages", "block_rows", "interpret"))
+def map_chain(
+    x: jnp.ndarray,  # (..., D)
+    *,
+    stages: Stages,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    orig_shape = x.shape
+    xr, rows, br, d, pad = _tile(x, block_rows)
+    out = pl.pallas_call(
+        functools.partial(_map_chain_kernel, stages=stages),
+        grid=(xr.shape[0] // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=interpret,
+    )(xr)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("stages", "eps", "block_rows", "interpret"))
+def affine_rmsnorm(
+    x: jnp.ndarray,  # (..., D)
+    scale: jnp.ndarray,  # (D,)
+    *,
+    stages: Stages,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    orig_shape = x.shape
+    xr, rows, br, d, pad = _tile(x, block_rows)
+    out = pl.pallas_call(
+        functools.partial(_affine_rmsnorm_kernel, stages=stages, eps=eps),
+        grid=(xr.shape[0] // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=interpret,
+    )(xr, scale)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from . import ref
 from .decode_attention import decode_attention as _decode_pallas
 from .flash_attention import flash_attention as _flash_pallas
+from .fused import affine_rmsnorm as _affine_rmsnorm_pallas
+from .fused import map_chain as _map_chain_pallas
 from .rmsnorm import rmsnorm as _rmsnorm_pallas
 from .rmsnorm import rmsnorm_residual as _rmsnorm_res_pallas
 from .ssd import ssd_scan as _ssd_pallas
@@ -73,6 +75,24 @@ def rmsnorm(x, scale, eps: float = 1e-6):
     if be == "ref":
         return ref.rmsnorm_ref(x, scale, eps)
     return _rmsnorm_pallas(x, scale, eps=eps, interpret=(be == "interpret"))
+
+
+def map_chain(x, *, stages):
+    """Sequential per-channel affine stages — the fused senml_parse chain."""
+    be = backend()
+    if be == "ref":
+        return ref.map_chain_ref(x, stages)
+    return _map_chain_pallas(x, stages=tuple(stages), interpret=(be == "interpret"))
+
+
+def affine_rmsnorm(x, scale, *, stages, eps: float = 1e-6):
+    """Affine decode chain feeding an RMS-norm tail, one fused pass."""
+    be = backend()
+    if be == "ref":
+        return ref.affine_rmsnorm_ref(x, scale, stages, eps)
+    return _affine_rmsnorm_pallas(
+        x, scale, stages=tuple(stages), eps=eps, interpret=(be == "interpret")
+    )
 
 
 def rmsnorm_residual(x, residual, scale, eps: float = 1e-6):

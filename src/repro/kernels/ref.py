@@ -43,6 +43,22 @@ def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.nd
     return rms_norm(x, scale, eps=eps)
 
 
+def _apply_stages_ref(x: jnp.ndarray, stages) -> jnp.ndarray:
+    # sequential, never algebraically collapsed — bitwise identity with the
+    # unfused op-by-op execution is the contract (see kernels/fused.py)
+    for scale, offset in stages:
+        x = x * scale + offset
+    return x
+
+
+def map_chain_ref(x: jnp.ndarray, stages) -> jnp.ndarray:
+    return _apply_stages_ref(x, stages)
+
+
+def affine_rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, stages, eps: float = 1e-6):
+    return rms_norm(_apply_stages_ref(x, stages), scale, eps=eps)
+
+
 def rmsnorm_residual_ref(x, residual, scale, eps: float = 1e-6):
     added = x + residual
     return rms_norm(added, scale, eps=eps), added

@@ -21,11 +21,68 @@ import jax
 import jax.numpy as jnp
 
 from .base import EVENT_WIDTH, Operator, register, register_fallback, stateless
-from .costs import RIOT_COSTS, pi_cost
+from .costs import RIOT_COSTS, parse_config, pi_cost
 
 VAL = slice(1, 6)  # observation channels
 FLAG = 6
 KEY = 7
+
+# Straight-line runs of these types can be collapsed onto one multi-op
+# pallas kernel when a fused segment is compiled (see
+# runtime/segment.py:_peephole_fused_kernels): FUSABLE_ELEMENTWISE types
+# may appear anywhere in the run, FUSED_TAILS terminate it.
+FUSABLE_ELEMENTWISE = ("senml_parse",)
+FUSED_TAILS = ("rmsnorm", "senml_parse")
+
+
+def make_fused_operator(tasks, batch: int) -> Any:
+    """One operator computing a ``senml_parse* → (rmsnorm|senml_parse)`` run.
+
+    ``tasks`` is the run in head→tail dataflow order. The returned
+    operator replaces the *tail* task inside a fused segment and consumes
+    the head's input; it dispatches through the multi-op pallas kernels
+    (:func:`repro.kernels.ops.affine_rmsnorm` / ``map_chain``) with the
+    stages replayed sequentially, so outputs are bit-identical to the
+    unfused op-by-op execution on every backend. State structure and cost
+    weight are the tail's (both tails are stateless), keeping checkpoint
+    layout and Fig. 3 cost accounting unchanged. Returns ``None`` for
+    runs this factory does not understand.
+    """
+    if len(tasks) < 2:
+        return None
+    *heads, tail = tasks
+    if any(t.type not in FUSABLE_ELEMENTWISE for t in heads):
+        return None
+    if tail.type not in FUSED_TAILS:
+        return None
+
+    def _stage(cfg: Dict[str, Any]):
+        return (float(cfg.get("scale", 1.0)), float(cfg.get("offset", 0.0)))
+
+    stages = tuple(_stage(parse_config(t.config)) for t in heads)
+    tail_cfg = parse_config(tail.config)
+
+    if tail.type == "rmsnorm":
+        eps = float(tail_cfg.get("eps", 1e-6))
+        gain = float(tail_cfg.get("gain", 1.0))
+
+        def fn(x: jnp.ndarray) -> jnp.ndarray:
+            from repro.kernels import ops as kernel_ops
+
+            scale = jnp.full((5,), gain, dtype=x.dtype)
+            vals = kernel_ops.affine_rmsnorm(x[:, VAL], scale, stages=stages, eps=eps)
+            return x.at[:, VAL].set(vals)
+
+    else:  # senml_parse tail — its own affine is just the last stage
+        all_stages = stages + (_stage(tail_cfg),)
+
+        def fn(x: jnp.ndarray) -> jnp.ndarray:
+            from repro.kernels import ops as kernel_ops
+
+            vals = kernel_ops.map_chain(x[:, VAL], stages=all_stages)
+            return x.at[:, VAL].set(vals)
+
+    return stateless(tail.type, fn, cost=RIOT_COSTS[tail.type])
 
 
 def _hash_channel(x: jnp.ndarray, salt: int) -> jnp.ndarray:

@@ -683,6 +683,20 @@ class ExecutionBackend:
     def _restore_extra(self, extra: Dict[str, Any]) -> None:
         """Consume :meth:`_dump_extra` output; unknown keys must be ignored."""
 
+    # -- compiled-segment reuse cache ---------------------------------------------
+    def compile_cache_stats(self) -> Dict[str, int]:
+        """Hit/miss/evict counters of the compiled-segment reuse cache.
+
+        Backends that compile in-process expose their coordinator cache
+        (``self.compile_cache``); the multiproc backend overrides this to
+        aggregate its workers' process-local caches. Backends that never
+        compile (dryrun) report zeros.
+        """
+        cache = getattr(self, "compile_cache", None)
+        if cache is None:
+            return {"hits": 0, "misses": 0, "evictions": 0, "entries": 0}
+        return cache.stats()
+
     # -- dry-run latency calibration feed ----------------------------------------
     def latency_samples(self) -> List[Tuple[Dict[str, float], float]]:
         """⟨per-task-type work units, measured segment ms⟩ calibration pairs.

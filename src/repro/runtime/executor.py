@@ -76,6 +76,12 @@ class InProcessJitBackend(ExecutionBackend):
             transport, **(transport_options or {})
         )
         self.broker = self.transport  # backwards-compatible alias
+        # Compiled-segment reuse: structurally identical segments share one
+        # canonical jitted executable instead of recompiling (coordinator-
+        # side — this backend compiles in-process).
+        from .compile_cache import CompileCache
+
+        self.compile_cache = CompileCache()
         # Per-topic sequence targets for the concurrent step in flight
         # (None outside one): each forwarding task publishes exactly once
         # per step, so a boundary read of this step must observe sequence
@@ -89,7 +95,9 @@ class InProcessJitBackend(ExecutionBackend):
         dataflow: Dataflow,
         init_states: Optional[Dict[str, Any]],
     ) -> Segment:
-        return build_segment(spec, dataflow, init_states=init_states)
+        return build_segment(
+            spec, dataflow, init_states=init_states, cache=self.compile_cache
+        )
 
     def _drop_streams(self, seg: Segment) -> None:
         for tid in seg.spec.task_ids:

@@ -503,6 +503,10 @@ class PlacedBackendMixin:
             raise ValueError(f"ewma_decay must be in [0, 1), got {ewma_decay}")
         self.ewma_decay = ewma_decay
         self._ewma_residual: Dict[int, float] = {}
+        # one-shot placement pins: {segment name -> slot}. The fusion
+        # optimizer migrates a chain's members to one slot and pins the
+        # fused replacement there, overriding the policy for that deploy.
+        self._pin_slot: Dict[str, int] = {}
         # pass hints only to policies that declare the keyword, so custom
         # pre-hints PlacementPolicy subclasses keep working unchanged
         self._policy_takes_hints = (
@@ -547,6 +551,10 @@ class PlacedBackendMixin:
 
     # -- policy calls ----------------------------------------------------------
     def _assign_slot(self, spec: "SegmentSpec") -> int:
+        pinned = self._pin_slot.pop(spec.name, None)
+        if pinned is not None and 0 <= pinned < self._n_slots():
+            self.device_of[spec.name] = pinned
+            return pinned
         kwargs: Dict[str, Any] = {"ewma": self.device_ewma()}
         if self._policy_takes_hints:
             kwargs["hints"] = {

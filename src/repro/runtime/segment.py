@@ -66,12 +66,88 @@ class Segment:
                 self.active[tid] = jnp.ones((), jnp.bool_)
 
 
+def _peephole_fused_kernels(
+    spec: SegmentSpec,
+    dataflow: Dataflow,
+    operators: Dict[str, Operator],
+    parents: Dict[str, List[str]],
+) -> None:
+    """Collapse straight-line elementwise runs onto multi-op pallas kernels.
+
+    Within a *fused* segment, a run ``elementwise → … → (rmsnorm|elementwise)``
+    where every link is a private single-parent/single-consumer edge computes
+    a pure composition — the tail's operator is swapped for one fused kernel
+    applied to the run head's input (``repro.ops.riot.make_fused_operator``),
+    so the whole run is one pallas launch on accelerator backends. Interior
+    operators keep computing: every task's output stays published-switchable
+    (a later merge may subscribe to any topic), and on the ref/CPU path XLA
+    CSEs the duplicated affine work away inside the single jitted step.
+
+    Mutates ``operators`` and ``parents`` (the step closure's locals) only —
+    ``spec`` is untouched, so boundary wiring, checkpoint state structure,
+    and per-task cost accounting are unchanged. Deterministic in spec order,
+    and driven purely by ⟨type, config, batch, wiring, fused⟩ — exactly the
+    compile-cache key — so cached canonical twins fuse identically.
+    """
+    if not spec.fused:
+        return
+    from repro.ops.riot import (  # deferred: keep op registry init lazy
+        FUSABLE_ELEMENTWISE,
+        FUSED_TAILS,
+        make_fused_operator,
+    )
+
+    in_segment = set(spec.task_ids)
+    children: Dict[str, List[str]] = {}
+    for t in spec.task_ids:
+        for p in parents[t]:
+            if p in in_segment:
+                children.setdefault(p, []).append(t)
+    used: Set[str] = set()
+    for tid in reversed(spec.task_ids):  # tails first (task_ids is topo-sorted)
+        if tid in used or dataflow.tasks[tid].type not in FUSED_TAILS:
+            continue
+        run = [tid]
+        cur = tid
+        while True:
+            ps = parents[cur]
+            if len(ps) != 1:
+                break
+            p = ps[0]
+            if (
+                p not in in_segment
+                or children.get(p) != [cur]
+                or dataflow.tasks[p].type not in FUSABLE_ELEMENTWISE
+            ):
+                break
+            run.append(p)
+            cur = p
+        if len(run) < 2:
+            continue
+        run.reverse()  # head .. tail
+        fused_op = make_fused_operator(
+            [dataflow.tasks[t] for t in run], batch=spec.batch_of[tid]
+        )
+        if fused_op is None:
+            continue
+        operators[tid] = fused_op
+        parents[tid] = list(parents[run[0]])
+        used.update(run[:-1])
+
+
 def build_segment(
     spec: SegmentSpec,
     dataflow: Dataflow,
     init_states: Optional[Dict[str, PyTree]] = None,
+    cache: Any = None,
 ) -> Segment:
-    """Compile a segment: one jitted step over all its tasks."""
+    """Compile a segment: one jitted step over all its tasks.
+
+    With a ``cache`` (a :class:`repro.runtime.compile_cache.CompileCache`),
+    the jitted step function is looked up by the spec's structural
+    signature — a structurally identical segment built earlier shares its
+    traced executable and this call skips XLA compilation entirely.
+    """
     operators: Dict[str, Operator] = {}
     for tid in spec.task_ids:
         operators[tid] = operator_for_task(dataflow.tasks[tid], batch=spec.batch_of[tid])
@@ -100,6 +176,7 @@ def build_segment(
     task_ids = list(spec.task_ids)
     parents = {t: list(spec.parents[t]) for t in task_ids}
     batch_of = dict(spec.batch_of)
+    _peephole_fused_kernels(spec, dataflow, operators, parents)
 
     def step_fn(
         states: Dict[str, PyTree],
@@ -152,7 +229,14 @@ def build_segment(
         # subset to the broker (runtime-switchable, no recompilation).
         return new_states, outputs
 
-    if spec.fused:
+    if cache is not None:
+        # Compiled-segment reuse: step through the cache's canonical jitted
+        # callable (adapter-renamed per call). Structurally identical
+        # segments — resubmitted dataflows, template copies — share one
+        # traced executable instead of recompiling. The canonical twin is
+        # built with the same fused flag, so donation semantics carry over.
+        jitted = cache.step_fn_for(spec, dataflow)
+    elif spec.fused:
         # Fusion-compiled hot path: donate the pre-step states to XLA so
         # the post-step states reuse their buffers in place and the fused
         # chain's intermediate streams live only as executable temporaries.

@@ -34,7 +34,14 @@ import os
 from typing import Any, Dict, List, Optional, Sequence, Set, Union
 
 from repro.core import MergeStrategy, ReuseManager
-from repro.core.defrag import canonical_parents, plan_defrag, plan_fusion
+from repro.core.defrag import (
+    FusionPlan,
+    FusionReport,
+    canonical_parents,
+    plan_defrag,
+    plan_fusion,
+    score_fusion_plan,
+)
 from repro.core.graph import Dataflow
 from repro.core.manager import RemovalReceipt, SubmissionReceipt
 
@@ -101,6 +108,9 @@ class StreamSystem:
         self.task_batch: Dict[str, int] = {}  # running task id -> output batch size
         self._seg_counter = 0
         self._segments_of: Dict[str, List[str]] = {}  # submission -> segment names
+        # Last fusion planner verdicts (every accept/reject with reasons) —
+        # refreshed by each fuse() call.
+        self.fusion_report: Optional[FusionReport] = None
         self.checkpoint_keep_last = checkpoint_keep_last
         self.checkpoint_store = (
             CheckpointStore(checkpoint_dir, keep_last=checkpoint_keep_last)
@@ -259,7 +269,62 @@ class StreamSystem:
             self._segments_of[sub] = []
         return killed
 
-    def fuse(self, min_length: int = 2) -> Dict[str, List[str]]:
+    def _score_fusion(self, plan: FusionPlan, overhead_ms: float) -> FusionReport:
+        """Score a fusion plan with the dry-run latency model.
+
+        Per-segment step costs come from :class:`repro.ops.costs
+        .LatencyModel` fit on the backend's live latency samples (EWMA-fed
+        segment wall-times), so the planner's "cheapest slot" is the
+        EWMA-cheapest worker. Before any sample exists every segment
+        models as 0 ms — consolidation is then free and all private-pipe
+        chains are accepted, matching the pre-planner behaviour.
+        """
+        from repro.ops.costs import cost_weight_for_task, fit_latency_model
+
+        backend = self.backend
+        samples = backend.latency_samples()
+        model = fit_latency_model(samples) if samples else None
+        seg_ms: Dict[str, float] = {}
+        for name, seg in backend.segments.items():
+            if model is None:
+                seg_ms[name] = 0.0
+                continue
+            units: Dict[str, float] = {}
+            for tid in seg.spec.task_ids:
+                task = backend.task_defs[tid]
+                units[task.type] = units.get(task.type, 0.0) + (
+                    cost_weight_for_task(task) * seg.spec.batch_of[tid]
+                )
+            seg_ms[name] = model.segment_ms(units)
+        return score_fusion_plan(
+            plan,
+            backend.seg_deps,
+            seg_ms,
+            slot_of=getattr(backend, "device_of", None),
+            n_slots=backend._n_slots() if hasattr(backend, "_n_slots") else 1,
+            overhead_ms=overhead_ms,
+        )
+
+    def _migrate_chain(self, members: List[str], target: int) -> None:
+        """Consolidate a chain's members onto one slot before fusing.
+
+        Cross-worker chains must be worker-local before recompilation (the
+        fused segment lives on exactly one slot); reuse the straggler-
+        migration machinery — states RPC, kill, redeploy with carried
+        states and re-applied pauses. Backends without placement (the
+        in-process jit backend) have nothing to do.
+        """
+        device_of = getattr(self.backend, "device_of", None)
+        if device_of is None:
+            return
+        for m in members:
+            cur = device_of.get(m)
+            if cur is None or cur == target:
+                continue
+            self.backend._move_segment(self.backend.segments[m], cur, target)
+            device_of[m] = target
+
+    def fuse(self, min_length: int = 2, overhead_ms: float = 0.25) -> Dict[str, List[str]]:
         """Fuse linear same-DAG segment chains into single compiled segments.
 
         Enacts :func:`repro.core.defrag.plan_fusion`: each maximal chain of
@@ -270,13 +335,31 @@ class StreamSystem:
         Unlike :meth:`defragment` this is member-scoped (parallel waves stay
         untouched) and keeps paused residue deployed (and paused).
 
+        Candidate chains are scored wave-aware first
+        (:func:`repro.core.defrag.score_fusion_plan`): a chain whose
+        consolidation onto its cheapest slot would stretch the step
+        makespan by more than the ``(len−1) × overhead_ms`` dispatch
+        saving is rejected — wide waves stay wide. Every verdict lands in
+        :attr:`fusion_report`. Accepted cross-worker chains are migrated
+        member-by-member to the target slot before recompiling, and the
+        fused segment is pinned there.
+
         Returns ``{fused segment name: [member names replaced]}``.
         """
         dag_of = {n: s.spec.dag_name for n, s in self.backend.segments.items()}
         plan = plan_fusion(self.backend.seg_deps, dag_of, min_length=min_length)
+        self.fusion_report = self._score_fusion(plan, overhead_ms=overhead_ms)
         fused: Dict[str, List[str]] = {}
-        for chain in plan.chains:
+        for decision in self.fusion_report.decisions:
+            if not decision.accepted:
+                continue
+            chain = decision.chain
             members = chain.members
+            if any(m not in self.backend.segments for m in members):
+                # stale plan entry (member killed since planning) — a chain
+                # must never fuse over a dead segment
+                continue
+            self._migrate_chain(members, decision.target_slot)
             specs = [self.backend.segments[m].spec for m in members]
             # Chain order is upstream→downstream and member task_ids are
             # topological, so concatenation is topological for the union.
@@ -311,6 +394,11 @@ class StreamSystem:
                 # step k+1 would invalidate — fall back to plain fusion.
                 fused=not self.checkpoint_background,
             )
+            # Deploy the fused segment where its members were consolidated —
+            # placed backends consult the pin before their placement policy.
+            pins = getattr(self.backend, "_pin_slot", None)
+            if pins is not None:
+                pins[spec.name] = decision.target_slot
             self.backend.fuse_segments(spec, df, members)
             members_set = set(members)
             for sub, segs in self._segments_of.items():

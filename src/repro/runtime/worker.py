@@ -159,6 +159,7 @@ class _JitSegmentRunner:
                  init_states: Optional[Dict[str, Any]]):
         from repro.ops import operator_for_task
 
+        from .compile_cache import process_compile_cache
         from .executor import _conform_state  # imports JAX (worker-side only)
         from .segment import build_segment
 
@@ -175,7 +176,11 @@ class _JitSegmentRunner:
                 )
                 for tid, value in init_states.items()
             }
-        self.seg = build_segment(spec, dataflow, init_states=init_states)
+        # process-local compiled-segment reuse: structurally identical
+        # segments deployed to this worker share one jitted executable
+        self.seg = build_segment(
+            spec, dataflow, init_states=init_states, cache=process_compile_cache()
+        )
         self.spec = spec
 
     @property
@@ -509,6 +514,15 @@ def _worker_main(conn, worker_id: int, transport_spec: Dict[str, Any],
                 }
             elif op == "ping":
                 reply["pid"] = os.getpid()
+            elif op == "cache_stats":
+                if plane == "jit":
+                    from .compile_cache import process_compile_cache
+
+                    reply["stats"] = process_compile_cache().stats()
+                else:  # dry plane never compiles
+                    reply["stats"] = {
+                        "hits": 0, "misses": 0, "evictions": 0, "entries": 0,
+                    }
             elif op == "shutdown":
                 log.write("shutdown")
             else:
@@ -1237,6 +1251,49 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
                         self._step_wave_on_worker, w, names, op
                     )] = (w, names, tries + 1)
         return seg_ms
+
+    def _step_segments(self) -> Dict[str, float]:
+        """Sync-mode stepping, chain-batched when enabled.
+
+        PR 8 left ``step_chain`` concurrent-only; sync mode paid one
+        blocking RPC per segment. With ``chain_batching`` on (and no
+        ``rpc_timeout`` armed) sync mode now dispatches the same
+        one-``step_chain``-per-worker commands, guarded by the same
+        per-topic sequence targets — so sink digests are identical to the
+        per-segment launch-order sweep. The per-worker chunks must be
+        dispatched concurrently even in sync mode: an early entry of one
+        worker's chain may wait on another worker's publish, so a serial
+        worker-by-worker dispatch could deadlock on the sequence targets.
+        Sync semantics are unchanged — the caller still sums (not maxes)
+        the per-wave times, and this returns worker-measured compute ms
+        per segment exactly like the base sweep.
+        """
+        if not self._use_chains() or not self.segments:
+            return super()._step_segments()
+        if self._pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.max_workers, thread_name_prefix="repro-step"
+            )
+        self._begin_concurrent_step()
+        try:
+            return self._dispatch_chunks(self._worker_chains(), "step_chain")
+        finally:
+            self._end_concurrent_step()
+
+    def compile_cache_stats(self) -> Dict[str, int]:
+        """Aggregate the workers' process-local compiled-segment caches."""
+        total = {"hits": 0, "misses": 0, "evictions": 0, "entries": 0}
+        if not self._spawned:
+            return total
+        for w in range(self.n_workers):
+            if not self.worker_alive(w):
+                continue
+            stats = self._call(w, {"op": "cache_stats"}).get("stats", {})
+            for k in total:
+                total[k] += int(stats.get(k, 0))
+        return total
 
     def _step_segments_concurrent(self) -> Dict[str, float]:
         """Wave- or chain-batched concurrent dispatch.

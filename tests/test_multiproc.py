@@ -251,8 +251,13 @@ class TestJitWorkerPlane:
 
 class TestStragglerMigrationAcrossWorkers:
     def test_injected_straggler_moves_to_other_worker(self):
+        # chain batching ships one step_chain RPC per worker, so the
+        # coordinator-side _step_one hook below would never run — pin the
+        # per-segment dispatch path this injection idiom relies on (worker-
+        # measured chain timings feed the same EWMAs in the batched path)
         be = MultiprocBackend(workers=2, worker_plane="dry",
-                              placement="ewma_aware", straggler_factor=3.0)
+                              placement="ewma_aware", straggler_factor=3.0,
+                              chain_batching=False)
         system = StreamSystem(strategy="none", backend=be)
         for i in range(4):
             system.submit(chain_df(f"S{i}", "urban", [("kalman", {"q": float(i)})]))
