@@ -9,6 +9,7 @@ console summary below is the EXPERIMENTS.md source of truth.
   roofline   roofline_bench    40-cell dry-run aggregation + hillclimb picks
   hotpath    hotpath_bench     zero-copy fetch / chain batching / segment fusion
   optimizer  fusion_optimizer_bench  wave-aware fusion planner / compile cache
+  obs        obs_overhead_bench     telemetry-plane overhead on the jit hot path
 """
 from __future__ import annotations
 
@@ -24,6 +25,7 @@ def main() -> int:
         fusion_optimizer_bench,
         hotpath_bench,
         merge_latency,
+        obs_overhead_bench,
         roofline_bench,
         serving_reuse,
         workload_traces,
@@ -46,8 +48,10 @@ def main() -> int:
     hotpath_rc = hotpath_bench.main([])
     print("\n=== fusion optimizer: wave-aware planner / compile cache ===")
     optimizer_rc = fusion_optimizer_bench.main([])
+    print("\n=== telemetry plane: obs overhead on the jit hot path ===")
+    obs_rc = obs_overhead_bench.main([])
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
-    return hotpath_rc or optimizer_rc
+    return hotpath_rc or optimizer_rc or obs_rc
 
 
 if __name__ == "__main__":

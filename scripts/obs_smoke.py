@@ -1,0 +1,162 @@
+"""End-to-end telemetry smoke — the PR 10 acceptance scenario, runnable
+by hand or from the CI ``observability`` job.
+
+One in-process :class:`ServeFrontend` on the dryrun backend (JAX-free),
+tracing armed, OPMW churn driving admission/removal while a real HTTP
+client scrapes ``/metrics`` mid-run. Checks, each fatal:
+
+  1. the scrape is valid Prometheus text 0.0.4 — round-trips through
+     :func:`repro.obs.parse_prometheus`;
+  2. the reuse-savings gauges match ground truth: ``repro_reuse_tasks_saved``
+     equals ``session.stats()`` submitted − running task counts, the serve
+     gauges equal the frontend's ledgers/slot pool at scrape time;
+  3. the Chrome-trace export is loadable JSON with merge/step/segment
+     spans (the artifact CI uploads for Perfetto).
+
+Usage:
+    PYTHONPATH=src python scripts/obs_smoke.py [--out-dir results/obs_smoke]
+"""
+import argparse
+import json
+import os
+import sys
+import urllib.request
+
+sys.path.insert(0, "src")
+
+from repro.obs import parse_prometheus
+from repro.serve.frontend import ServeFrontend, TenantQuota
+from repro.workloads import opmw_workload, tenant_copy
+
+FAILURES = []
+
+
+def check(name, ok, detail=""):
+    tag = "ok" if ok else "FAIL"
+    print(f"  [{tag}] {name}" + (f"  ({detail})" if detail else ""))
+    if not ok:
+        FAILURES.append(name)
+
+
+def sample(families, name, **labels):
+    """Value of one sample in a parse_prometheus() result, or None."""
+    want = {k: str(v) for k, v in labels.items()}
+    for lbls, value in families.get(name, []):
+        if lbls == want:
+            return value
+    return None
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("results", "obs_smoke"))
+    args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    pool = opmw_workload()
+    frontend = ServeFrontend(
+        slots=1024, backend="dryrun", default_quota=TenantQuota(max_slots=1024)
+    )
+    frontend.session.enable_tracing()
+    host, port = frontend.start_metrics_http(port=0)
+    url = f"http://{host}:{port}/metrics"
+    print(f"scraping {url}")
+
+    try:
+        # churn phase 1: admit the pool across three tenants, step between
+        tenants = ("alice", "bob", "carol")
+        for i, df in enumerate(pool):
+            t = tenants[i % len(tenants)]
+            r = frontend.submit(t, tenant_copy(df, t))
+            assert r.status == "ADMITTED", r
+            frontend.step()
+
+        # mid-run scrape, while more churn is still to come
+        text = urllib.request.urlopen(url, timeout=10).read().decode("utf-8")
+        families = parse_prometheus(text)
+        check("scrape parses as Prometheus 0.0.4",
+              bool(families), f"{len(families)} families")
+        for required in (
+            "repro_reuse_tasks_saved",
+            "repro_reuse_tasks_submitted_total",
+            "repro_serve_slots_used",
+            "repro_serve_effective_capacity",
+            "repro_merge_events_total",
+        ):
+            check(f"family {required} present", required in families)
+
+        # ground truth: session stats + frontend ledgers at scrape time.
+        # No churn ran between scrape and check, so values match exactly.
+        stats = frontend.session.stats()
+        saved = stats.submitted_task_count - stats.running_task_count
+        check(
+            "repro_reuse_tasks_saved == stats submitted-running",
+            sample(families, "repro_reuse_tasks_saved") == saved,
+            f"gauge={sample(families, 'repro_reuse_tasks_saved')} truth={saved}",
+        )
+        check(
+            "repro_reuse_tasks_submitted_total == stats.submitted_task_count",
+            sample(families, "repro_reuse_tasks_submitted_total")
+            == stats.submitted_task_count,
+        )
+        fstats = frontend.stats()
+        check(
+            "repro_serve_slots_used == frontend slots_used",
+            sample(families, "repro_serve_slots_used") == fstats["slots_used"],
+        )
+        check(
+            "repro_serve_naive_slots == frontend naive_slots",
+            sample(families, "repro_serve_naive_slots") == fstats["naive_slots"],
+        )
+        for t, ledger in fstats["ledgers"].items():
+            check(
+                f"repro_serve_slots_saved{{tenant={t}}} == ledger",
+                sample(families, "repro_serve_slots_saved", tenant=t)
+                == ledger["slots_saved"],
+            )
+
+        # churn phase 2: remove a third of the pool, re-scrape, re-check —
+        # the gauges must track live state, not the admission-time snapshot
+        for i, df in enumerate(pool):
+            if i % 3 == 0:
+                t = tenants[i % len(tenants)]
+                frontend.remove(t, f"{t}/{df.name}")
+                frontend.step()
+        text2 = urllib.request.urlopen(url, timeout=10).read().decode("utf-8")
+        fam2 = parse_prometheus(text2)
+        f2 = frontend.stats()
+        check(
+            "post-churn repro_serve_slots_used tracks removals",
+            sample(fam2, "repro_serve_slots_used") == f2["slots_used"],
+            f"gauge={sample(fam2, 'repro_serve_slots_used')} truth={f2['slots_used']}",
+        )
+        check(
+            "unmerge events counted",
+            (sample(fam2, "repro_unmerge_events_total") or 0)
+            == frontend.session.manager.op_counts["unmerge_events"],
+        )
+
+        # artifacts: the raw text + the Chrome trace CI uploads
+        with open(os.path.join(args.out_dir, "metrics.prom"), "w") as f:
+            f.write(text2)
+        trace_path = os.path.join(args.out_dir, "trace.json")
+        n = frontend.session.export_chrome_trace(trace_path)
+        events = json.load(open(trace_path))
+        if isinstance(events, dict):
+            events = events["traceEvents"]
+        cats = {e.get("cat") for e in events if e.get("ph") == "X"}
+        check("chrome trace exported", n > 0, f"{n} spans")
+        check("trace has control spans (merge/unmerge)", "control" in cats, str(sorted(cats)))
+        check("trace has step+segment spans", {"step", "segment"} <= cats)
+    finally:
+        frontend.close()
+
+    if FAILURES:
+        print(f"\nobs smoke FAILED: {FAILURES}")
+        return 1
+    print(f"\nobs smoke passed; artifacts in {args.out_dir}/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -472,11 +472,65 @@ class ReuseSession:
 
     def worker_health(self) -> Optional[Dict[str, Any]]:
         """Cluster-plane health snapshot (worker liveness, respawns,
-        autoscaler state). ``None`` for control-plane sessions and
-        in-process backends — only a worker-pool backend can be sick."""
+        staleness marking, autoscaler state). ``None`` for control-plane
+        sessions and in-process backends — only a worker-pool backend can
+        be sick."""
         if self._system is None:
             return None
         return self._system.worker_health()
+
+    # -- telemetry plane (repro.obs) -------------------------------------------
+    def configure_obs(
+        self,
+        metrics: Optional[bool] = None,
+        trace: Optional[bool] = None,
+        sample_stride: Optional[int] = None,
+        trace_capacity: Optional[int] = None,
+    ) -> "ReuseSession":
+        """Turn the metrics registry and/or span tracing on or off.
+
+        ``trace=True`` arms step-span tracing on every layer (wave
+        dispatch, per-segment steps, transport, worker RPCs, compile
+        misses, merge/unmerge, checkpoints); ``sample_stride=N`` records
+        every Nth span per name. ``metrics=False`` swaps in a null
+        registry for overhead-sensitive runs. Needs a data plane.
+        """
+        self._require_system("configure_obs").configure_obs(
+            metrics=metrics,
+            trace=trace,
+            sample_stride=sample_stride,
+            trace_capacity=trace_capacity,
+        )
+        return self
+
+    def enable_tracing(self, sample_stride: int = 1) -> "ReuseSession":
+        """Shorthand for ``configure_obs(trace=True, sample_stride=...)``."""
+        return self.configure_obs(trace=True, sample_stride=sample_stride)
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Merged metrics snapshot (coordinator + multiproc workers) —
+        counters, gauges and histograms as plain JSON-safe dicts."""
+        return self._require_system("metrics_snapshot").metrics_snapshot()
+
+    def prometheus_text(self) -> str:
+        """The merged snapshot as Prometheus text exposition 0.0.4 — what
+        the serving front end's ``/metrics`` endpoint returns."""
+        return self._require_system("prometheus_text").prometheus_text()
+
+    def drain_spans(self) -> List[Dict[str, Any]]:
+        """Drain buffered trace spans (destructive), sorted by start time."""
+        return self._require_system("drain_spans").drain_spans()
+
+    def export_chrome_trace(self, path: str) -> int:
+        """Drain spans into a Chrome/Perfetto-loadable trace file; returns
+        the number of spans written."""
+        return self._require_system("export_chrome_trace").export_chrome_trace(path)
+
+    def segment_latency_ms(self) -> Dict[str, Dict[str, float]]:
+        """Canonical per-segment step-latency digest (mean/last/max/samples
+        in ms) — the same measured samples the fusion calibrator consumes;
+        see :meth:`repro.runtime.system.StreamSystem.segment_latency_ms`."""
+        return self._require_system("segment_latency_ms").segment_latency_ms()
 
     def stats(self) -> SessionStats:
         mgr = self.manager

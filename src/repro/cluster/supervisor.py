@@ -146,7 +146,15 @@ class WorkerSupervisor:
             if dead and be._gen[i] == gen:
                 be._emit_worker_event(HEARTBEAT_MISSED, worker=i,
                                       detail=f"gen={gen}")
-                be.recover_worker(i, expect_gen=gen)
+                # fetched per-event (get-or-create is idempotent) so the
+                # counter survives a configure_obs registry swap
+                be.metrics.counter(
+                    "repro_supervisor_recoveries_total",
+                    "workers recovered by the supervisor liveness sweep",
+                ).inc(source="ping" if ping else "heartbeat")
+                with be.tracer.span("supervisor_recover", "control",
+                                    worker=i, gen=gen):
+                    be.recover_worker(i, expect_gen=gen)
                 recovered.append(i)
         return recovered
 

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import json
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple, Union
 
@@ -70,6 +71,37 @@ class ReuseManager:
         self._task_counter = 0
         self._dag_counter = 0
         self.journal: List[Dict[str, Any]] = []
+        # -- telemetry plane (repro.obs, optional) ---------------------------
+        # An owning StreamSystem wires its backend's Tracer in here so
+        # merge/unmerge/preview planning shows up as "control" spans; the
+        # cumulative op counters below are mirrored into the metrics
+        # registry by a snapshot-time collector (never read on the hot
+        # path). Journal replay re-runs submit/remove, so a restored
+        # manager's counters are consistent with its rebuilt Δ/Φ state.
+        self.tracer: Optional[Any] = None
+        self.op_counts: Dict[str, int] = {
+            "tasks_submitted": 0,  # running tasks requested (reused + created)
+            "tasks_reused": 0,  # requested tasks satisfied by a running task
+            "tasks_created": 0,  # requested tasks that had to be instantiated
+            "merge_events": 0,  # submissions that reused ≥1 running task
+            "unmerge_events": 0,  # removals (every removal plans an unmerge)
+            "previews": 0,  # admission-control dry plans
+        }
+
+    def _span(self, name: str, **args: Any):
+        """A "control"-category tracer span, or a no-op without a tracer."""
+        tracer = self.tracer
+        if tracer is not None and tracer.enabled:
+            return tracer.span(name, "control", **args)
+        return nullcontext()
+
+    def _count_merge(self, plan: MergePlan) -> None:
+        oc = self.op_counts
+        oc["tasks_submitted"] += plan.num_reused + plan.num_created
+        oc["tasks_reused"] += plan.num_reused
+        oc["tasks_created"] += plan.num_created
+        if plan.num_reused:
+            oc["merge_events"] += 1
 
     # -- id minting ----------------------------------------------------------
     def _mint_task_id(self, type_hint: str = "t") -> str:
@@ -109,13 +141,14 @@ class ReuseManager:
 
         df = df.copy()  # signatures are keyed by task id, which copy preserves
         merged_name = self._mint_dag_name()
-        plan = self._strategy.plan(self, df, merged_name, sigs=sigs)
-        # Update Δ/Φ: all submissions supported by the absorbed DAGs now map
-        # to the merged DAG.
-        absorbed: Set[str] = set()
-        for run_name in plan.overlapping:
-            absorbed |= self.delta.pop(run_name, set())
-        apply_merge(self.running, df, plan)
+        with self._span("merge", dataflow=df.name, running_dag=merged_name):
+            plan = self._strategy.plan(self, df, merged_name, sigs=sigs)
+            # Update Δ/Φ: all submissions supported by the absorbed DAGs now
+            # map to the merged DAG.
+            absorbed: Set[str] = set()
+            for run_name in plan.overlapping:
+                absorbed |= self.delta.pop(run_name, set())
+            apply_merge(self.running, df, plan)
         for sub_name in absorbed:
             self.phi[sub_name] = merged_name
         self.submitted[df.name] = df
@@ -125,6 +158,7 @@ class ReuseManager:
         self._strategy.on_merged(self, df, plan, sigs=sigs)
 
         self._journal({"op": "submit", "dataflow": df.to_json()})
+        self._count_merge(plan)
         receipt = SubmissionReceipt(
             name=df.name,
             running_dag=merged_name,
@@ -161,8 +195,10 @@ class ReuseManager:
         elif self._strategy.wants_signatures:
             sigs = compute_signatures(df)
         saved_counter = self._task_counter
+        self.op_counts["previews"] += 1
         try:
-            return self._strategy.plan(self, df, "__preview__", sigs=sigs)
+            with self._span("preview", dataflow=df.name):
+                return self._strategy.plan(self, df, "__preview__", sigs=sigs)
         finally:
             self._task_counter = saved_counter
 
@@ -264,6 +300,7 @@ class ReuseManager:
         for df in copies:
             plan = record_of[df.name]["plans"][record_of[df.name]["members"].index(df)]
             self._journal({"op": "submit", "dataflow": df.to_json()})
+            self._count_merge(plan)
             receipts.append(
                 SubmissionReceipt(
                     name=df.name,
@@ -368,14 +405,15 @@ class ReuseManager:
         run_name = self.phi[name]
         run_df = self.running[run_name]
         remaining = sorted(self.delta[run_name] - {name})
-        plan = plan_unmerge(
-            run_df,
-            remaining_task_maps={n: self.task_maps[n] for n in remaining},
-            remaining_sinks={n: self.submitted[n].sink_ids for n in remaining},
-            removed_name=name,
-            mint_name=self._mint_dag_name,
-        )
-        apply_unmerge(self.running, plan)
+        with self._span("unmerge", dataflow=name, running_dag=run_name):
+            plan = plan_unmerge(
+                run_df,
+                remaining_task_maps={n: self.task_maps[n] for n in remaining},
+                remaining_sinks={n: self.submitted[n].sink_ids for n in remaining},
+                removed_name=name,
+                mint_name=self._mint_dag_name,
+            )
+            apply_unmerge(self.running, plan)
         # Re-point Δ/Φ for the survivors: a submitted DAG belongs to the
         # component that contains its mapped tasks (exactly one, verified).
         del self.delta[run_name]
@@ -403,6 +441,7 @@ class ReuseManager:
         self._strategy.on_unmerged(self, plan.terminated_tasks)
 
         self._journal({"op": "remove", "name": name})
+        self.op_counts["unmerge_events"] += 1
         receipt = RemovalReceipt(
             name=name,
             terminated_tasks=set(plan.terminated_tasks),

@@ -150,6 +150,8 @@ def run_dataflow_trace(
     autoscale: Optional[Dict[str, Any]] = None,
     kill_worker_at: Optional[int] = None,
     kill_worker: int = 0,
+    trace_out: Optional[str] = None,
+    metrics_out: Optional[str] = None,
 ) -> Dict[str, Any]:
     """Replay ``workload/trace`` (e.g. ``opmw/rw1``) on an ExecutionBackend.
 
@@ -170,6 +172,12 @@ def run_dataflow_trace(
     ``kill_worker_at=N`` SIGKILLs worker ``kill_worker`` after trace
     event ``N`` — the CI chaos smoke: the supervisor must recover it and
     the replay must still complete.
+
+    Telemetry (``repro.obs``): ``trace_out=PATH`` arms span tracing and
+    writes a Chrome/Perfetto trace of the whole replay;
+    ``metrics_out=PATH`` writes one final Prometheus text scrape. Both
+    export before the session closes so multiproc worker spans/metrics
+    are harvested over RPC.
     """
     from repro.api import ReuseSession
     from repro.workloads import (
@@ -229,6 +237,8 @@ def run_dataflow_trace(
             supervise=supervise,
             autoscale=autoscale,
         )
+    if trace_out:
+        session.enable_tracing()
     todo = events[resumed_at:]
     if max_events is not None:
         todo = todo[: max(0, max_events - resumed_at)]
@@ -269,9 +279,20 @@ def run_dataflow_trace(
         backend_name = session.backend_name
         strategy_name = session.strategy
         health = session.worker_health()
+        trace_spans = None
+        if trace_out:
+            trace_spans = session.export_chrome_trace(trace_out)
+        if metrics_out:
+            text = session.prometheus_text()
+            os.makedirs(os.path.dirname(metrics_out) or ".", exist_ok=True)
+            with open(metrics_out, "w") as f:
+                f.write(text)
     finally:
         session.close()
     return {
+        "trace_out": trace_out,
+        "trace_spans": trace_spans,
+        "metrics_out": metrics_out,
         "trace": spec,
         "backend": backend_name,
         "strategy": strategy_name,
@@ -378,6 +399,16 @@ def main(argv=None) -> int:
         "--max-events", type=int, default=None,
         help="stop the trace after N events (crash simulation / smoke)",
     )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="arm span tracing and write a Chrome/Perfetto trace of the "
+        "replay (load in chrome://tracing or ui.perfetto.dev)",
+    )
+    ap.add_argument(
+        "--metrics-out", default=None, metavar="PATH",
+        help="write one final Prometheus text scrape of the telemetry "
+        "registry when the trace completes",
+    )
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--experiment", help="named §Perf override set (launch/experiments.py)")
     ap.add_argument("--top-sites", type=int, default=0, help="report top-N HBM sites")
@@ -408,6 +439,8 @@ def main(argv=None) -> int:
             autoscale=_parse_autoscale(args.autoscale),
             kill_worker_at=args.kill_worker_at,
             kill_worker=args.kill_worker,
+            trace_out=args.trace_out,
+            metrics_out=args.metrics_out,
         )
         summary = {k: v for k, v in rec.items() if k != "series"}
         print(json.dumps(summary, indent=2))

@@ -113,6 +113,9 @@ def cmd_start(argv) -> int:
                     help="restore session + ledgers from --checkpoint-dir")
     ap.add_argument("--step-interval", type=float, default=None,
                     help="step the data plane every S seconds while serving")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text over plain HTTP at /metrics "
+                         "on this port (0 picks a free one)")
     ap.add_argument("--log-file", default=None)
     args = ap.parse_args(argv)
 
@@ -139,6 +142,7 @@ def cmd_start(argv) -> int:
             defrag_every=args.defrag_every,
             host=args.host,
             port=args.port,
+            metrics_port=args.metrics_port,
         )
     else:
         frontend = ServeFrontend(
@@ -150,11 +154,15 @@ def cmd_start(argv) -> int:
             defrag_every=args.defrag_every,
             host=args.host,
             port=args.port,
+            metrics_port=args.metrics_port,
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=args.checkpoint_every,
         )
     host, port = frontend.start()
     print(f"serving on {host}:{port}", flush=True)
+    if frontend._metrics_sock is not None:
+        mhost, mport = frontend._metrics_sock.getsockname()[:2]
+        print(f"metrics on http://{mhost}:{mport}/metrics", flush=True)
 
     stepper = None
     if args.step_interval:

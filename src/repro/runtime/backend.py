@@ -38,6 +38,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple, Type, Union
 
 from repro.core.graph import Dataflow, Task
+from repro.obs import NULL_REGISTRY, MetricsRegistry, Tracer
 
 from .checkpoint import decode_pytree, encode_pytree
 from .scheduler import WaveEvent, compute_waves, run_ready_queue
@@ -243,6 +244,61 @@ class ExecutionBackend:
         # state-leaf encoder used by dump_state/_dump_extra — swapped for a
         # deferring marker during background-checkpoint snapshots
         self._state_encoder: Callable[[Any], Any] = encode_pytree
+        # telemetry plane (repro.obs): a per-backend metrics registry (so
+        # tests running many systems in one process don't cross-pollute)
+        # and a span tracer, disabled until configure_obs(trace=True)
+        self.metrics: MetricsRegistry = MetricsRegistry()
+        self.tracer = Tracer(enabled=False)
+        self._mint_instruments()
+
+    def _mint_instruments(self) -> None:
+        """Pre-mint the hot-path instruments so step() does no name lookups."""
+        m = self.metrics
+        self._m_steps = m.counter("repro_steps_total", "data-plane steps completed")
+        self._m_step_wall = m.histogram(
+            "repro_step_wall_ms", "whole-step wall time (ms)"
+        )
+        self._m_seg_ms = m.histogram(
+            "repro_segment_step_ms", "per-segment step time (ms)"
+        )
+        self._m_live = m.gauge("repro_tasks_live", "live (active) deployed tasks")
+        self._m_paused = m.gauge("repro_tasks_paused", "paused deployed tasks")
+        self._m_cost = m.gauge(
+            "repro_cost_cores", "core-equivalents consumed by the last step"
+        )
+
+    def configure_obs(
+        self,
+        metrics: Optional[bool] = None,
+        trace: Optional[bool] = None,
+        sample_stride: Optional[int] = None,
+        trace_capacity: Optional[int] = None,
+    ) -> "ExecutionBackend":
+        """Telemetry knobs (None leaves a knob unchanged).
+
+        ``metrics=False`` swaps the registry for a no-op twin (the honest
+        baseline of the overhead benchmark); ``trace=True`` arms span
+        recording at ``sample_stride`` (record every Nth span per name).
+        The multiproc backend additionally forwards trace configuration to
+        its worker processes.
+        """
+        if metrics is not None:
+            self.metrics = MetricsRegistry() if metrics else NULL_REGISTRY
+            self._mint_instruments()
+        if trace is not None or sample_stride is not None or trace_capacity is not None:
+            self.tracer.configure(
+                enabled=trace, sample_stride=sample_stride, capacity=trace_capacity
+            )
+        return self
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Aggregated metrics snapshot (overridden by worker-pool backends
+        to merge worker registries shipped over the ``metrics`` RPC)."""
+        return self.metrics.snapshot()
+
+    def drain_spans(self) -> List[Dict[str, Any]]:
+        """Pop all buffered trace spans (coordinator + any worker pools)."""
+        return self.tracer.drain()
 
     def configure_stepping(
         self,
@@ -380,6 +436,15 @@ class ExecutionBackend:
         return self._waves_cache
 
     def _step_named(self, name: str) -> float:
+        if self.tracer.enabled:
+            with self.tracer.span(name, "segment", step=self.step_count):
+                ms = self._step_timed(name)
+        else:
+            ms = self._step_timed(name)
+        self._m_seg_ms.observe(ms)
+        return ms
+
+    def _step_timed(self, name: str) -> float:
         seg = self.segments[name]
         s0 = time.perf_counter()
         simulated = self._step_one(seg)
@@ -403,10 +468,14 @@ class ExecutionBackend:
         self._begin_concurrent_step()
         try:
             order = {n: s.spec.created_at for n, s in self.segments.items()}
-            return run_ready_queue(
-                self.seg_deps, self._step_named, self.max_workers, order,
-                pool=self._pool, recover=self._step_recover,
-            )
+            with self.tracer.span(
+                "wave_dispatch", "step", step=self.step_count,
+                segments=len(self.segments),
+            ):
+                return run_ready_queue(
+                    self.seg_deps, self._step_named, self.max_workers, order,
+                    pool=self._pool, recover=self._step_recover,
+                )
         finally:
             self._end_concurrent_step()
 
@@ -455,6 +524,12 @@ class ExecutionBackend:
         self._reset_pool()
 
     def step(self) -> StepReport:
+        if self.tracer.enabled:
+            with self.tracer.span("step", "step", step=self.step_count + 1):
+                return self._step_impl()
+        return self._step_impl()
+
+    def _step_impl(self) -> StepReport:
         t0 = time.perf_counter()
         if self.step_mode == "concurrent":
             seg_ms = self._step_segments_concurrent()
@@ -489,6 +564,11 @@ class ExecutionBackend:
             stragglers=stragglers,
             makespan_ms=sum(wave_ms),
         )
+        self._m_steps.inc()
+        self._m_step_wall.observe(report.wall_ms)
+        self._m_live.set(live)
+        self._m_paused.set(paused_n)
+        self._m_cost.set(cost)
         self.reports.append(report)
         if self.history_limit is not None and len(self.reports) > self.history_limit:
             del self.reports[: len(self.reports) - self.history_limit]
@@ -720,6 +800,37 @@ class ExecutionBackend:
                     units[ttype] = units.get(ttype, 0.0) + work
                 samples.append((units, float(ms)))
         return samples
+
+    def segment_latency_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-segment latency digest from the SAME ``StepReport.segment_ms``
+        history that feeds :meth:`latency_samples` (killed segments skipped
+        identically), so the dry-run calibrator and any monitoring reader
+        agree by construction. This — not ``ewma_ms``, which is a smoothed
+        straggler-detection signal that resets on redispatch — is the
+        canonical per-segment latency surface; use
+        ``StreamSystem.segment_latency_ms()`` from the API layer.
+
+        Returns ``{segment: {"mean_ms", "last_ms", "max_ms", "samples"}}``.
+        """
+        agg: Dict[str, Dict[str, float]] = {}
+        for report in self.reports:
+            for name, ms in report.segment_ms.items():
+                if name not in self.segments:  # killed since — same skip as above
+                    continue
+                cell = agg.get(name)
+                if cell is None:
+                    cell = agg[name] = {
+                        "mean_ms": 0.0, "last_ms": 0.0, "max_ms": 0.0,
+                        "samples": 0, "_sum": 0.0,
+                    }
+                ms = float(ms)
+                cell["_sum"] += ms
+                cell["samples"] += 1
+                cell["last_ms"] = ms
+                cell["max_ms"] = max(cell["max_ms"], ms)
+        for cell in agg.values():
+            cell["mean_ms"] = cell.pop("_sum") / cell["samples"]
+        return agg
 
     # -- straggler mitigation -----------------------------------------------------
     def _update_stragglers(self, seg_ms: Dict[str, float]) -> List[str]:

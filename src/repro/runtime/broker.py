@@ -79,6 +79,9 @@ class Broker:
         self._lock = threading.Lock()
         self.bytes_published: int = 0
         self.publishes: int = 0
+        # fetch-side twin of the publish counters; observability-only
+        # (never persisted — see Transport.fetch_count)
+        self.fetch_count: int = 0
 
     def _state(self, topic: str, create: bool = False) -> _Topic | None:
         with self._lock:
@@ -99,6 +102,7 @@ class Broker:
             self.publishes += 1
 
     def fetch(self, topic: str, copy: bool = False) -> Any:
+        self.fetch_count += 1
         st = self._state(topic)
         if st is None:
             raise TopicDropped(f"no data published on topic {topic!r}")
@@ -126,6 +130,7 @@ class Broker:
         the waiter with a ``KeyError`` (kill/unmerge stay safe mid-step);
         the timeout guards against scheduler bugs turning into hangs.
         """
+        self.fetch_count += 1
         st = self._state(topic, create=True)
         with st.cond:
             ok = st.cond.wait_for(lambda: st.dropped or st.seq >= min_seq, timeout)

@@ -185,6 +185,9 @@ class CompileCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # optional repro.obs.Tracer set by the owning backend/worker; a miss
+        # (canonical build → trace + jit) is the expensive event worth a span
+        self.tracer: Optional[Any] = None
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -216,7 +219,14 @@ class CompileCache:
             from .segment import build_segment  # lazy: imports JAX
 
             canon_spec, canon_df, tid_map, ext_map = _canonicalize(spec, dataflow)
-            fn = build_segment(canon_spec, canon_df).step_fn
+            tracer = self.tracer
+            if tracer is not None and tracer.enabled:
+                with tracer.span("compile_miss", "compile",
+                                 signature=key[:12], tasks=len(spec.task_ids),
+                                 fused=bool(spec.fused)):
+                    fn = build_segment(canon_spec, canon_df).step_fn
+            else:
+                fn = build_segment(canon_spec, canon_df).step_fn
             self._entries[key] = fn
             if len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)

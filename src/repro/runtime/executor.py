@@ -82,6 +82,7 @@ class InProcessJitBackend(ExecutionBackend):
         from .compile_cache import CompileCache
 
         self.compile_cache = CompileCache()
+        self.compile_cache.tracer = self.tracer
         # Per-topic sequence targets for the concurrent step in flight
         # (None outside one): each forwarding task publishes exactly once
         # per step, so a boundary read of this step must observe sequence
@@ -158,7 +159,12 @@ class InProcessJitBackend(ExecutionBackend):
         self._topic_target = None
 
     def _step_one(self, seg: Segment) -> Optional[float]:
-        inputs, tokens = self._gather_inputs(seg)
+        if self.tracer.enabled:
+            with self.tracer.span("fetch", "transport", segment=seg.name,
+                                  topics=len(seg.boundary_topics)):
+                inputs, tokens = self._gather_inputs(seg)
+        else:
+            inputs, tokens = self._gather_inputs(seg)
         new_states, outputs = seg.step_fn(seg.states, seg.active, inputs)
         if tokens:
             # Zero-copy stale-view check: the CPU jit may alias the host
@@ -172,9 +178,15 @@ class InProcessJitBackend(ExecutionBackend):
                     inputs[t] = self.transport.fetch(t, copy=True)
                 new_states, outputs = seg.step_fn(seg.states, seg.active, inputs)
         seg.states = new_states
-        for tid in self.forwarding[seg.name]:
-            if tid in outputs:
-                self.broker.publish(topic_for(tid), outputs[tid])
+        if self.tracer.enabled:
+            with self.tracer.span("publish", "transport", segment=seg.name):
+                for tid in self.forwarding[seg.name]:
+                    if tid in outputs:
+                        self.broker.publish(topic_for(tid), outputs[tid])
+        else:
+            for tid in self.forwarding[seg.name]:
+                if tid in outputs:
+                    self.broker.publish(topic_for(tid), outputs[tid])
         # Block on the segment's computation (the Storm worker finishes its
         # batch before acking). JAX dispatch is async — without this,
         # segment_ms measures dispatch (~µs), the straggler EWMAs are

@@ -587,8 +587,23 @@ class PlacedBackendMixin:
             seg.spec, current, self._n_slots(), self.device_load(), ewma=ewma
         )
         if new != current and 0 <= new < self._n_slots():
-            self._move_segment(seg, current, new)
+            # migrations are rare control-plane events — worth a span and a
+            # counter (getattr-guarded: the mixin contract doesn't require
+            # the host backend to carry the telemetry plane)
+            tracer = getattr(self, "tracer", None)
+            if tracer is not None and tracer.enabled:
+                with tracer.span("migrate", "control", segment=segment_name,
+                                 src=current, dst=new, ewma_ms=round(seg_ew, 3)):
+                    self._move_segment(seg, current, new)
+            else:
+                self._move_segment(seg, current, new)
             self.device_of[segment_name] = new
+            metrics = getattr(self, "metrics", None)
+            if metrics is not None:
+                metrics.counter(
+                    "repro_straggler_migrations_total",
+                    "straggling segments migrated to another slot",
+                ).inc()
             self._ewma_residual[current] = (
                 self._ewma_residual.get(current, 0.0) + seg_ew
             )

@@ -31,6 +31,7 @@ trajectories identical to an uninterrupted run.
 from __future__ import annotations
 
 import os
+from contextlib import nullcontext
 from typing import Any, Dict, List, Optional, Sequence, Set, Union
 
 from repro.core import MergeStrategy, ReuseManager
@@ -52,6 +53,8 @@ from .backend import (
     compute_batches,
     resolve_backend,
 )
+from repro.obs import render_prometheus, write_chrome_trace
+
 from .checkpoint import BackgroundCheckpointWriter, CheckpointStore, deferred_encoder
 from .scheduler import Placement, place_round_robin
 
@@ -148,6 +151,16 @@ class StreamSystem:
 
             scale_kwargs = autoscale if isinstance(autoscale, dict) else {}
             self._autoscaler = Autoscaler(self.backend, **scale_kwargs)
+        # Telemetry plane (repro.obs): the backend owns the registry and
+        # tracer; the system wires the control plane and durability layer
+        # into them and contributes a snapshot-time collector mirroring
+        # transport / compile-cache / reuse-savings state — scrape-time
+        # work only, never on the stepping hot path.
+        self.manager.tracer = self.backend.tracer
+        if self.checkpoint_store is not None:
+            self._wire_checkpoint_store(self.checkpoint_store)
+        self._obs_registry: Optional[Any] = None
+        self._wire_collectors()
 
     @property
     def executor(self) -> ExecutionBackend:
@@ -165,6 +178,15 @@ class StreamSystem:
     def _mint_segment(self) -> str:
         self._seg_counter += 1
         return f"seg{self._seg_counter}"
+
+    def _span(self, name: str, **args: Any):
+        """A "control"-category span on the backend's tracer (no-op when
+        tracing is off — span admission is checked here so disabled runs
+        don't even build the context manager)."""
+        tracer = self.backend.tracer
+        if tracer.enabled:
+            return tracer.span(name, "control", **args)
+        return nullcontext()
 
     # -- operations ---------------------------------------------------------------
     def submit(self, df: Dataflow) -> SubmissionReceipt:
@@ -232,6 +254,10 @@ class StreamSystem:
 
     def defragment(self) -> int:
         """Relaunch one fused segment per running DAG; returns segments killed."""
+        with self._span("defrag", segments=len(self.backend.segments)):
+            return self._defragment_impl()
+
+    def _defragment_impl(self) -> int:
         plan = plan_defrag(self.manager.running)
         killed = len(self.backend.segments)
         # Carry live task states across the relaunch (beyond-paper:
@@ -346,6 +372,10 @@ class StreamSystem:
 
         Returns ``{fused segment name: [member names replaced]}``.
         """
+        with self._span("fuse", segments=len(self.backend.segments)):
+            return self._fuse_impl(min_length, overhead_ms)
+
+    def _fuse_impl(self, min_length: int, overhead_ms: float) -> Dict[str, List[str]]:
         dag_of = {n: s.spec.dag_name for n, s in self.backend.segments.items()}
         plan = plan_fusion(self.backend.seg_deps, dag_of, min_length=min_length)
         self.fusion_report = self._score_fusion(plan, overhead_ms=overhead_ms)
@@ -400,6 +430,14 @@ class StreamSystem:
             if pins is not None:
                 pins[spec.name] = decision.target_slot
             self.backend.fuse_segments(spec, df, members)
+            # Reuse-savings attribution, recorded where the decision lands:
+            # every accepted chain dispatches one segment where it used to
+            # dispatch len(members).
+            self.backend.metrics.counter(
+                "repro_fusion_segments_saved_total",
+                "segment dispatches eliminated per step by accepted chain "
+                "fusion (chain length − 1 per fused chain)",
+            ).inc(len(members) - 1)
             members_set = set(members)
             for sub, segs in self._segments_of.items():
                 if any(s in members_set for s in segs):
@@ -415,6 +453,19 @@ class StreamSystem:
     # -- execution -----------------------------------------------------------------
     def step(self) -> StepReport:
         report = self.backend.step()
+        mgr = self.manager
+        saved = mgr.submitted_task_count - mgr.running_task_count
+        if saved > 0 and report.live_tasks:
+            # Reuse-savings attribution in the paper's Fig. 3 cost units:
+            # each step, reuse avoided running `saved` tasks that Default
+            # would have stepped — modelled at this step's per-live-task
+            # cost. Accumulated here (where the step happens), mirrored out
+            # by the /metrics scrape.
+            self.backend.metrics.counter(
+                "repro_reuse_core_steps_avoided_total",
+                "modelled core-equivalent step cost avoided by reuse, "
+                "accumulated per step (per-live-task cost × tasks saved)",
+            ).inc(report.cost / report.live_tasks * saved)
         if self._autoscaler is not None:
             self._autoscaler.observe(report)
         if (
@@ -489,6 +540,7 @@ class StreamSystem:
             raise ValueError(
                 "no checkpoint_dir configured — pass one to checkpoint() or the constructor"
             )
+        self._wire_checkpoint_store(store)
         self.flush_checkpoints()
         return store.save(self.checkpoint_payload())
 
@@ -581,6 +633,7 @@ class StreamSystem:
             on_wave=on_wave,
         )
         system.manager = mgr
+        system.manager.tracer = system.backend.tracer  # replaced the wired one
         system.task_batch = {t: int(b) for t, b in payload["task_batch"].items()}
         system._seg_counter = int(payload["seg_counter"])
         system._segments_of = {n: list(s) for n, s in payload["segments_of"].items()}
@@ -702,6 +755,146 @@ class StreamSystem:
         return place_round_robin(
             {name: len(seg.spec.task_ids) for name, seg in self.backend.segments.items()}
         )
+
+    def segment_latency_ms(self) -> Dict[str, Dict[str, float]]:
+        """Canonical per-segment step-latency digest — THE documented
+        latency accessor.
+
+        Reads the same measured ``StepReport.segment_ms`` history the
+        dry-run fusion calibrator consumes (``backend.latency_samples()``
+        feeding :func:`repro.ops.costs.fit_latency_model`), so capacity
+        planning, fusion scoring and dashboards all see one source of
+        truth. The straggler EWMAs remain internal scheduling state, not a
+        latency surface — see :meth:`ExecutionBackend.segment_latency_stats`.
+        """
+        return self.backend.segment_latency_stats()
+
+    # -- telemetry plane ---------------------------------------------------------
+    def _wire_checkpoint_store(self, store: CheckpointStore) -> None:
+        """Point a store at the backend's tracer/registry (encode/fsync
+        spans and the checkpoint counters live inside the store, so the
+        background writer thread is instrumented identically)."""
+        store.tracer = self.backend.tracer
+        store.metrics = self.backend.metrics
+
+    def _wire_collectors(self) -> None:
+        """Register the scrape-time collector on the backend's registry.
+
+        Idempotent per registry instance — :meth:`configure_obs` swaps the
+        registry, after which the next call re-registers on the new one.
+        """
+        registry = self.backend.metrics
+        if registry is self._obs_registry:
+            return
+        registry.add_collector(self._collect_obs)
+        self._obs_registry = registry
+
+    def _collect_obs(self) -> None:
+        """Mirror transport / compile-cache / reuse state into the registry.
+
+        Runs inside every registry snapshot (Prometheus scrape, savings
+        cross-checks), never on the stepping hot path. Counters use
+        ``set_total`` — the underlying sources are already cumulative.
+        """
+        m = self.backend.metrics
+        transport = getattr(self.backend, "transport", None)
+        if transport is not None:
+            counters = transport.counters()
+            m.counter(
+                "repro_transport_publishes_total",
+                "event batches published onto boundary-stream topics",
+            ).set_total(counters["publishes"])
+            m.counter(
+                "repro_transport_bytes_published_total",
+                "payload bytes published onto boundary-stream topics",
+            ).set_total(counters["bytes_published"])
+            m.counter(
+                "repro_transport_fetches_total",
+                "boundary-stream fetches (plain, synced and zero-copy views)",
+            ).set_total(getattr(transport, "fetch_count", 0))
+        cache = self.backend.compile_cache_stats()
+        m.counter(
+            "repro_compile_cache_hits_total",
+            "structurally identical segments served from the compiled-segment cache",
+        ).set_total(cache.get("hits", 0))
+        m.counter(
+            "repro_compile_cache_misses_total",
+            "segment structures compiled because no cached executable matched",
+        ).set_total(cache.get("misses", 0))
+        m.counter(
+            "repro_compile_cache_evictions_total",
+            "compiled-segment cache LRU evictions",
+        ).set_total(cache.get("evictions", 0))
+        m.gauge(
+            "repro_compile_cache_entries",
+            "distinct segment structures currently cached",
+        ).set(cache.get("entries", 0))
+        mgr = self.manager
+        m.gauge(
+            "repro_reuse_tasks_saved",
+            "running tasks avoided right now by collaborative reuse "
+            "(submitted task count minus running task count)",
+        ).set(max(mgr.submitted_task_count - mgr.running_task_count, 0))
+        oc = mgr.op_counts
+        m.counter(
+            "repro_reuse_tasks_submitted_total",
+            "running tasks requested across all submissions (reused + created)",
+        ).set_total(oc["tasks_submitted"])
+        m.counter(
+            "repro_reuse_tasks_reused_total",
+            "requested tasks satisfied by an already-running task",
+        ).set_total(oc["tasks_reused"])
+        m.counter(
+            "repro_merge_events_total",
+            "submissions that merged into the running set reusing >=1 task",
+        ).set_total(oc["merge_events"])
+        m.counter(
+            "repro_unmerge_events_total",
+            "removals (each plans and applies one unmerge)",
+        ).set_total(oc["unmerge_events"])
+
+    def configure_obs(
+        self,
+        metrics: Optional[bool] = None,
+        trace: Optional[bool] = None,
+        sample_stride: Optional[int] = None,
+        trace_capacity: Optional[int] = None,
+    ) -> "StreamSystem":
+        """Reconfigure the telemetry plane and re-wire every consumer
+        (control plane, checkpoint store, collectors) onto the resulting
+        registry/tracer — the system-level twin of
+        :meth:`ExecutionBackend.configure_obs`."""
+        self.backend.configure_obs(
+            metrics=metrics,
+            trace=trace,
+            sample_stride=sample_stride,
+            trace_capacity=trace_capacity,
+        )
+        self.manager.tracer = self.backend.tracer
+        if self.checkpoint_store is not None:
+            self._wire_checkpoint_store(self.checkpoint_store)
+        self._wire_collectors()
+        return self
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Merged registry snapshot — coordinator plus (multiproc) workers."""
+        return self.backend.metrics_snapshot()
+
+    def prometheus_text(self) -> str:
+        """The merged snapshot rendered as Prometheus text exposition 0.0.4."""
+        return render_prometheus(self.metrics_snapshot())
+
+    def drain_spans(self) -> List[Dict[str, Any]]:
+        """Drain buffered trace spans (destructive), coordinator + workers,
+        sorted by start timestamp."""
+        return self.backend.drain_spans()
+
+    def export_chrome_trace(self, path: str) -> int:
+        """Drain spans into a Chrome/Perfetto trace file; returns the
+        number of spans written."""
+        spans = self.drain_spans()
+        write_chrome_trace(path, spans)
+        return len(spans)
 
     @property
     def running_task_count(self) -> int:

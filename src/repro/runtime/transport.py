@@ -88,6 +88,11 @@ class Transport:
     """
 
     name: str = ""
+    # Process-local count of fetch/fetch_view/fetch_synced calls served.
+    # Deliberately NOT part of counters() — that dict has an exact-equality
+    # checkpoint contract — and not persisted; the obs layer mirrors it
+    # into ``repro_transport_fetches`` at scrape time.
+    fetch_count: int = 0
 
     # -- data path ------------------------------------------------------------
     def publish(self, topic: str, batch: Any) -> None:
@@ -478,6 +483,7 @@ class ShmTransport(Transport):
         ``copy=True``. A view stays bit-identical until the producer laps
         the ring (``nslots - 2`` further publishes with an in-flight
         writer; see :meth:`view_valid`)."""
+        self.fetch_count += 1
         st = self._attach(topic)
         if st is None:
             raise TopicDropped(f"no data published on topic {topic!r}")
@@ -494,6 +500,7 @@ class ShmTransport(Transport):
         ``copy=True`` if the ring lapped mid-use. ``min_seq`` adds the
         :meth:`fetch_synced` producer wait before the read.
         """
+        self.fetch_count += 1
         if min_seq is not None:
             st = self._await_seq(topic, min_seq, timeout)
         else:
@@ -537,6 +544,7 @@ class ShmTransport(Transport):
     def fetch_synced(
         self, topic: str, min_seq: int, timeout: float = 60.0, copy: bool = False
     ) -> np.ndarray:
+        self.fetch_count += 1
         st = self._await_seq(topic, min_seq, timeout)
         return self._read_latest(st, topic, copy=copy)[0]
 
@@ -943,12 +951,14 @@ class TcpTransport(Transport):
         buffer by default (the buffer is private to this call, so unlike
         shm views it can never go stale — ``copy=True`` only buys
         writability)."""
+        self.fetch_count += 1
         reply, payload = self._call({"op": "fetch", "topic": topic})
         return _decode_batch(reply, payload, copy=copy)
 
     def fetch_synced(
         self, topic: str, min_seq: int, timeout: float = 60.0, copy: bool = False
     ) -> np.ndarray:
+        self.fetch_count += 1
         reply, payload = self._call(
             {"op": "fetch_synced", "topic": topic, "min_seq": min_seq,
              "timeout": timeout}

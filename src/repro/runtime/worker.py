@@ -57,6 +57,7 @@ from repro.cluster.events import (
     WORKER_RESPAWNED,
 )
 from repro.core.graph import Dataflow, Task
+from repro.obs import merge_snapshots, process_metrics, process_tracer
 from repro.ops.costs import cost_weight_for_task
 
 from .backend import ExecutionBackend, PyTree, SegmentSpec
@@ -378,6 +379,35 @@ def _worker_main(conn, worker_id: int, transport_spec: Dict[str, Any],
     log.write("start", pid=os.getpid(), plane=plane,
               transport=transport_spec.get("kind"))
     transport = connect_transport(transport_spec)
+    # telemetry plane: the per-process registry/tracer the coordinator
+    # pulls over the "metrics" op (tracer stays disabled until an "obs"
+    # op arms it — spans are worker-side monotonic, so they line up with
+    # coordinator spans in one merged Chrome trace)
+    tracer = process_tracer()
+    wm = process_metrics()
+    w_seg_ms = wm.histogram(
+        "repro_worker_segment_step_ms",
+        "worker-measured per-segment step time (ms)",
+    )
+    w_steps = wm.counter(
+        "repro_worker_segment_steps_total",
+        "segment steps executed inside worker processes",
+    )
+
+    def _timed_step(name: str, runner: Any, forward: List[str],
+                    targets: Optional[Dict[str, int]],
+                    local: Optional[Dict[str, Any]] = None) -> float:
+        t0 = time.perf_counter()
+        if tracer.enabled:
+            with tracer.span(name, "segment", worker=worker_id):
+                runner.step(transport, forward, targets, local=local)
+        else:
+            runner.step(transport, forward, targets, local=local)
+        ms = (time.perf_counter() - t0) * 1e3
+        w_seg_ms.observe(ms)
+        w_steps.inc()
+        return ms
+
     segments: Dict[str, Any] = {}
     spill_writer: Optional[_SpillWriter] = None  # one combined file per worker
     spill_entries: Dict[str, Dict[str, Any]] = {}  # segment -> {step, states}
@@ -434,9 +464,9 @@ def _worker_main(conn, worker_id: int, transport_spec: Dict[str, Any],
             elif op == "step":
                 name = msg["segment"]
                 runner = segments[name]
-                t0 = time.perf_counter()
-                runner.step(transport, msg["forward"], msg.get("targets"))
-                reply["ms"] = (time.perf_counter() - t0) * 1e3
+                reply["ms"] = _timed_step(
+                    name, runner, msg["forward"], msg.get("targets")
+                )
                 if name in spill_step:
                     spill_step[name] += 1
                     t1 = time.perf_counter()
@@ -474,10 +504,10 @@ def _worker_main(conn, worker_id: int, transport_spec: Dict[str, Any],
                 for entry in msg["segments"]:
                     name = entry["segment"]
                     runner = segments[name]
-                    t0 = time.perf_counter()
-                    runner.step(transport, entry["forward"],
-                                entry.get("targets"), local=local)
-                    ms[name] = (time.perf_counter() - t0) * 1e3
+                    ms[name] = _timed_step(
+                        name, runner, entry["forward"],
+                        entry.get("targets"), local=local,
+                    )
                     if name in spill_step:
                         spill_step[name] += 1
                         t1 = time.perf_counter()
@@ -523,6 +553,19 @@ def _worker_main(conn, worker_id: int, transport_spec: Dict[str, Any],
                     reply["stats"] = {
                         "hits": 0, "misses": 0, "evictions": 0, "entries": 0,
                     }
+            elif op == "metrics":
+                # telemetry pull (same aggregation pattern as cache_stats):
+                # the registry snapshot is cumulative and idempotent, the
+                # span buffer drains destructively — the coordinator
+                # buffers drained spans until its own drain_spans()
+                reply["metrics"] = wm.snapshot()
+                reply["spans"] = tracer.drain()
+            elif op == "obs":
+                tracer.configure(
+                    enabled=msg.get("trace"),
+                    sample_stride=msg.get("sample_stride"),
+                    capacity=msg.get("capacity"),
+                )
             elif op == "shutdown":
                 log.write("shutdown")
             else:
@@ -718,6 +761,24 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         self._shadow: Dict[str, Dict[str, Any]] = {}  # segment -> encoded states
         self._recover_lock = threading.Lock()
         self.respawns: List[Dict[str, Any]] = []
+        # -- telemetry plane (repro.obs) --------------------------------------
+        self._worker_spans: List[Dict[str, Any]] = []  # harvested, undrained
+        self._obs_msg: Optional[Dict[str, Any]] = None  # replayed to (re)spawns
+        self._last_ok: Dict[int, float] = {}  # worker -> monotonic of last good RPC
+        # worker_health(): a worker whose last good RPC is older than this
+        # is marked stale (supervision surfaces it through serving status)
+        self.stale_after_ms = 5000.0
+
+    def _mint_instruments(self) -> None:
+        super()._mint_instruments()
+        self._m_rpcs = self.metrics.counter(
+            "repro_worker_rpcs_total",
+            "coordinator-to-worker command RPCs completed, by op",
+        )
+        self._m_respawns = self.metrics.counter(
+            "repro_worker_respawns_total",
+            "worker processes respawned by crash recovery",
+        )
 
     # -- worker pool ------------------------------------------------------------
     def _spawn_worker(self, worker: int) -> Any:
@@ -734,30 +795,54 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
             self._procs.append(self._spawn_worker(i))
             self._conn_locks.append(threading.RLock())
             self._gen.append(0)
+        for i in range(self.n_workers):
+            self._push_obs(i)
+
+    def _push_obs(self, worker: int) -> None:
+        """Replay the armed trace configuration to a (re)spawned worker."""
+        if self._obs_msg is None:
+            return
+        try:
+            self._call(worker, self._obs_msg)
+        except WorkerError:
+            pass  # tracing is best-effort; liveness checks catch real deaths
+
+    def _roundtrip(self, conn: Any, msg: Dict[str, Any], worker: int,
+                   gen: int) -> Dict[str, Any]:
+        conn.send(msg)
+        if self.rpc_timeout is not None and not conn.poll(self.rpc_timeout):
+            # hang bound exceeded: the pipe is now out of sync, so
+            # this incarnation is unusable — recovery is mandatory
+            raise WorkerError(
+                f"worker {worker} hung on {msg.get('op')!r} "
+                f"(> {self.rpc_timeout}s)", worker=worker, gen=gen,
+            )
+        return conn.recv()
 
     def _call(self, worker: int, msg: Dict[str, Any]) -> Dict[str, Any]:
         """One blocking RPC to a worker; serialized per worker, overlapping
         across workers (recv releases the GIL)."""
         self._ensure_workers()
         gen = self._gen[worker]
+        op = msg.get("op")
         with self._conn_locks[worker]:
             conn = self._procs[worker].conn
             try:
-                conn.send(msg)
-                if self.rpc_timeout is not None and not conn.poll(self.rpc_timeout):
-                    # hang bound exceeded: the pipe is now out of sync, so
-                    # this incarnation is unusable — recovery is mandatory
-                    raise WorkerError(
-                        f"worker {worker} hung on {msg.get('op')!r} "
-                        f"(> {self.rpc_timeout}s)", worker=worker, gen=gen,
-                    )
-                reply = conn.recv()
+                if self.tracer.enabled:
+                    with self.tracer.span(f"rpc:{op}", "rpc", worker=worker):
+                        reply = self._roundtrip(conn, msg, worker, gen)
+                else:
+                    reply = self._roundtrip(conn, msg, worker, gen)
             except (EOFError, BrokenPipeError, OSError) as e:
                 raise WorkerError(
                     f"worker {worker} died during {msg.get('op')!r} "
                     f"(log: {os.path.join(self.log_dir, f'worker-{worker}.log')})",
                     worker=worker, gen=gen,
                 ) from e
+        # a reply arrived — even an application error means the worker is
+        # alive, so the health staleness clock resets here
+        self._m_rpcs.inc(op=str(op))
+        self._last_ok[worker] = time.monotonic()
         if "error" in reply:
             raise WorkerError(
                 f"worker {worker} failed {msg.get('op')!r}: {reply['error']}\n"
@@ -900,8 +985,10 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
                 old.close()
                 self._procs[worker] = self._spawn_worker(worker)
                 self._gen[worker] += 1
+                self._m_respawns.inc()
                 self._emit_worker_event(WORKER_RESPAWNED, worker=worker,
                                         detail=f"gen={self._gen[worker]}")
+                self._push_obs(worker)
                 redeployed: List[str] = []
                 spilled = (
                     self._read_spill(worker)
@@ -961,6 +1048,7 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
                 self._procs.append(self._spawn_worker(i))
                 self._conn_locks.append(threading.RLock())
                 self._gen.append(0)
+                self._push_obs(i)
             grown = n - self.n_workers
             self.n_workers = n
             self._emit_worker_event(
@@ -1009,12 +1097,32 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
         self.max_workers = max(self.n_workers, 2)
 
     def worker_health(self) -> Dict[str, Any]:
-        """Cluster-plane health snapshot (serving surfaces this verbatim)."""
+        """Cluster-plane health snapshot (serving surfaces this verbatim).
+
+        ``last_ok_monotonic`` records each worker's most recent good RPC
+        reply on the coordinator's monotonic clock (``now_monotonic`` is
+        the same clock at snapshot time, so readers compute ages without
+        wall-clock skew); ``stale`` marks workers whose last reply is
+        older than ``stale_after_ms`` — ``None`` for a worker never yet
+        called (no RPC issued, nothing to age)."""
         per_worker: Dict[int, int] = {i: 0 for i in range(self.n_workers)}
         for name, w in self.device_of.items():
             if name in self.segments and w in per_worker:
                 per_worker[w] += 1
+        now = time.monotonic()
+        stale: Dict[str, Optional[bool]] = {}
+        for i in range(self.n_workers):
+            t = self._last_ok.get(i)
+            stale[str(i)] = (
+                None if t is None else (now - t) * 1e3 > self.stale_after_ms
+            )
         return {
+            "now_monotonic": now,
+            "last_ok_monotonic": {
+                str(i): self._last_ok.get(i) for i in range(self.n_workers)
+            },
+            "stale_after_ms": self.stale_after_ms,
+            "stale": stale,
             "backend": self.name,
             "workers": self.n_workers,
             "alive": [h.is_alive() for h in self._procs],
@@ -1294,6 +1402,64 @@ class MultiprocBackend(PlacedBackendMixin, ExecutionBackend):
             for k in total:
                 total[k] += int(stats.get(k, 0))
         return total
+
+    # -- telemetry plane ----------------------------------------------------------
+    def configure_obs(
+        self,
+        metrics: Optional[bool] = None,
+        trace: Optional[bool] = None,
+        sample_stride: Optional[int] = None,
+        trace_capacity: Optional[int] = None,
+    ) -> "MultiprocBackend":
+        super().configure_obs(metrics=metrics, trace=trace,
+                              sample_stride=sample_stride,
+                              trace_capacity=trace_capacity)
+        if trace is not None or sample_stride is not None or trace_capacity is not None:
+            # remember the config so every future (re)spawn replays it,
+            # then push it to the workers already running
+            self._obs_msg = {"op": "obs", "trace": trace,
+                             "sample_stride": sample_stride,
+                             "capacity": trace_capacity}
+            if self._spawned:
+                for w in range(self.n_workers):
+                    if self.worker_alive(w):
+                        self._push_obs(w)
+        return self
+
+    def _harvest_worker_obs(self) -> List[Dict[str, Any]]:
+        """Pull every live worker's registry snapshot over the ``metrics``
+        RPC (same aggregation pattern as :meth:`compile_cache_stats`).
+        Worker spans ride the same reply; since the worker-side drain is
+        destructive they are buffered here until :meth:`drain_spans`."""
+        snaps: List[Dict[str, Any]] = []
+        if not self._spawned:
+            return snaps
+        for w in range(self.n_workers):
+            if not self.worker_alive(w):
+                continue
+            try:
+                reply = self._call(w, {"op": "metrics"})
+            except WorkerError:
+                continue  # a dying worker must never fail a scrape
+            if reply.get("metrics"):
+                snaps.append(reply["metrics"])
+            self._worker_spans.extend(reply.get("spans") or ())
+        return snaps
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Coordinator registry merged with the workers' process-local
+        registries (counters/histograms add; worker families are
+        ``repro_worker_segment_*`` so nothing double-counts)."""
+        return merge_snapshots(
+            [self.metrics.snapshot(), *self._harvest_worker_obs()]
+        )
+
+    def drain_spans(self) -> List[Dict[str, Any]]:
+        self._harvest_worker_obs()
+        out, self._worker_spans = self._worker_spans, []
+        out.extend(self.tracer.drain())
+        out.sort(key=lambda s: s.get("ts", 0))
+        return out
 
     def _step_segments_concurrent(self) -> Dict[str, float]:
         """Wave- or chain-batched concurrent dispatch.

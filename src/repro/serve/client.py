@@ -137,6 +137,11 @@ class ServeClient:
     def step(self, steps: int = 1) -> Dict[str, Any]:
         return self._call(protocol.STEP, steps=steps)
 
+    def metrics(self) -> Dict[str, Any]:
+        """Telemetry scrape: ``{"text": <Prometheus 0.0.4>, "snapshot":
+        <raw registry JSON>}``. Read-only, so it reconnect-retries."""
+        return self._call(protocol.METRICS, retry=True)
+
     def checkpoint(self) -> str:
         return self._call(protocol.CHECKPOINT)["path"]
 

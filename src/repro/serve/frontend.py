@@ -200,6 +200,7 @@ class ServeFrontend:
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: Optional[int] = None,
         defrag_every: Optional[int] = None,
+        metrics_port: Optional[int] = None,
         session: Optional[Any] = None,
         **session_kwargs: Any,
     ):
@@ -238,6 +239,16 @@ class ServeFrontend:
         self.steps = 0
         self._removes_since_defrag = 0
         self.draining = False
+
+        # telemetry plane: serve-level gauges ride the session backend's
+        # registry via a scrape-time collector; metrics_port (not None)
+        # additionally serves plain-HTTP GET /metrics for Prometheus
+        # scrapers that don't speak the framed JSON protocol (0 = ephemeral)
+        self.metrics_port = metrics_port
+        self._obs_registry: Optional[Any] = None
+        self._metrics_sock: Optional[socket.socket] = None
+        self._metrics_thread: Optional[threading.Thread] = None
+        self._wire_serve_obs()
 
         # socket plumbing
         self._sock: Optional[socket.socket] = None
@@ -538,6 +549,149 @@ class ServeFrontend:
             out["ledgers"] = {t: l.to_json() for t, l in ledgers.items()}
             return out
 
+    # -- telemetry plane ---------------------------------------------------------
+    def _wire_serve_obs(self) -> None:
+        """Register the serve-level collector on the session backend's
+        metrics registry (idempotent per registry instance — re-run after
+        ``configure_obs`` swaps the registry)."""
+        system = getattr(self.session, "_system", None)
+        if system is None:
+            return
+        registry = system.backend.metrics
+        if registry is self._obs_registry:
+            return
+        registry.add_collector(self._collect_serve_obs)
+        self._obs_registry = registry
+
+    def _collect_serve_obs(self) -> None:
+        """Mirror admission/ledger state into the registry at scrape time.
+
+        Lock order matches the admission path (frontend lock, then
+        registry lock), so a mid-churn scrape can never deadlock and
+        always sees a consistent ledger snapshot.
+        """
+        m = self._obs_registry
+        if m is None:
+            return
+        with self._lock:
+            m.gauge("repro_serve_slots", "admission slot pool size").set(self.slots)
+            m.gauge(
+                "repro_serve_slots_used", "slots currently charged to tenants"
+            ).set(self.slots_used)
+            m.gauge(
+                "repro_serve_pending", "submissions queued for fair-share admission"
+            ).set(len(self._pending))
+            m.gauge(
+                "repro_serve_naive_slots",
+                "slots a reuse-disabled pool would be holding for the same work",
+            ).set(self.naive_slots)
+            m.gauge(
+                "repro_serve_effective_capacity",
+                "naive slots over slots actually used — pools' worth of work "
+                "the one pool is carrying thanks to reuse",
+            ).set(self.naive_slots / self.slots_used if self.slots_used else 1.0)
+            for tenant, ledger in self.ledgers.items():
+                m.gauge(
+                    "repro_serve_slots_held",
+                    "slots currently held, by tenant",
+                ).set(ledger.slots_held, tenant=tenant)
+                m.gauge(
+                    "repro_serve_slots_saved",
+                    "cumulative slots not charged because the submission "
+                    "reused running tasks, by tenant",
+                ).set(ledger.slots_saved, tenant=tenant)
+                m.gauge(
+                    "repro_serve_cost_total",
+                    "cumulative core-equivalent step cost billed, by tenant",
+                ).set(ledger.cost_total, tenant=tenant)
+
+    def metrics(self) -> Dict[str, Any]:
+        """The merged telemetry snapshot, both machine forms: ``text`` is
+        Prometheus exposition 0.0.4 (what the HTTP listener serves),
+        ``snapshot`` the raw registry JSON."""
+        from repro.obs import render_prometheus
+
+        self._wire_serve_obs()
+        if getattr(self.session, "_system", None) is None:
+            return {"ok": True, "text": "", "snapshot": {}}
+        snapshot = self.session.metrics_snapshot()
+        return {"ok": True, "text": render_prometheus(snapshot), "snapshot": snapshot}
+
+    def start_metrics_http(self, port: Optional[int] = None) -> Tuple[str, int]:
+        """Serve ``GET /metrics`` as plain-HTTP Prometheus text on a daemon
+        thread; returns ``(host, port)``. Started automatically by
+        :meth:`start` when the frontend was built with ``metrics_port=``;
+        callable directly for in-process use (``port=0`` → ephemeral)."""
+        if self._metrics_sock is not None:
+            return self._metrics_sock.getsockname()[:2]
+        bind_port = self.metrics_port if port is None else port
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        sock.bind((self.host, int(bind_port or 0)))
+        sock.listen(16)
+        self._metrics_sock = sock
+        self._metrics_thread = threading.Thread(
+            target=self._metrics_http_loop, name="serve-metrics-http", daemon=True
+        )
+        self._metrics_thread.start()
+        return sock.getsockname()[:2]
+
+    def stop_metrics_http(self) -> None:
+        sock = self._metrics_sock
+        if sock is None:
+            return
+        self._metrics_sock = None
+        try:
+            sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            sock.close()
+        except OSError:
+            pass
+        if self._metrics_thread is not None:
+            self._metrics_thread.join(timeout=5.0)
+            self._metrics_thread = None
+
+    def _metrics_http_loop(self) -> None:
+        sock = self._metrics_sock
+        while self._metrics_sock is sock:
+            try:
+                conn, _addr = sock.accept()
+            except OSError:
+                break
+            try:
+                conn.settimeout(2.0)
+                data = b""
+                while b"\r\n\r\n" not in data and len(data) < 65536:
+                    chunk = conn.recv(4096)
+                    if not chunk:
+                        break
+                    data += chunk
+                parts = data.split(b"\r\n", 1)[0].decode("latin-1", "replace").split()
+                path = (parts[1] if len(parts) > 1 else "/").split("?")[0]
+                if path in ("/metrics", "/"):
+                    body = self.metrics()["text"].encode("utf-8")
+                    head = (
+                        "HTTP/1.1 200 OK\r\n"
+                        "Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n"
+                        f"Content-Length: {len(body)}\r\nConnection: close\r\n\r\n"
+                    ).encode("latin-1")
+                else:
+                    body = b"not found\n"
+                    head = (
+                        "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain\r\n"
+                        f"Content-Length: {len(body)}\r\nConnection: close\r\n\r\n"
+                    ).encode("latin-1")
+                conn.sendall(head + body)
+            except OSError:
+                pass
+            finally:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+
     # -- durability ----------------------------------------------------------------
     def _ledger_payload(self) -> Dict[str, Any]:
         return {
@@ -682,6 +836,9 @@ class ServeFrontend:
         self._accept_thread.start()
         host, port = self.address
         logger.info("serving on %s:%d", host, port)
+        if self.metrics_port is not None and self._metrics_sock is None:
+            mhost, mport = self.start_metrics_http()
+            logger.info("metrics on http://%s:%d/metrics", mhost, mport)
         return host, port
 
     def serve_forever(self) -> None:
@@ -693,6 +850,7 @@ class ServeFrontend:
     def stop(self) -> None:
         """Close the listener and all live connections; joins the accept
         thread. Idempotent."""
+        self.stop_metrics_http()
         if self._sock is None:
             return
         self._closed = True
@@ -789,6 +947,8 @@ class ServeFrontend:
             return self.stats(request.get("tenant"))
         if op == protocol.STEP:
             return self.step(int(request.get("steps", 1)))
+        if op == protocol.METRICS:
+            return self.metrics()
         if op == protocol.CHECKPOINT:
             return {"ok": True, "path": self.checkpoint()}
         if op == protocol.DRAIN:

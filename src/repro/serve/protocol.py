@@ -16,6 +16,7 @@ Request verbs (``{"op": <verb>, ...}``):
   status     —
   stats      optional ``tenant``
   step       optional ``steps`` (default 1)
+  metrics    —
   checkpoint —
   drain      —
   shutdown   optional ``checkpoint`` (default true)
@@ -54,13 +55,14 @@ REMOVE = "remove"
 STATUS = "status"
 STATS = "stats"
 STEP = "step"
+METRICS = "metrics"
 CHECKPOINT = "checkpoint"
 DRAIN = "drain"
 SHUTDOWN = "shutdown"
 PING = "ping"
 
 VERBS = frozenset(
-    {SUBMIT, REMOVE, STATUS, STATS, STEP, CHECKPOINT, DRAIN, SHUTDOWN, PING}
+    {SUBMIT, REMOVE, STATUS, STATS, STEP, METRICS, CHECKPOINT, DRAIN, SHUTDOWN, PING}
 )
 
 # -- admission statuses ---------------------------------------------------------
